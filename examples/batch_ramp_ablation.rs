@@ -1,0 +1,42 @@
+//! Batch-ramp ablation (Figures 2/3/5 in one driver): sweeps the (α, β)
+//! equivalence family on the exact NSGD recursion, probes the past-CBS
+//! failure regime, and compares the four schedulers of Figure 5 on a tiny
+//! LM through the full stack.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example batch_ramp_ablation [-- --lm]
+//! ```
+//! (`--lm` additionally runs the Figure-5 LM comparison, ~2 minutes.)
+
+use anyhow::Result;
+use seesaw::experiments::{linreg_exps, lm_exps, Scale};
+use seesaw::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["lm"])?;
+
+    println!("(α, β) equivalence-line ablation on the exact NSGD recursion");
+    println!("============================================================");
+    // Figure 2 / Table 2: who stays on the line, who diverges (Lemma 4)
+    let verdicts = linreg_exps::figure2();
+    let diverged: Vec<String> = verdicts
+        .iter()
+        .filter(|(_, _, d)| *d)
+        .map(|(a, b, _)| format!("(α={a:.2}, β={b:.2})"))
+        .collect();
+    println!("\ndiverged members: {}", if diverged.is_empty() { "none".into() } else { diverged.join(", ") });
+
+    // Figure 3: the past-CBS regime where no ramp matches lr decay
+    linreg_exps::figure3();
+
+    // Assumption 2: why the regime changes
+    linreg_exps::assumption2();
+
+    if args.switch("lm") {
+        println!("\nFigure 5 on the live LM stack (4 schedulers):");
+        lm_exps::figure5(Scale::Quick)?;
+    } else {
+        println!("\n(pass --lm to also run the Figure-5 scheduler comparison on the LM stack)");
+    }
+    Ok(())
+}

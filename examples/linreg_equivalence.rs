@@ -1,0 +1,53 @@
+//! Theory walkthrough on the exact noisy-linear-regression substrate:
+//! verifies Theorem 1 (SGD equivalence), Corollary 1 (NSGD equivalence),
+//! Lemma 4 (divergence constraint α ≥ √β) and Lemma 1 (2/π serial-step
+//! bound) — numerically, with no sampling noise, in a few seconds.
+//!
+//! ```sh
+//! cargo run --release --example linreg_equivalence
+//! ```
+
+use seesaw::experiments::linreg_exps;
+use seesaw::linreg::recursion::{PhasedSchedule, Problem};
+use seesaw::linreg::sgd;
+use seesaw::linreg::spectrum::Spectrum;
+
+fn main() {
+    println!("Seesaw theory substrate — exact bias/variance recursion (Appendix A)\n");
+
+    // 0. the recursion is exact: cross-check against Monte-Carlo SGD
+    let p = Problem::new(Spectrum::PowerLaw { dim: 32, exponent: 1.0 }, 1.0, 1.0);
+    let eta = p.eta_max();
+    let mc = sgd::expected_risk(&p, eta, 8, 500, 128, 0);
+    let mut exact = p.iter();
+    exact.run(eta, 8, 500);
+    println!(
+        "recursion vs Monte-Carlo (dim 32, 500 steps): exact {:.5e}  sampled {:.5e}  (rel {:.2}%)\n",
+        exact.risk(),
+        mc,
+        100.0 * (mc - exact.risk()).abs() / exact.risk()
+    );
+
+    // 1. Theorem 1 across spectra
+    linreg_exps::theorem1();
+
+    // 2. Corollary 1 on the α√β line
+    linreg_exps::corollary1();
+
+    // 3. the 1.01 learning-rate slack of the lower bound
+    let sched = PhasedSchedule { eta0: eta, b0: 8, alpha: 2.0, beta: 1.0, phase_samples: vec![100_000; 4] };
+    let plain = sched.run(&p);
+    let scaled = sched.run_scaled(&p, 1.01);
+    println!(
+        "\nTheorem 1 lower-bound slack: R(η) {:.4e} vs R(1.01·η) {:.4e} (ratio {:.4})",
+        plain.last().unwrap(),
+        scaled.last().unwrap(),
+        plain.last().unwrap() / scaled.last().unwrap()
+    );
+
+    // 4. Lemma 4 + Lemma 1
+    linreg_exps::lemma4();
+    linreg_exps::lemma1();
+
+    println!("\nAll equivalence claims verified on the exact recursion. See EXPERIMENTS.md.");
+}

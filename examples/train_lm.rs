@@ -1,0 +1,110 @@
+//! End-to-end training driver (DESIGN.md §5, the recorded EXPERIMENTS.md
+//! run): trains a transformer LM at Chinchilla scale on the synthetic
+//! corpus with the cosine baseline AND with Seesaw, through the full
+//! three-layer stack — rust coordinator → PJRT → AOT JAX/Pallas
+//! artifacts — then reports the equal-FLOPs loss match and the
+//! serial-step/serial-time reduction, and writes both loss curves to
+//! `results/e2e_<model>_{cosine,seesaw}.csv`.
+//!
+//! ```sh
+//! make artifacts
+//! cargo run --release --example train_lm -- [--model m] [--alpha 1.1]
+//!     [--lr 3e-3] [--batch-tokens 4096] [--total-tokens 0(=Chinchilla)]
+//!     [--world-size 1] [--variant ref|pallas] [--zcoef 0]
+//! ```
+
+use anyhow::Result;
+use seesaw::config::{ScheduleSpec, TrainConfig};
+use seesaw::coordinator::Trainer;
+use seesaw::metrics::print_table;
+use seesaw::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[])?;
+    let model = args.str_or("model", "m");
+    let alpha = args.f64_or("alpha", 1.1)?;
+    let lr = args.f64_or("lr", 3e-3)?;
+    let batch = args.u64_or("batch-tokens", 4096)?;
+    let total = args.u64_or("total-tokens", 0)?;
+    let world = args.usize_or("world-size", 1)?;
+    let variant = args.str_or("variant", "ref");
+    let zcoef = args.f64_or("zcoef", 0.0)?;
+
+    let mk = |schedule: ScheduleSpec| {
+        let mut cfg = TrainConfig::default();
+        cfg.model = model.clone();
+        cfg.variant = variant.clone();
+        cfg.schedule = schedule;
+        cfg.base_lr = lr;
+        cfg.base_batch_tokens = batch;
+        cfg.total_tokens = total;
+        cfg.world_size = world;
+        cfg.zcoef = zcoef;
+        cfg.eval_every = 25;
+        cfg.corpus_tokens = 4_000_000;
+        cfg
+    };
+
+    let mut results = Vec::new();
+    for (label, spec) in [
+        ("cosine".to_string(), ScheduleSpec::Cosine),
+        (format!("seesaw-a{alpha}"), ScheduleSpec::Seesaw { alpha }),
+    ] {
+        let mut cfg = mk(spec);
+        cfg.out_csv = Some(format!("results/e2e_{model}_{label}.csv").into());
+        let mut t = Trainer::new(cfg)?;
+        println!(
+            "→ {label}: model={} ({} params, {} non-emb), budget={} tokens, batch={} tokens, world={}",
+            t.rt.manifest.model.name,
+            t.rt.manifest.param_count,
+            t.rt.manifest.non_embedding_params,
+            t.total_tokens,
+            batch,
+            world
+        );
+        let t0 = std::time::Instant::now();
+        let mut log = t.run()?;
+        log.name = label.clone();
+        println!(
+            "   {} steps in {:.1}s wall ({:.1} ms/step), final val CE {:.4}",
+            log.total_steps(),
+            t0.elapsed().as_secs_f64(),
+            1e3 * t0.elapsed().as_secs_f64() / log.total_steps() as f64,
+            log.final_val_ce().unwrap_or(f64::NAN)
+        );
+        results.push((log, t0.elapsed().as_secs_f64()));
+    }
+
+    let (cos, cos_wall) = &results[0];
+    let (ss, ss_wall) = &results[1];
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|(log, wall)| {
+            vec![
+                log.name.clone(),
+                log.total_steps().to_string(),
+                format!("{:.0}", log.total_serial_time()),
+                format!("{wall:.1}s"),
+                format!("{:.4}", log.final_train_ce().unwrap_or(f64::NAN)),
+                format!("{:.4}", log.final_val_ce().unwrap_or(f64::NAN)),
+                format!("{:.3e}", log.records.last().map(|r| r.flops).unwrap_or(0.0)),
+            ]
+        })
+        .collect();
+    print_table(
+        "end-to-end: Seesaw vs cosine (equal FLOPs / tokens)",
+        &["schedule", "serial steps", "serial time (model)", "wall", "train CE", "val CE", "FLOPs"],
+        &rows,
+    );
+    println!(
+        "\nserial-step reduction: {:.1}%   modeled serial-time reduction: {:.1}%   wall-clock reduction: {:.1}%",
+        100.0 * (1.0 - ss.total_steps() as f64 / cos.total_steps() as f64),
+        100.0 * (1.0 - ss.total_serial_time() / cos.total_serial_time()),
+        100.0 * (1.0 - ss_wall / cos_wall),
+    );
+    println!(
+        "val CE gap (seesaw − cosine): {:+.4}   (paper: schedules match at CBS; bound 36.3% fewer steps)",
+        ss.final_val_ce().unwrap_or(f64::NAN) - cos.final_val_ce().unwrap_or(f64::NAN)
+    );
+    Ok(())
+}

@@ -1,0 +1,150 @@
+"""AOT pipeline: lower the L2 computations to HLO *text* artifacts.
+
+Python runs ONCE (``make artifacts``); the rust coordinator loads these
+files via ``HloModuleProto::from_text_file`` and never touches Python on
+the training path.
+
+HLO text — NOT ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per (model, variant) we emit into ``artifacts/<model>[_pallas]/``:
+
+    init.hlo.txt        (seed i32[])                            → (params…)
+    grad_step.hlo.txt   (params…, tokens, targets, zcoef f32[]) → (ce, zsq, gnorm_sq, grads…)
+    adamw_step.hlo.txt  (params…, grads…, m…, v…, lr, wd, c1, c2) → (params…, m…, v…)
+    sgd_step.hlo.txt    (params…, grads…, lr)                   → (params…)
+    eval_step.hlo.txt   (params…, tokens, targets)              → (ce, zsq)
+    manifest.json       param/arg layout the rust runtime keys on
+
+All pytree arguments flatten in ``jax.tree_util`` order (dict keys sorted);
+``manifest.json`` records the exact leaf order so rust never guesses.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import optimizer as O
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _path_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def param_specs(cfg: M.ModelConfig):
+    shaped = jax.eval_shape(lambda s: M.init_params(cfg, s), jax.ShapeDtypeStruct((), jnp.int32))
+    leaves, treedef = jax.tree_util.tree_flatten(shaped)
+    named = jax.tree_util.tree_flatten_with_path(shaped)[0]
+    specs = []
+    for (path, leaf), flat_leaf in zip(named, leaves):
+        assert leaf.shape == flat_leaf.shape
+        specs.append(
+            {"name": _path_name(path), "shape": list(leaf.shape), "dtype": str(leaf.dtype)}
+        )
+    return specs, treedef
+
+
+def lower_model(cfg: M.ModelConfig, variant: str, microbatch: int, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    b, l = microbatch, cfg.seq_len
+    p_spec = jax.eval_shape(lambda s: M.init_params(cfg, s), jax.ShapeDtypeStruct((), jnp.int32))
+    tok = jax.ShapeDtypeStruct((b, l), jnp.int32)
+    f32 = jax.ShapeDtypeStruct((), jnp.float32)
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def emit(name, fn, *args):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        return fname
+
+    artifacts = {}
+    artifacts["init"] = emit("init", lambda s: M.init_params(cfg, s), i32)
+    artifacts["grad_step"] = emit(
+        "grad_step",
+        lambda p, t, y, z: M.grad_step(p, t, y, z, cfg, variant),
+        p_spec, tok, tok, f32,
+    )
+    artifacts["adamw_step"] = emit(
+        "adamw_step",
+        lambda p, g, m, v, lr, wd, c1, c2: O.adamw_step(p, g, m, v, lr, wd, c1, c2, variant),
+        p_spec, p_spec, p_spec, p_spec, f32, f32, f32, f32,
+    )
+    artifacts["sgd_step"] = emit(
+        "sgd_step", lambda p, g, lr: O.sgd_step(p, g, lr), p_spec, p_spec, f32
+    )
+    artifacts["eval_step"] = emit(
+        "eval_step", lambda p, t, y: M.eval_step(p, t, y, cfg, variant), p_spec, tok, tok
+    )
+
+    specs, _ = param_specs(cfg)
+    manifest = {
+        "model": dataclasses.asdict(cfg),
+        "variant": variant,
+        "microbatch": b,
+        "seq_len": l,
+        "vocab": cfg.vocab,
+        "params": specs,
+        "artifacts": artifacts,
+        "param_count": cfg.param_count(),
+        "non_embedding_params": cfg.non_embedding_params(),
+        "flops_per_token": cfg.flops_per_token(),
+        "adam": {"beta1": O.BETA1, "beta2": O.BETA2, "eps": O.EPS},
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="test,s,m,l", help="comma list or 'all'")
+    ap.add_argument("--variants", default="ref,pallas", help="ref,pallas")
+    ap.add_argument("--microbatch", type=int, default=8)
+    args = ap.parse_args()
+
+    names = list(M.CONFIGS) if args.models == "all" else args.models.split(",")
+    for name in names:
+        cfg = M.CONFIGS[name]
+        for variant in args.variants.split(","):
+            sub = name if variant == "ref" else f"{name}_pallas"
+            out = os.path.join(args.out_dir, sub)
+            man = lower_model(cfg, variant, args.microbatch, out)
+            print(
+                f"[aot] {sub}: {len(man['params'])} param leaves, "
+                f"{man['param_count']:,} params ({man['non_embedding_params']:,} non-emb) → {out}"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""L1 Pallas kernels + pure-jnp reference oracles.
+
+``flash_attention`` / ``fused_cross_entropy`` / ``fused_adamw`` are the
+interpret-mode Pallas kernels; ``ref`` holds the oracles pytest checks them
+against and that the fast ``variant="ref"`` AOT path lowers instead.
+"""
+
+from . import ref
+from .flash_attention import flash_attention, vmem_bytes
+from .fused_adamw import fused_adamw
+from .fused_ce import fused_cross_entropy
+
+__all__ = ["ref", "flash_attention", "fused_adamw", "fused_cross_entropy", "vmem_bytes"]

@@ -1,0 +1,180 @@
+"""L1 Pallas kernel: causal flash attention (tiled online-softmax).
+
+TPU-style adaptation of the GPU flash-attention insight (see DESIGN.md
+§Hardware-Adaptation): instead of warp tiles + shared memory we tile for
+VMEM residency with ``BlockSpec`` — the grid walks query tiles of shape
+``(block_q, d)``; inside the kernel a ``fori_loop`` streams key/value tiles
+of shape ``(block_k, d)`` through the online-softmax accumulator, exactly
+the HBM→VMEM schedule the paper's training stack relies on. ``interpret=True``
+keeps the kernel runnable on the CPU PJRT backend (real-TPU lowering emits a
+Mosaic custom-call the CPU plugin cannot execute).
+
+The backward pass uses the standard flash recomputation: save ``(q, k, v,
+out, lse)``, rebuild the probabilities tile-free in f32 and produce
+``dq, dk, dv`` analytically. At the sizes this testbed trains, a jnp
+backward lowers to the same fused XLA loops a Pallas bwd kernel would, so
+the bwd is expressed in jnp (checked against jax.grad of the reference).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 32
+DEFAULT_BLOCK_K = 32
+
+NEG_INF = -1e30  # avoid nan from (-inf) - (-inf) in fully-masked rows
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_k: int, causal: bool, scale: float):
+    """One (block_q, d) query tile against all key/value tiles."""
+    block_q, d = q_ref.shape
+    kv_len = k_ref.shape[0]
+    qi = pl.program_id(0)
+
+    q = q_ref[...].astype(jnp.float32) * scale
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+
+    q_ids = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.ds(kb * block_k, block_k), slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.ds(kb * block_k, block_k), slice(None))).astype(jnp.float32)
+        s = q @ k.T  # (block_q, block_k) — MXU-shaped tile matmul
+        if causal:
+            k_ids = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_ids >= k_ids, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = alpha[:, None] * acc + p @ v
+        return m_new, l_new, acc_new
+
+    if causal:
+        # Only key tiles that intersect the causal triangle of this q tile.
+        hi = jax.lax.div((qi + 1) * block_q + block_k - 1, block_k)
+        hi = jnp.minimum(hi, kv_len // block_k)
+    else:
+        hi = kv_len // block_k
+    m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = m + jnp.log(l)
+
+
+def _flash_fwd_single(q, k, v, *, causal: bool, block_q: int, block_k: int):
+    """Flash attention over a single head: q, k, v of shape (L, d)."""
+    ql, d = q.shape
+    kl = k.shape[0]
+    block_q = min(block_q, ql)
+    block_k = min(block_k, kl)
+    if ql % block_q != 0 or kl % block_k != 0:
+        raise ValueError(f"seq lens ({ql},{kl}) must divide blocks ({block_q},{block_k})")
+    scale = 1.0 / (d**0.5)
+    grid = (ql // block_q,)
+    kernel = functools.partial(_fwd_kernel, block_k=block_k, causal=causal, scale=scale)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((kl, d), lambda i: (0, 0)),
+            pl.BlockSpec((kl, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ql, d), q.dtype),
+            jax.ShapeDtypeStruct((ql,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return out, lse
+
+
+def _fwd(q, k, v, causal, block_q, block_k):
+    """Batched forward: q, k, v of shape (N, L, d) with N = batch*heads."""
+    f = functools.partial(_flash_fwd_single, causal=causal, block_q=block_q, block_k=block_k)
+    out, lse = jax.vmap(f)(q, k, v)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, block_q, block_k, res, do):
+    q, k, v, out, lse = res
+    d = q.shape[-1]
+    scale = 1.0 / (d**0.5)
+    q32, k32, v32 = q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    do32, out32 = do.astype(jnp.float32), out.astype(jnp.float32)
+    s = jnp.einsum("nqd,nkd->nqk", q32, k32) * scale
+    if causal:
+        ql, kl = q.shape[-2], k.shape[-2]
+        mask = jnp.tril(jnp.ones((ql, kl), dtype=bool))
+        s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - lse[..., None])
+    dv = jnp.einsum("nqk,nqd->nkd", p, do32)
+    dp = jnp.einsum("nqd,nkd->nqk", do32, v32)
+    delta = jnp.sum(do32 * out32, axis=-1)  # (N, L)
+    ds = p * (dp - delta[..., None])
+    dq = jnp.einsum("nqk,nkd->nqd", ds, k32) * scale
+    dk = jnp.einsum("nqk,nqd->nkd", ds, q32) * scale
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_attention(q, k, v, causal, block_q, block_k):
+    out, _ = _fwd(q, k, v, causal, block_q, block_k)
+    return out
+
+
+_flash_attention.defvjp(
+    lambda q, k, v, causal, bq, bk: _fwd(q, k, v, causal, bq, bk),
+    _bwd,
+)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Differentiable flash attention.
+
+    Accepts ``(..., L, d)`` with any number of leading dims (batch, heads);
+    leading dims are folded into the kernel grid's batch axis.
+    """
+    lead = q.shape[:-2]
+    ql, d = q.shape[-2:]
+    kl = k.shape[-2]
+    qf = q.reshape((-1, ql, d))
+    kf = k.reshape((-1, kl, d))
+    vf = v.reshape((-1, kl, d))
+    out = _flash_attention(qf, kf, vf, causal, block_q, block_k)
+    return out.reshape((*lead, ql, d))
+
+
+def vmem_bytes(block_q: int, block_k: int, d: int, kv_len: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency of one grid step (DESIGN.md §Perf).
+
+    q tile + streamed k/v tiles + f32 accumulator + score tile + output tile.
+    Used by the perf harness to pick block shapes under a VMEM budget.
+    """
+    q_tile = block_q * d * dtype_bytes
+    kv_tiles = 2 * block_k * d * dtype_bytes
+    acc = block_q * d * 4
+    scores = block_q * block_k * 4
+    out_tile = block_q * d * dtype_bytes
+    stats = 2 * block_q * 4
+    return q_tile + kv_tiles + acc + scores + out_tile + stats

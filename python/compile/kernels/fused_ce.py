@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: fused cross-entropy (+ z-loss statistics).
+
+Computes per-token ``(lse, target_logit)`` in one pass over the vocabulary
+without materializing the softmax: the grid walks token tiles; inside the
+kernel a ``fori_loop`` streams vocab tiles through an online logsumexp and
+simultaneously gathers the target logit (a masked tile reduction — no
+dynamic gather, which maps well to TPU vector units). From these two
+statistics the model composes
+
+    ce      = mean(lse - target_logit)
+    z-loss  = z * mean(lse**2)            (OLMo-style, as in the paper §4)
+
+The backward pass (softmax - onehot, plus the z-loss term) is expressed in
+jnp via custom_vjp, recomputing the softmax row from the saved lse.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_T = 32
+DEFAULT_BLOCK_V = 128
+
+NEG_INF = -1e30
+
+
+def _ce_kernel(logits_ref, targets_ref, lse_ref, tgt_ref, *, block_v: int):
+    block_t = logits_ref.shape[0]
+    vocab = logits_ref.shape[1]
+    targets = targets_ref[...]
+
+    m0 = jnp.full((block_t,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_t,), jnp.float32)
+    t0 = jnp.zeros((block_t,), jnp.float32)
+
+    def body(vb, carry):
+        m, l, tgt = carry
+        x = pl.load(logits_ref, (slice(None), pl.ds(vb * block_v, block_v))).astype(jnp.float32)
+        v_ids = vb * block_v + jax.lax.broadcasted_iota(jnp.int32, (block_t, block_v), 1)
+        # online logsumexp
+        m_new = jnp.maximum(m, jnp.max(x, axis=-1))
+        l_new = jnp.exp(m - m_new) * l + jnp.sum(jnp.exp(x - m_new[:, None]), axis=-1)
+        # masked gather of the target logit
+        hit = v_ids == targets[:, None]
+        tgt_new = tgt + jnp.sum(jnp.where(hit, x, 0.0), axis=-1)
+        return m_new, l_new, tgt_new
+
+    m, l, tgt = jax.lax.fori_loop(0, vocab // block_v, body, (m0, l0, t0))
+    lse_ref[...] = m + jnp.log(l)
+    tgt_ref[...] = tgt
+
+
+def _ce_stats_pallas(logits, targets, block_t: int, block_v: int):
+    t, vocab = logits.shape
+    block_t = min(block_t, t)
+    block_v = min(block_v, vocab)
+    if t % block_t != 0 or vocab % block_v != 0:
+        raise ValueError(f"(T,V)=({t},{vocab}) must divide blocks ({block_t},{block_v})")
+    grid = (t // block_t,)
+    kernel = functools.partial(_ce_kernel, block_v=block_v)
+    lse, tgt = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, vocab), lambda i: (i, 0)),
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+        ],
+        interpret=True,
+    )(logits, targets.astype(jnp.int32))
+    return lse, tgt
+
+
+def _fwd(logits, targets, block_t, block_v):
+    lse, tgt = _ce_stats_pallas(logits, targets, block_t, block_v)
+    ce = jnp.mean(lse - tgt)
+    zsq = jnp.mean(lse * lse)
+    return (ce, zsq), (logits, targets, lse)
+
+
+def _bwd(block_t, block_v, res, grads):
+    dce, dzsq = grads
+    logits, targets, lse = res
+    t = logits.shape[0]
+    x = logits.astype(jnp.float32)
+    p = jnp.exp(x - lse[:, None])  # softmax from saved lse
+    onehot = jax.nn.one_hot(targets, logits.shape[1], dtype=jnp.float32)
+    dl = dce * (p - onehot) / t + dzsq * (2.0 * lse / t)[:, None] * p
+    return dl.astype(logits.dtype), None
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _fused_ce(logits, targets, block_t, block_v):
+    out, _ = _fwd(logits, targets, block_t, block_v)
+    return out
+
+
+_fused_ce.defvjp(_fwd, _bwd)
+
+
+def fused_cross_entropy(
+    logits: jax.Array,
+    targets: jax.Array,
+    *,
+    block_t: int = DEFAULT_BLOCK_T,
+    block_v: int = DEFAULT_BLOCK_V,
+):
+    """Mean CE and mean squared-lse (z-loss term) over (T, V) logits."""
+    return _fused_ce(logits, targets, block_t, block_v)

@@ -1,0 +1,110 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops only. pytest (and hypothesis sweeps)
+assert allclose between kernel and oracle; the AOT pipeline can also lower
+the whole model against these references (``variant="ref"``), which is the
+fast path on the CPU testbed, while the Pallas variant proves the kernel
+path end-to-end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True) -> jax.Array:
+    """Scaled dot-product attention.
+
+    Shapes: q, k, v: (..., L, d). Softmax in float32 regardless of input
+    dtype (matches the Pallas kernel's accumulator dtype).
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = jnp.einsum("...qd,...kd->...qk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        ql, kl = q.shape[-2], k.shape[-2]
+        mask = jnp.tril(jnp.ones((ql, kl), dtype=bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("...qk,...kd->...qd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_lse(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True):
+    """Attention that also returns the row-wise log-sum-exp (for flash bwd)."""
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = jnp.einsum("...qd,...kd->...qk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        ql, kl = q.shape[-2], k.shape[-2]
+        mask = jnp.tril(jnp.ones((ql, kl), dtype=bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    lse = jax.scipy.special.logsumexp(s, axis=-1)
+    p = jnp.exp(s - lse[..., None])
+    out = jnp.einsum("...qk,...kd->...qd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype), lse
+
+
+# ---------------------------------------------------------------------------
+# Cross entropy (+ z-loss)
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy_stats(logits: jax.Array, targets: jax.Array):
+    """Per-token ``(lse, target_logit)`` for CE: ``loss_i = lse_i - tgt_i``.
+
+    logits: (T, V) float; targets: (T,) int. Returns two (T,) float32
+    arrays. The z-loss of the paper (OLMo-style) is ``z * mean(lse**2)``.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return lse, tgt
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array):
+    """Mean CE loss and mean squared-lse (the z-loss term, unscaled)."""
+    lse, tgt = cross_entropy_stats(logits, targets)
+    return jnp.mean(lse - tgt), jnp.mean(lse * lse)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer updates
+# ---------------------------------------------------------------------------
+
+
+def adamw_update(p, g, m, v, lr, wd, c1, c2, *, beta1=0.9, beta2=0.95, eps=1e-8):
+    """One decoupled-weight-decay Adam step on a flat array.
+
+    ``c1 = 1/(1-beta1^t)``, ``c2 = 1/(1-beta2^t)`` are the bias-correction
+    factors (precomputed by the caller — in production, by the rust
+    coordinator, which owns the step counter).
+    """
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m * c1
+    vhat = v * c2
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + eps)) - lr * wd * p
+    return p, m, v
+
+
+def sgd_update(p, g, lr):
+    """Plain SGD step; NSGD is this with lr pre-scaled by 1/sqrt(E||g||^2)."""
+    return p - lr * g
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return ((x32 / rms) * scale).astype(x.dtype)

@@ -1,0 +1,187 @@
+"""L2: decoder-only transformer LM (fwd/bwd) in JAX, calling the L1 kernels.
+
+The architecture follows the paper's OLMo-style setup scaled to this
+testbed (DESIGN.md §Hardware-Adaptation): RMSNorm pre-norm blocks, RoPE,
+GELU MLP (ff = 4·d), tied embedding/output head, optional z-loss
+(``z · mean(lse²)``) exactly as ablated in the paper's Appendix E. Layer
+parameters are stacked on a leading ``n_layers`` axis; the block stack
+lowers unrolled by default (straight-line HLO fuses ~25% better than
+``lax.scan`` at the shallow depths this testbed trains — EXPERIMENTS.md
+§Perf), with ``lax.scan`` available for deep models via ``unroll=False``.
+
+``variant`` selects the kernel implementation: ``"pallas"`` routes
+attention and cross-entropy through the L1 Pallas kernels (interpret
+mode), ``"ref"`` through the pure-jnp oracles (the fast XLA-fused path on
+this CPU testbed). Both lower to artifacts; parity is asserted in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_attention, fused_cross_entropy, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyperparameters; ``(depth, heads, width)`` as the paper reports."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    ff_mult: int = 4
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def ff_dim(self) -> int:
+        return self.ff_mult * self.d_model
+
+    def non_embedding_params(self) -> int:
+        """≈12·d²·L: the count the paper sizes models by."""
+        d, f = self.d_model, self.ff_dim
+        per_layer = 4 * d * d + 2 * d * f + 2 * d
+        return self.n_layers * per_layer + d
+
+    def param_count(self) -> int:
+        return self.non_embedding_params() + self.vocab * self.d_model
+
+    def flops_per_token(self) -> int:
+        """Approximate fwd+bwd FLOPs/token (6N + attention term)."""
+        attn = 12 * self.n_layers * self.d_model * self.seq_len
+        return 6 * self.param_count() + attn
+
+
+# Model zoo. ``test`` is for unit tests; s/m/l are the three "scales" of
+# Figure 1 (paper: 150M/300M/600M — scaled to this CPU testbed, DESIGN.md §6);
+# ``e2e`` is the end-to-end example driver's model.
+CONFIGS: Dict[str, ModelConfig] = {
+    "test": ModelConfig("test", vocab=256, d_model=64, n_layers=2, n_heads=4, seq_len=64),
+    "s": ModelConfig("s", vocab=256, d_model=64, n_layers=3, n_heads=4, seq_len=64),
+    "m": ModelConfig("m", vocab=256, d_model=96, n_layers=4, n_heads=4, seq_len=64),
+    "l": ModelConfig("l", vocab=256, d_model=128, n_layers=6, n_heads=8, seq_len=64),
+    "e2e": ModelConfig("e2e", vocab=256, d_model=256, n_layers=8, n_heads=8, seq_len=128),
+}
+
+
+def init_params(cfg: ModelConfig, seed: jax.Array) -> Dict[str, Any]:
+    """Initialize parameters from an int32 scalar seed (AOT-friendly)."""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    ks = jax.random.split(key, 8)
+    d, f, nl, v = cfg.d_model, cfg.ff_dim, cfg.n_layers, cfg.vocab
+    sd = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    sf = 1.0 / jnp.sqrt(jnp.asarray(f, jnp.float32))
+    norm = lambda k, shape, s: (jax.random.normal(k, shape, jnp.float32) * s)
+    return {
+        "embed": norm(ks[0], (v, d), sd),
+        "blocks": {
+            "ln1": jnp.ones((nl, d), jnp.float32),
+            "ln2": jnp.ones((nl, d), jnp.float32),
+            "wq": norm(ks[1], (nl, d, d), sd),
+            "wk": norm(ks[2], (nl, d, d), sd),
+            "wv": norm(ks[3], (nl, d, d), sd),
+            "wo": norm(ks[4], (nl, d, d), sd),
+            "w_up": norm(ks[5], (nl, d, f), sd),
+            "w_down": norm(ks[6], (nl, f, d), sf),
+        },
+        "ln_f": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _rope(x: jax.Array, theta: float) -> jax.Array:
+    """Rotary embeddings over (..., L, hd)."""
+    l, hd = x.shape[-2], x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = jnp.arange(l, dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]  # (L, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+def forward(
+    params: Dict[str, Any],
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    variant: str = "ref",
+    unroll: bool = True,
+) -> jax.Array:
+    """Logits for (B, L) int32 tokens → (B, L, V) float32.
+
+    ``unroll=True`` lays the layer stack out as straight-line HLO (better
+    XLA fusion at the shallow depths this testbed trains — §Perf);
+    ``unroll=False`` uses ``lax.scan`` (compact HLO for deep models).
+    """
+    b, l = tokens.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    x = params["embed"][tokens]  # (B, L, d)
+
+    def block(x, layer):
+        y = ref.rmsnorm(x, layer["ln1"])
+        q = (y @ layer["wq"]).reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+        k = (y @ layer["wk"]).reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+        v = (y @ layer["wv"]).reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+        q = _rope(q, cfg.rope_theta)
+        k = _rope(k, cfg.rope_theta)
+        if variant == "pallas":
+            a = flash_attention(q, k, v, causal=True)
+        else:
+            a = ref.attention(q, k, v, causal=True)
+        a = a.transpose(0, 2, 1, 3).reshape(b, l, cfg.d_model)
+        x = x + a @ layer["wo"]
+        y2 = ref.rmsnorm(x, layer["ln2"])
+        x = x + jax.nn.gelu(y2 @ layer["w_up"]) @ layer["w_down"]
+        return x, None
+
+    if unroll:
+        for i in range(cfg.n_layers):
+            layer = jax.tree_util.tree_map(lambda p: p[i], params["blocks"])
+            x, _ = block(x, layer)
+    else:
+        x, _ = jax.lax.scan(block, x, params["blocks"])
+    x = ref.rmsnorm(x, params["ln_f"])
+    return (x @ params["embed"].T).astype(jnp.float32)
+
+
+def loss_fn(params, tokens, targets, zcoef, cfg: ModelConfig, variant: str = "ref"):
+    """Total loss = CE + zcoef · mean(lse²). Returns (total, (ce, zsq))."""
+    logits = forward(params, tokens, cfg, variant)
+    flat = logits.reshape(-1, cfg.vocab)
+    tgt = targets.reshape(-1)
+    if variant == "pallas":
+        ce, zsq = fused_cross_entropy(flat, tgt)
+    else:
+        ce, zsq = ref.cross_entropy(flat, tgt)
+    return ce + zcoef * zsq, (ce, zsq)
+
+
+def grad_step(params, tokens, targets, zcoef, cfg: ModelConfig, variant: str = "ref"):
+    """fwd+bwd on one microbatch.
+
+    Returns ``(ce, zsq, gnorm_sq, grads)`` — gnorm_sq is Σ‖g‖² over all
+    leaves, the statistic the rust coordinator EMAs for the NSGD
+    denominator (Assumption 2 diagnostics) and for grad-norm logging.
+    """
+    (_, (ce, zsq)), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, tokens, targets, zcoef, cfg, variant), has_aux=True
+    )(params)
+    gnorm_sq = sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree_util.tree_leaves(grads))
+    return ce, zsq, gnorm_sq, grads
+
+
+def eval_step(params, tokens, targets, cfg: ModelConfig, variant: str = "ref"):
+    """Validation CE (and z term) on one microbatch — no grads."""
+    _, (ce, zsq) = loss_fn(params, tokens, targets, jnp.float32(0.0), cfg, variant)
+    return ce, zsq

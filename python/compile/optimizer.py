@@ -1,0 +1,54 @@
+"""L2: optimizer update rules over the parameter pytree.
+
+The paper trains with AdamW (β₁=0.9, β₂=0.95, ε=1e-8, §4) and analyses
+normalized SGD as the Adam proxy (Eq. 4/7). The rust coordinator owns the
+step counter, the learning-rate *and batch-size* schedules (Seesaw), and
+the NSGD normalizer EMA; these computations therefore take schedule values
+as runtime scalars so one AOT artifact serves every schedule.
+
+NSGD is served by ``sgd_step``: under Assumption 2 the update reduces to
+SGD with ``lr_eff = lr / sqrt(E‖g‖²)`` (Eq. 7) — the coordinator computes
+``lr_eff`` from the ``gnorm_sq`` statistic that ``grad_step`` emits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_adamw, ref
+
+BETA1 = 0.9
+BETA2 = 0.95
+EPS = 1e-8
+
+
+def zeros_like_tree(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def adamw_step(params, grads, m, v, lr, wd, c1, c2, variant: str = "ref"):
+    """One AdamW step over the whole pytree; returns (params', m', v')."""
+
+    def leaf(p, g, mm, vv):
+        if variant == "pallas":
+            return fused_adamw(p, g, mm, vv, lr, wd, c1, c2, beta1=BETA1, beta2=BETA2, eps=EPS)
+        return ref.adamw_update(p, g, mm, vv, lr, wd, c1, c2, beta1=BETA1, beta2=BETA2, eps=EPS)
+
+    out = jax.tree_util.tree_map(leaf, params, grads, m, v)
+    # unzip the 3-tuples back into three pytrees
+    is_leaf3 = lambda x: isinstance(x, tuple) and len(x) == 3 and not isinstance(x[0], tuple)
+    p_new = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is_leaf3)
+    m_new = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is_leaf3)
+    v_new = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=is_leaf3)
+    return p_new, m_new, v_new
+
+
+def sgd_step(params, grads, lr):
+    """Plain SGD over the pytree (also serves NSGD via pre-scaled lr)."""
+    return jax.tree_util.tree_map(lambda p, g: ref.sgd_update(p, g, lr), params, grads)
+
+
+def bias_corrections(step: int):
+    """(c1, c2) for AdamW at 1-indexed ``step`` (mirrors the rust side)."""
+    return 1.0 / (1.0 - BETA1**step), 1.0 / (1.0 - BETA2**step)

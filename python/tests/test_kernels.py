@@ -1,0 +1,209 @@
+"""L1 kernel vs ref oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes/dtypes of every Pallas kernel and asserts
+allclose against the pure-jnp reference (per the repro contract).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import flash_attention, fused_adamw, fused_cross_entropy, ref, vmem_bytes
+from compile.kernels.flash_attention import _flash_fwd_single
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=12, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@given(
+    l=st.sampled_from([16, 32, 64, 128]),
+    d=st.sampled_from([8, 16, 32, 64]),
+    n=st.sampled_from([1, 2, 4]),
+    causal=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_attention_fwd_matches_ref(l, d, n, causal, dtype, seed):
+    r = rng(seed)
+    q, k, v = (jnp.asarray(r.standard_normal((n, l, d)), dtype) for _ in range(3))
+    out = flash_attention(q, k, v, causal=causal, block_q=16, block_k=16)
+    want = ref.attention(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@given(
+    l=st.sampled_from([16, 32, 64]),
+    d=st.sampled_from([8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_attention_grads_match_ref(l, d, causal, seed):
+    r = rng(seed)
+    q, k, v = (jnp.asarray(r.standard_normal((2, l, d)), jnp.float32) for _ in range(3))
+
+    def f_kernel(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, causal=causal, block_q=16, block_k=16) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.attention(q, k, v, causal=causal) ** 2)
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_lse_matches_ref():
+    r = rng(7)
+    q, k, v = (jnp.asarray(r.standard_normal((32, 16)), jnp.float32) for _ in range(3))
+    out, lse = _flash_fwd_single(q, k, v, causal=True, block_q=16, block_k=16)
+    want_out, want_lse = ref.attention_lse(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want_out), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(want_lse), rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_block_shape_invariance():
+    """Output must not depend on the tiling — a pure scheduling choice."""
+    r = rng(3)
+    q, k, v = (jnp.asarray(r.standard_normal((1, 64, 32)), jnp.float32) for _ in range(3))
+    outs = [
+        flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+        for bq, bk in [(16, 16), (32, 16), (16, 32), (64, 64), (32, 64)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]), rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_multihead_shape():
+    r = rng(1)
+    q, k, v = (jnp.asarray(r.standard_normal((2, 4, 32, 16)), jnp.float32) for _ in range(3))
+    out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    assert out.shape == (2, 4, 32, 16)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_rejects_bad_blocks():
+    q = jnp.zeros((24, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        _flash_fwd_single(q, q, q, causal=True, block_q=16, block_k=16)
+
+
+def test_vmem_estimate_monotone_in_blocks():
+    a = vmem_bytes(16, 16, 64, 512)
+    b = vmem_bytes(64, 64, 64, 512)
+    assert 0 < a < b
+
+
+# ---------------------------------------------------------------------------
+# fused cross entropy (+ z-loss statistics)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    t=st.sampled_from([8, 32, 64]),
+    v=st.sampled_from([64, 128, 256, 384]),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_ce_matches_ref(t, v, scale, seed):
+    r = rng(seed)
+    logits = jnp.asarray(r.standard_normal((t, v)) * scale, jnp.float32)
+    targets = jnp.asarray(r.integers(0, v, t), jnp.int32)
+    ce, zsq = fused_cross_entropy(logits, targets, block_t=8, block_v=64)
+    want_ce, want_zsq = ref.cross_entropy(logits, targets)
+    np.testing.assert_allclose(float(ce), float(want_ce), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(zsq), float(want_zsq), rtol=1e-5, atol=1e-4)
+
+
+def test_fused_ce_grads_match_ref():
+    r = rng(11)
+    logits = jnp.asarray(r.standard_normal((32, 128)), jnp.float32)
+    targets = jnp.asarray(r.integers(0, 128, 32), jnp.int32)
+
+    def f_kernel(x):
+        ce, zsq = fused_cross_entropy(x, targets, block_t=8, block_v=64)
+        return ce + 0.01 * zsq
+
+    def f_ref(x):
+        ce, zsq = ref.cross_entropy(x, targets)
+        return ce + 0.01 * zsq
+
+    g1 = jax.grad(f_kernel)(logits)
+    g2 = jax.grad(f_ref)(logits)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5, atol=1e-6)
+
+
+def test_fused_ce_extreme_logits_stable():
+    """Online logsumexp must survive large-magnitude logits (no overflow)."""
+    logits = jnp.asarray([[500.0] + [0.0] * 63, [-500.0] * 32 + [0.0] * 32], jnp.float32)
+    targets = jnp.asarray([0, 63], jnp.int32)
+    ce, zsq = fused_cross_entropy(logits, targets, block_t=2, block_v=32)
+    want_ce, want_zsq = ref.cross_entropy(logits, targets)
+    assert np.isfinite(float(ce)) and np.isfinite(float(zsq))
+    np.testing.assert_allclose(float(ce), float(want_ce), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused AdamW
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.sampled_from([7, 64, 1000, 4096]),
+    step=st.integers(1, 100),
+    lr=st.sampled_from([1e-3, 3e-3, 1e-2]),
+    wd=st.sampled_from([0.0, 1e-4, 0.1]),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_adamw_matches_ref(n, step, lr, wd, seed):
+    r = rng(seed)
+    p = jnp.asarray(r.standard_normal(n), jnp.float32)
+    g = jnp.asarray(r.standard_normal(n), jnp.float32)
+    m = jnp.asarray(r.standard_normal(n) * 0.1, jnp.float32)
+    v = jnp.asarray(np.abs(r.standard_normal(n)) * 0.01, jnp.float32)
+    c1 = 1.0 / (1.0 - 0.9**step)
+    c2 = 1.0 / (1.0 - 0.95**step)
+    got = fused_adamw(p, g, m, v, lr, wd, c1, c2, block=256)
+    want = ref.adamw_update(p, g, m, v, lr, wd, c1, c2)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7)
+
+
+def test_fused_adamw_nd_shapes():
+    r = rng(5)
+    p = jnp.asarray(r.standard_normal((3, 8, 5)), jnp.float32)
+    g, m = jnp.zeros_like(p) + 0.1, jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    got = fused_adamw(p, g, m, v, 1e-2, 0.0, 1.0, 1.0, block=16)
+    want = ref.adamw_update(p, g, m, v, 1e-2, 0.0, 1.0, 1.0)
+    for a, b in zip(got, want):
+        assert a.shape == p.shape
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7)
+
+
+def test_adamw_zero_grad_pure_decay():
+    """g=0, m=v=0 → update is exactly the decoupled weight-decay shrink."""
+    p = jnp.ones((16,), jnp.float32)
+    z = jnp.zeros_like(p)
+    lr, wd = 0.1, 0.5
+    got_p, _, _ = fused_adamw(p, z, z, z, lr, wd, 1.0, 1.0, block=16)
+    np.testing.assert_allclose(np.asarray(got_p), np.ones(16) * (1 - lr * wd), rtol=1e-6)

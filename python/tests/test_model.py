@@ -1,0 +1,136 @@
+"""L2 model tests: shapes, variant parity (pallas vs ref), learning sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import optimizer as O
+
+CFG = M.CONFIGS["test"]
+
+
+def data(b=2, seed=0):
+    r = np.random.default_rng(seed)
+    tokens = jnp.asarray(r.integers(0, CFG.vocab, (b, CFG.seq_len)), jnp.int32)
+    targets = jnp.asarray(r.integers(0, CFG.vocab, (b, CFG.seq_len)), jnp.int32)
+    return tokens, targets
+
+
+def test_init_shapes_and_determinism():
+    p1 = M.init_params(CFG, jnp.int32(0))
+    p2 = M.init_params(CFG, jnp.int32(0))
+    p3 = M.init_params(CFG, jnp.int32(1))
+    leaves1 = jax.tree_util.tree_leaves(p1)
+    assert p1["embed"].shape == (CFG.vocab, CFG.d_model)
+    assert p1["blocks"]["wq"].shape == (CFG.n_layers, CFG.d_model, CFG.d_model)
+    for a, b in zip(leaves1, jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(leaves1, jax.tree_util.tree_leaves(p3))
+    )
+
+
+def test_forward_shapes_and_finite():
+    params = M.init_params(CFG, jnp.int32(0))
+    tokens, _ = data()
+    logits = M.forward(params, tokens, CFG)
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_initial_loss_near_uniform():
+    """Fresh model ≈ uniform predictor: CE ≈ log(vocab)."""
+    params = M.init_params(CFG, jnp.int32(0))
+    tokens, targets = data(b=4)
+    ce, _ = M.eval_step(params, tokens, targets, CFG)
+    assert abs(float(ce) - np.log(CFG.vocab)) < 1.0
+
+
+def test_causality():
+    """Changing future tokens must not change past logits."""
+    params = M.init_params(CFG, jnp.int32(0))
+    tokens, _ = data(b=1)
+    logits1 = M.forward(params, tokens, CFG)
+    tokens2 = tokens.at[0, -1].set((tokens[0, -1] + 1) % CFG.vocab)
+    logits2 = M.forward(params, tokens2, CFG)
+    np.testing.assert_allclose(
+        np.asarray(logits1[0, :-1]), np.asarray(logits2[0, :-1]), rtol=1e-6, atol=1e-6
+    )
+    assert not np.allclose(np.asarray(logits1[0, -1]), np.asarray(logits2[0, -1]))
+
+
+def test_variant_parity_loss_and_grads():
+    """Pallas-kernel model ≡ ref model: same loss, same grads."""
+    params = M.init_params(CFG, jnp.int32(0))
+    tokens, targets = data()
+    z = jnp.float32(1e-4)
+    ce_r, zs_r, gn_r, g_r = M.grad_step(params, tokens, targets, z, CFG, "ref")
+    ce_p, zs_p, gn_p, g_p = M.grad_step(params, tokens, targets, z, CFG, "pallas")
+    np.testing.assert_allclose(float(ce_r), float(ce_p), rtol=1e-4)
+    np.testing.assert_allclose(float(zs_r), float(zs_p), rtol=1e-4)
+    np.testing.assert_allclose(float(gn_r), float(gn_p), rtol=1e-3)
+    for a, b in zip(jax.tree_util.tree_leaves(g_r), jax.tree_util.tree_leaves(g_p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-5)
+
+
+def test_zcoef_zero_matches_pure_ce():
+    params = M.init_params(CFG, jnp.int32(0))
+    tokens, targets = data()
+    total, (ce, _) = M.loss_fn(params, tokens, targets, jnp.float32(0.0), CFG)
+    np.testing.assert_allclose(float(total), float(ce), rtol=1e-7)
+
+
+def test_loss_decreases_under_adamw():
+    """A few AdamW steps on a fixed batch must reduce the loss (memorize)."""
+    params = M.init_params(CFG, jnp.int32(0))
+    m = O.zeros_like_tree(params)
+    v = O.zeros_like_tree(params)
+    tokens, targets = data(b=4, seed=3)
+    z = jnp.float32(0.0)
+    ce0, _, _, _ = M.grad_step(params, tokens, targets, z, CFG)
+    step_fn = jax.jit(
+        lambda p, g, m, v, lr, wd, c1, c2: O.adamw_step(p, g, m, v, lr, wd, c1, c2)
+    )
+    grad_fn = jax.jit(lambda p, t, y, z: M.grad_step(p, t, y, z, CFG))
+    ce = ce0
+    for t in range(1, 21):
+        ce, _, _, grads = grad_fn(params, tokens, targets, z)
+        c1, c2 = O.bias_corrections(t)
+        params, m, v = step_fn(
+            params, grads, m, v, jnp.float32(3e-3), jnp.float32(0.0),
+            jnp.float32(c1), jnp.float32(c2),
+        )
+    ce_end, _, _, _ = grad_fn(params, tokens, targets, z)
+    assert float(ce_end) < float(ce0) - 0.5, (float(ce0), float(ce_end))
+
+
+def test_sgd_step_moves_against_gradient():
+    params = M.init_params(CFG, jnp.int32(0))
+    tokens, targets = data()
+    _, _, _, grads = M.grad_step(params, tokens, targets, jnp.float32(0.0), CFG)
+    new = O.sgd_step(params, grads, jnp.float32(0.1))
+    diff = jax.tree_util.tree_map(lambda a, b, g: np.allclose(np.asarray(a - b), 0.1 * np.asarray(g), atol=1e-6), params, new, grads)
+    assert all(jax.tree_util.tree_leaves(diff))
+
+
+def test_adamw_variant_parity():
+    params = M.init_params(CFG, jnp.int32(0))
+    g = jax.tree_util.tree_map(lambda x: jnp.ones_like(x) * 0.01, params)
+    m = O.zeros_like_tree(params)
+    v = O.zeros_like_tree(params)
+    out_r = O.adamw_step(params, g, m, v, 1e-3, 0.1, 10.0, 20.0, "ref")
+    out_p = O.adamw_step(params, g, m, v, 1e-3, 0.1, 10.0, 20.0, "pallas")
+    for tr, tp in zip(out_r, out_p):
+        for a, b in zip(jax.tree_util.tree_leaves(tr), jax.tree_util.tree_leaves(tp)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7)
+
+
+def test_config_param_count_formula():
+    for cfg in M.CONFIGS.values():
+        p = M.init_params(cfg, jnp.int32(0)) if cfg.name == "test" else None
+        if p is not None:
+            total = sum(x.size for x in jax.tree_util.tree_leaves(p))
+            assert total == cfg.param_count()

@@ -1,0 +1,27 @@
+//! Bench harness for **Figure 1**: Seesaw vs cosine at CBS — equal-FLOPs
+//! loss match and the serial-step/serial-time reduction, per model scale.
+//! Regenerates the paper's rows (shape, not absolute values — DESIGN.md §5)
+//! through the live three-layer stack and writes results/figure1_lm.csv.
+//!
+//! `SEESAW_BENCH_FULL=1 cargo bench --bench figure1_seesaw_vs_cosine`
+//! sweeps all three scales + learning rates (the EXPERIMENTS.md numbers).
+
+use seesaw::experiments::{lm_exps, Scale};
+
+fn main() {
+    let full = std::env::var("SEESAW_BENCH_FULL").is_ok();
+    let scale = if full { Scale::Full } else { Scale::Quick };
+    // α=1.1 is the paper's full-protocol factor; at the quick smoke budget
+    // its deep ramp overruns the small-horizon CBS (the paper's own §4.2
+    // caveat), so quick mode uses the coarser α=1.5 staircase.
+    let alpha = if full { 1.1 } else { 1.5 };
+    let rows = lm_exps::figure1(scale, alpha).expect("figure1 harness failed");
+    for (model, lr, cos, ss, step_red, time_red) in rows {
+        println!(
+            "figure1,{model},lr={lr},cosine={cos:.4},seesaw={ss:.4},steps_saved={:.1}%,time_saved={:.1}%",
+            step_red * 100.0,
+            time_red * 100.0
+        );
+    }
+    println!("paper reference: equal loss at CBS, ≈36% serial-time reduction (Lemma 1 bound 36.3%)");
+}

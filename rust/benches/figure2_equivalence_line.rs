@@ -1,0 +1,12 @@
+//! Bench harness for **Figure 2 + Table 2**: the (α, β) grid on the
+//! equivalence line α√β = 2, on the exact NSGD recursion. Stable members
+//! track the baseline; Lemma-4-divergent members blow up. Writes
+//! results/figure2_linreg.csv.
+
+use seesaw::experiments::linreg_exps;
+
+fn main() {
+    let rows = linreg_exps::figure2();
+    let diverged = rows.iter().filter(|r| r.2).count();
+    println!("figure2: {diverged}/{} grid members diverged (paper/Lemma 4: exactly the α<√β members)", rows.len());
+}

@@ -1,0 +1,15 @@
+//! Bench harness for **Figure 3**: past the critical batch size no batch
+//! ramp matches lr decay — the gap grows with batch. Exact NSGD
+//! denominator (Appendix B). Writes results/figure3_linreg.csv.
+
+use seesaw::experiments::linreg_exps;
+
+fn main() {
+    let rows = linreg_exps::figure3();
+    // also print the Assumption-2 shares that explain the failure
+    linreg_exps::assumption2();
+    let (b0, g0, _) = rows.first().unwrap();
+    let (b1, g1, _) = rows.last().unwrap();
+    println!("figure3: seesaw/baseline risk gap {g0:.3} at B={b0} → {g1:.3} at B={b1}");
+    println!("paper reference: discrepancy increases as batch grows past CBS");
+}

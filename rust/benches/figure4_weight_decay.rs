@@ -1,0 +1,20 @@
+//! Bench harness for **Figure 4 + Table 3**: AdamW with tuned weight
+//! decay — Seesaw must still match cosine at the best (lr, λ) pair.
+//! Quick scale sweeps λ=1e-4 (the paper's winner); SEESAW_BENCH_FULL=1
+//! sweeps the paper's full λ grid {1e-6 … 1.0} over three batch sizes.
+
+use seesaw::experiments::{lm_exps, Scale};
+
+fn main() {
+    let full = std::env::var("SEESAW_BENCH_FULL").is_ok();
+    let scale = if full { Scale::Full } else { Scale::Quick };
+    // α=1.1 is the paper's full-protocol factor; at the quick smoke budget
+    // its deep ramp overruns the small-horizon CBS (the paper's own §4.2
+    // caveat), so quick mode uses the coarser α=1.5 staircase.
+    let alpha = if full { 1.1 } else { 1.5 };
+    let rows = lm_exps::figure4(scale, alpha).expect("figure4 harness failed");
+    for (b, cos, ss) in &rows {
+        println!("figure4,batch={b},cosine={cos:.4},seesaw={ss:.4},delta={:+.4}", ss - cos);
+    }
+    println!("paper reference (Table 3): |Δ| ≈ 0.001–0.01 nats with tuned λ");
+}

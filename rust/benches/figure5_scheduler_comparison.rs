@@ -1,0 +1,15 @@
+//! Bench harness for **Figure 5**: four schedules at CBS — const-lr+2×B,
+//! const-lr+4×B, halve-lr step decay, Seesaw — on the live LM stack.
+//! The naive constant-lr ramps must underperform. Writes
+//! results/figure5_lm.csv.
+
+use seesaw::experiments::{lm_exps, Scale};
+
+fn main() {
+    let scale = if std::env::var("SEESAW_BENCH_FULL").is_ok() { Scale::Full } else { Scale::Quick };
+    let rows = lm_exps::figure5(scale).expect("figure5 harness failed");
+    for (name, v) in &rows {
+        println!("figure5,{name},{v:.4}");
+    }
+    println!("paper reference: naive const-lr ramps (blue/orange) severely underperform Seesaw/step decay");
+}

@@ -1,0 +1,11 @@
+//! Bench harness for **Figure 6**: z-loss on/off under cosine — final
+//! validation losses must be indistinguishable (paper Appendix E).
+
+use seesaw::experiments::{lm_exps, Scale};
+
+fn main() {
+    let scale = if std::env::var("SEESAW_BENCH_FULL").is_ok() { Scale::Full } else { Scale::Quick };
+    let rows = lm_exps::figure6(scale).expect("figure6 harness failed");
+    let worst = rows.iter().map(|(_, _, off, on)| (on - off).abs()).fold(0.0f64, f64::max);
+    println!("figure6: worst |z-on − z-off| val-CE gap = {worst:.4} (paper: no difference)");
+}

@@ -1,0 +1,12 @@
+//! Bench harness for **Figure 7**: the z-loss statistic mean(lse²) under
+//! Seesaw — the paper observes late-training z instabilities; we report
+//! the early→late ratio of the statistic.
+
+use seesaw::experiments::{lm_exps, Scale};
+
+fn main() {
+    let scale = if std::env::var("SEESAW_BENCH_FULL").is_ok() { Scale::Full } else { Scale::Quick };
+    let (early, late) = lm_exps::figure7(scale).expect("figure7 harness failed");
+    println!("figure7: mean(lse²) early {early:.2} → late {late:.2} (ratio {:.3})", late / early);
+    println!("paper reference: z-loss grows unstable late in Seesaw training (Fig. 7)");
+}

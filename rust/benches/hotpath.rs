@@ -1,0 +1,112 @@
+//! Hot-path micro-benchmarks (criterion substitute, DESIGN.md §7 L3):
+//! the building blocks of one optimizer step, timed individually so the
+//! §Perf pass can attribute step time:
+//!
+//! * `grad_step` — PJRT execute of fwd+bwd on one microbatch
+//! * `adamw_step` / `sgd_step` — optimizer executables
+//! * `eval_step` — forward only
+//! * literal construction + host readback (the runtime's copy overhead)
+//! * gradient accumulation, ring allreduce, scheduler math, dataloader
+//!
+//! Run: `cargo bench --bench hotpath` (after `make artifacts`).
+
+use seesaw::collective::ring_allreduce_mean;
+use seesaw::data::{Corpus, Loader};
+use seesaw::runtime::{lit_f32, ModelRuntime};
+use seesaw::schedule::SeesawBuilder;
+use seesaw::util::bench::{bench, black_box, BenchResult};
+use std::time::Duration;
+
+fn main() {
+    let dir = std::path::Path::new("artifacts/test");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/test missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let t = Duration::from_secs(2);
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // --- runtime executables ------------------------------------------
+    let rt = ModelRuntime::load(dir).expect("load runtime");
+    let params = rt.init(0).unwrap();
+    let n_tok = rt.microbatch() * rt.seq_len();
+    let tokens: Vec<i32> = (0..n_tok).map(|i| (i % 256) as i32).collect();
+    let targets: Vec<i32> = (0..n_tok).map(|i| ((i + 1) % 256) as i32).collect();
+
+    results.push(bench("grad_step (fwd+bwd, 8×64 microbatch)", t, || {
+        black_box(rt.grad_step(&params, &tokens, &targets, 0.0).unwrap());
+    }));
+    results.push(bench("eval_step (fwd only)", t, || {
+        black_box(rt.eval_step(&params, &tokens, &targets).unwrap());
+    }));
+
+    let g = rt.grad_step(&params, &tokens, &targets, 0.0).unwrap();
+    let grads = rt.grads_to_literals(&g.grads).unwrap();
+    let m = rt.zeros_like_params().unwrap();
+    let v = rt.zeros_like_params().unwrap();
+    results.push(bench("adamw_step (115k params)", t, || {
+        black_box(rt.adamw_step(&params, &grads, &m, &v, 1e-3, 0.0, 1.0, 1.0).unwrap());
+    }));
+    results.push(bench("sgd_step (115k params)", t, || {
+        black_box(rt.sgd_step(&params, &grads, 1e-3).unwrap());
+    }));
+
+    // --- runtime copy overhead ------------------------------------------
+    let flat: Vec<f32> = (0..rt.manifest.total_elements()).map(|i| i as f32).collect();
+    results.push(bench("literal build (115k f32 leaves)", t, || {
+        let mut off = 0;
+        for spec in &rt.manifest.params {
+            let n = spec.elements();
+            black_box(lit_f32(&flat[off..off + n], &spec.dims_i64()).unwrap());
+            off += n;
+        }
+    }));
+    results.push(bench("host readback (params → Vec<f32>)", t, || {
+        black_box(rt.to_host(&params).unwrap());
+    }));
+
+    // --- coordinator pieces ----------------------------------------------
+    let mut acc = vec![0f32; rt.manifest.total_elements()];
+    results.push(bench("grad accumulate (115k axpy)", t, || {
+        let mut off = 0;
+        for gleaf in &g.grads {
+            for (d, s) in acc[off..off + gleaf.len()].iter_mut().zip(gleaf) {
+                *d += *s;
+            }
+            off += gleaf.len();
+        }
+        black_box(&acc);
+    }));
+    let shards: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 115_008]).collect();
+    results.push(bench("ring allreduce (4 workers × 115k)", t, || {
+        let mut s = shards.clone();
+        ring_allreduce_mean(&mut s);
+        black_box(&s);
+    }));
+
+    let sched = SeesawBuilder::new(3e-3, 4096, 10_000_000, 1.1).seesaw();
+    results.push(bench("schedule.at()", Duration::from_millis(300), || {
+        black_box(sched.at(black_box(5_000_000)));
+    }));
+
+    let mut loader = Loader::new(Corpus::synthetic(500_000, 0), 64, 0);
+    results.push(bench("dataloader next_batch(8×64)", Duration::from_millis(500), || {
+        black_box(loader.next_batch(8));
+    }));
+
+    // --- summary: where does one optimizer step go? ----------------------
+    let get = |name: &str| {
+        results.iter().find(|r| r.name.starts_with(name)).map(|r| r.median_secs()).unwrap_or(0.0)
+    };
+    let grad = get("grad_step");
+    let opt = get("adamw_step");
+    let overhead = get("literal build") + get("grad accumulate") + get("dataloader");
+    println!("\n-- step budget (1 microbatch/step) --");
+    println!("grad_step        {:>10.3} ms", grad * 1e3);
+    println!("adamw_step       {:>10.3} ms", opt * 1e3);
+    println!(
+        "coord overhead   {:>10.3} ms ({:.1}% of step)",
+        overhead * 1e3,
+        100.0 * overhead / (grad + opt + overhead)
+    );
+}

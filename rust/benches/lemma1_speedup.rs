@@ -1,0 +1,16 @@
+//! Bench harness for **Lemma 1**: serial-step counts of cosine vs Seesaw
+//! staircases vs the continuous limit — the 2T/π (36.3%) bound.
+
+use seesaw::experiments::linreg_exps;
+use seesaw::schedule::lemma1_speedup;
+
+fn main() {
+    let rows = linreg_exps::lemma1();
+    linreg_exps::lemma4();
+    let cont = rows.iter().find(|r| r.0 == "continuous").unwrap();
+    println!(
+        "lemma1: continuous-limit reduction {:.2}% (bound {:.2}%)",
+        cont.2 * 100.0,
+        lemma1_speedup() * 100.0
+    );
+}

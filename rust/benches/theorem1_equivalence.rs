@@ -1,0 +1,13 @@
+//! Bench harness for **Theorem 1 / Corollary 1 / Lemma 4 / Assumption 2**
+//! — the full theory-side verification sweep on the exact recursion.
+
+use seesaw::experiments::linreg_exps;
+
+fn main() {
+    let worst = linreg_exps::theorem1();
+    let (on, off) = linreg_exps::corollary1();
+    linreg_exps::lemma4();
+    linreg_exps::assumption2();
+    println!("theorem1: worst equivalence ratio {worst:.3} (O(1) predicted)");
+    println!("corollary1: on-line worst {on:.3}, off-line {off:.3} (separated)");
+}

@@ -1,0 +1,211 @@
+//! Simulated data-parallel collectives (the cluster substitute, DESIGN §3).
+//!
+//! The coordinator shards each global batch across `world_size` simulated
+//! workers; their gradients are combined with a chunked **ring allreduce**
+//! — the same 2·(W−1)-phase schedule real clusters run — implemented over
+//! in-memory shards, with a scoped-thread parallel variant. Byte counters
+//! let the wall-clock model charge communication; unit + property tests
+//! pin the semantics (mean of all shards, bit-exact reproducibility, any
+//! W ≥ 1).
+
+/// Statistics from one collective call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CollectiveStats {
+    /// Total payload bytes moved between workers (both phases).
+    pub bytes_moved: u64,
+    /// Communication phases executed (2·(W−1) for a ring).
+    pub phases: u32,
+}
+
+/// Average `world` gradient shards of equal length into one vector,
+/// following the ring-allreduce schedule: W−1 reduce-scatter phases, then
+/// W−1 all-gather phases over chunks.
+///
+/// Sequential reference implementation — bit-exact, used by tests and as
+/// the default at small world sizes where task overhead dominates.
+pub fn ring_allreduce_mean(shards: &mut [Vec<f32>]) -> CollectiveStats {
+    let w = shards.len();
+    assert!(w > 0, "need at least one worker");
+    let n = shards[0].len();
+    assert!(shards.iter().all(|s| s.len() == n), "shards must be congruent");
+    if w == 1 {
+        return CollectiveStats::default();
+    }
+    // chunk c is owned by worker c % w
+    let chunks = w;
+    let chunk_bounds = |c: usize| {
+        let lo = c * n / chunks;
+        let hi = (c + 1) * n / chunks;
+        (lo, hi)
+    };
+    let mut stats = CollectiveStats::default();
+    // reduce-scatter: after W−1 phases, worker `c` holds the full sum of
+    // chunk `c`.
+    for phase in 0..w - 1 {
+        for c in 0..chunks {
+            // in phase p, worker (c + p + 1) % w sends its copy of chunk c
+            // to the accumulator chain; we model it as adding shard
+            // (c+p+1)%w 's chunk into shard c's chunk.
+            let src = (c + phase + 1) % w;
+            if src == c {
+                continue;
+            }
+            let (lo, hi) = chunk_bounds(c);
+            let (a, b): (&mut Vec<f32>, &Vec<f32>) = unsafe {
+                // disjoint indices: c != src
+                let ptr = shards.as_mut_ptr();
+                (&mut *ptr.add(c), &*ptr.add(src))
+            };
+            for i in lo..hi {
+                a[i] += b[i];
+            }
+            stats.bytes_moved += ((hi - lo) * 4) as u64;
+        }
+        stats.phases += 1;
+    }
+    // normalize owned chunks to the mean
+    for c in 0..chunks {
+        let (lo, hi) = chunk_bounds(c);
+        for i in lo..hi {
+            shards[c][i] /= w as f32;
+        }
+    }
+    // all-gather: broadcast each owned chunk to every other worker.
+    for phase in 0..w - 1 {
+        for c in 0..chunks {
+            let dst = (c + phase + 1) % w;
+            if dst == c {
+                continue;
+            }
+            let (lo, hi) = chunk_bounds(c);
+            let (owner, target): (&Vec<f32>, &mut Vec<f32>) = unsafe {
+                let ptr = shards.as_mut_ptr();
+                (&*ptr.add(c), &mut *ptr.add(dst))
+            };
+            target[lo..hi].copy_from_slice(&owner[lo..hi]);
+            stats.bytes_moved += ((hi - lo) * 4) as u64;
+        }
+        stats.phases += 1;
+    }
+    stats
+}
+
+/// Thread-parallel mean-allreduce: split the vector into chunks and reduce
+/// each on its own scoped thread. Produces the same result as the ring
+/// reference (floating-point order per chunk is fixed: ordered sum over
+/// workers).
+pub fn parallel_allreduce_mean(shards: &[Vec<f32>]) -> (Vec<f32>, CollectiveStats) {
+    let w = shards.len();
+    assert!(w > 0);
+    let n = shards[0].len();
+    if w == 1 {
+        return (shards[0].clone(), CollectiveStats::default());
+    }
+    // at least 64k elements per chunk to amortize thread spawn
+    let threads = (n / 65_536).clamp(1, 8);
+    let chunk = n.div_ceil(threads);
+    let mut result = vec![0f32; n];
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (ci, out_chunk) in result.chunks_mut(chunk).enumerate() {
+            let lo = ci * chunk;
+            handles.push(scope.spawn(move || {
+                let hi = lo + out_chunk.len();
+                for s in shards {
+                    for (o, x) in out_chunk.iter_mut().zip(&s[lo..hi]) {
+                        *o += *x;
+                    }
+                }
+                let inv = 1.0 / shards.len() as f32;
+                for o in out_chunk.iter_mut() {
+                    *o *= inv;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("allreduce thread panicked");
+        }
+    });
+    let stats = CollectiveStats {
+        bytes_moved: (2 * (w - 1) * n * 4 / w.max(1)) as u64 * w as u64,
+        phases: 2 * (w as u32 - 1),
+    };
+    (result, stats)
+}
+
+/// Plain sequential mean over worker gradients — the semantic oracle.
+pub fn mean_reference(shards: &[Vec<f32>]) -> Vec<f32> {
+    let w = shards.len() as f32;
+    let n = shards[0].len();
+    let mut out = vec![0f32; n];
+    for s in shards {
+        for (o, x) in out.iter_mut().zip(s) {
+            *o += *x;
+        }
+    }
+    for o in &mut out {
+        *o /= w;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shards(w: usize, n: usize) -> Vec<Vec<f32>> {
+        (0..w)
+            .map(|r| (0..n).map(|i| ((r * n + i) % 97) as f32 * 0.25 - 3.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn ring_matches_mean_reference() {
+        for &(w, n) in &[(1usize, 16usize), (2, 64), (3, 100), (4, 128), (7, 1000)] {
+            let s = shards(w, n);
+            let want = mean_reference(&s);
+            let mut got = s.clone();
+            ring_allreduce_mean(&mut got);
+            for r in 0..w {
+                for i in 0..n {
+                    assert!(
+                        (got[r][i] - want[i]).abs() < 1e-5,
+                        "w={w} n={n} worker {r} idx {i}: {} vs {}",
+                        got[r][i],
+                        want[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_phase_and_byte_accounting() {
+        let mut s = shards(4, 128);
+        let stats = ring_allreduce_mean(&mut s);
+        assert_eq!(stats.phases, 2 * 3);
+        // each of the 2(W−1) phases moves ~n/W elements per chunk × W chunks
+        assert!(stats.bytes_moved > 0);
+    }
+
+    #[test]
+    fn single_worker_is_noop() {
+        let mut s = shards(1, 32);
+        let before = s.clone();
+        let stats = ring_allreduce_mean(&mut s);
+        assert_eq!(s, before);
+        assert_eq!(stats, CollectiveStats::default());
+    }
+
+    #[test]
+    fn parallel_allreduce_matches_reference() {
+        for &(w, n) in &[(2usize, 8192usize), (4, 100_000), (1, 5)] {
+            let s = shards(w, n);
+            let want = mean_reference(&s);
+            let (got, _) = parallel_allreduce_mean(&s);
+            for i in 0..n {
+                assert!((got[i] - want[i]).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,331 @@
+//! Configuration system: JSON-loadable run descriptions for the launcher.
+//!
+//! A [`TrainConfig`] fully determines a run — model artifacts, joint
+//! LR/batch schedule, optimizer, data, cluster simulation — and is what
+//! `seesaw train --config run.json` consumes. Every experiment harness
+//! builds these programmatically, so a figure is reproducible from its
+//! config set alone. (Parsing uses the from-scratch [`crate::util::json`]
+//! module; the build has no serde.)
+
+use crate::metrics::WallClockModel;
+use crate::schedule::{JointSchedule, ScheduleKind, SeesawBuilder};
+use crate::util::json::Value;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Which optimizer executable the coordinator drives.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptimizerKind {
+    /// AdamW with decoupled weight decay λ (paper default: λ=0).
+    AdamW { weight_decay: f64 },
+    /// Normalized SGD: lr scaled by `1/√(EMA of ‖ḡ‖²)` — eq. 4/7.
+    Nsgd { ema: f64 },
+    /// Plain SGD.
+    Sgd,
+}
+
+impl Default for OptimizerKind {
+    fn default() -> Self {
+        OptimizerKind::AdamW { weight_decay: 0.0 }
+    }
+}
+
+/// Declarative schedule description (maps onto [`ScheduleKind`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScheduleSpec {
+    Constant,
+    Cosine,
+    /// Step-decay approximation of cosine with factor `alpha`.
+    StepDecay { alpha: f64 },
+    /// Seesaw (Algorithm 1) on an underlying factor `alpha`.
+    Seesaw { alpha: f64 },
+    /// General (α, β) member at the cosine cut points of `cut_alpha`.
+    Family { cut_alpha: f64, alpha: f64, beta: f64 },
+    /// Lemma-1 continuous limit.
+    ContinuousSeesaw,
+}
+
+impl Default for ScheduleSpec {
+    fn default() -> Self {
+        ScheduleSpec::Cosine
+    }
+}
+
+/// One training run, end to end.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Model name — selects `artifacts/<model>[_pallas]/`.
+    pub model: String,
+    /// `ref` (XLA-fused oracles) or `pallas` (L1 kernels).
+    pub variant: String,
+    pub artifacts_dir: PathBuf,
+
+    /// Token budget. 0 ⇒ Chinchilla (20 × non-embedding params).
+    pub total_tokens: u64,
+    pub base_lr: f64,
+    /// Base batch size in tokens.
+    pub base_batch_tokens: u64,
+    pub warmup_frac: f64,
+    pub schedule: ScheduleSpec,
+    /// Cap on schedule cuts (cosine crosses α⁻ᵏ infinitely often).
+    pub max_cuts: usize,
+
+    pub optimizer: OptimizerKind,
+    /// z-loss coefficient (paper: 1e-4 when enabled, Appendix E).
+    pub zcoef: f64,
+
+    pub seed: u64,
+    /// Simulated data-parallel workers sharing each global batch.
+    pub world_size: usize,
+    pub eval_every: u64,
+    pub eval_batches: u64,
+    /// Synthetic-corpus length in tokens.
+    pub corpus_tokens: usize,
+    /// Optional text file to train on instead of the synthetic corpus.
+    pub corpus_path: Option<PathBuf>,
+
+    pub wallclock: Option<WallClockModel>,
+    /// Where to write the run CSV (optional).
+    pub out_csv: Option<PathBuf>,
+    /// Checkpoint directory (optional).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Save a checkpoint every N steps (0 = only at end).
+    pub checkpoint_every: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model: "s".into(),
+            variant: "ref".into(),
+            artifacts_dir: "artifacts".into(),
+            total_tokens: 0,
+            base_lr: 3e-3,
+            base_batch_tokens: 4096,
+            warmup_frac: 0.1,
+            schedule: ScheduleSpec::Cosine,
+            max_cuts: 64,
+            optimizer: OptimizerKind::default(),
+            zcoef: 0.0,
+            seed: 0,
+            world_size: 1,
+            eval_every: 50,
+            eval_batches: 8,
+            corpus_tokens: 2_000_000,
+            corpus_path: None,
+            wallclock: None,
+            out_csv: None,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_json_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_json(&text)
+    }
+
+    /// Parse a JSON config; absent keys keep their defaults.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        let mut c = TrainConfig::default();
+        c.model = v.str_or("model", &c.model)?;
+        c.variant = v.str_or("variant", &c.variant)?;
+        if let Some(d) = v.get("artifacts_dir") {
+            c.artifacts_dir = PathBuf::from(d.as_str()?);
+        }
+        c.total_tokens = v.u64_or("total_tokens", c.total_tokens)?;
+        c.base_lr = v.f64_or("base_lr", c.base_lr)?;
+        c.base_batch_tokens = v.u64_or("base_batch_tokens", c.base_batch_tokens)?;
+        c.warmup_frac = v.f64_or("warmup_frac", c.warmup_frac)?;
+        c.max_cuts = v.u64_or("max_cuts", c.max_cuts as u64)? as usize;
+        c.zcoef = v.f64_or("zcoef", c.zcoef)?;
+        c.seed = v.u64_or("seed", c.seed)?;
+        c.world_size = v.u64_or("world_size", c.world_size as u64)? as usize;
+        c.eval_every = v.u64_or("eval_every", c.eval_every)?;
+        c.eval_batches = v.u64_or("eval_batches", c.eval_batches)?;
+        c.corpus_tokens = v.u64_or("corpus_tokens", c.corpus_tokens as u64)? as usize;
+        if let Some(p) = v.get("corpus_path") {
+            c.corpus_path = Some(PathBuf::from(p.as_str()?));
+        }
+        if let Some(p) = v.get("out_csv") {
+            c.out_csv = Some(PathBuf::from(p.as_str()?));
+        }
+        if let Some(p) = v.get("checkpoint_dir") {
+            c.checkpoint_dir = Some(PathBuf::from(p.as_str()?));
+        }
+        c.checkpoint_every = v.u64_or("checkpoint_every", c.checkpoint_every)?;
+        if let Some(s) = v.get("schedule") {
+            c.schedule = parse_schedule(s)?;
+        }
+        if let Some(o) = v.get("optimizer") {
+            c.optimizer = parse_optimizer(o)?;
+        }
+        if let Some(w) = v.get("wallclock") {
+            c.wallclock = Some(WallClockModel {
+                devices: w.u64_or("devices", 64)?,
+                tokens_per_device: w.u64_or("tokens_per_device", 4096)?,
+                step_latency: w.f64_or("step_latency", 1.0)?,
+            });
+        }
+        Ok(c)
+    }
+
+    /// Artifact subdirectory for (model, variant).
+    pub fn model_dir(&self) -> PathBuf {
+        let sub = if self.variant == "ref" {
+            self.model.clone()
+        } else {
+            format!("{}_{}", self.model, self.variant)
+        };
+        self.artifacts_dir.join(sub)
+    }
+
+    /// Resolve the token budget: explicit, or Chinchilla 20·N.
+    pub fn resolve_total_tokens(&self, non_embedding_params: u64) -> u64 {
+        if self.total_tokens > 0 {
+            self.total_tokens
+        } else {
+            20 * non_embedding_params
+        }
+    }
+
+    /// Build the joint schedule over `total` tokens.
+    pub fn build_schedule(&self, total: u64) -> JointSchedule {
+        let warmup = (total as f64 * self.warmup_frac) as u64;
+        let builder = |alpha: f64| {
+            SeesawBuilder::new(self.base_lr, self.base_batch_tokens, total, alpha)
+                .warmup(warmup)
+                .max_cuts(self.max_cuts)
+        };
+        match &self.schedule {
+            ScheduleSpec::Constant => JointSchedule::new(
+                self.base_lr,
+                self.base_batch_tokens,
+                warmup,
+                total,
+                ScheduleKind::Constant,
+            ),
+            ScheduleSpec::Cosine => JointSchedule::new(
+                self.base_lr,
+                self.base_batch_tokens,
+                warmup,
+                total,
+                ScheduleKind::CosineContinuous,
+            ),
+            ScheduleSpec::StepDecay { alpha } => builder(*alpha).step_decay(),
+            ScheduleSpec::Seesaw { alpha } => builder(*alpha).seesaw(),
+            ScheduleSpec::Family { cut_alpha, alpha, beta } => {
+                builder(*cut_alpha).family(*alpha, *beta)
+            }
+            ScheduleSpec::ContinuousSeesaw => JointSchedule::new(
+                self.base_lr,
+                self.base_batch_tokens,
+                warmup,
+                total,
+                ScheduleKind::ContinuousSeesaw,
+            ),
+        }
+    }
+}
+
+fn parse_schedule(v: &Value) -> Result<ScheduleSpec> {
+    let kind = v.str_or("kind", "cosine")?;
+    Ok(match kind.as_str() {
+        "constant" => ScheduleSpec::Constant,
+        "cosine" => ScheduleSpec::Cosine,
+        "step_decay" => ScheduleSpec::StepDecay { alpha: v.f64_or("alpha", 2.0)? },
+        "seesaw" => ScheduleSpec::Seesaw { alpha: v.f64_or("alpha", 1.1)? },
+        "family" => ScheduleSpec::Family {
+            cut_alpha: v.f64_or("cut_alpha", 2.0)?,
+            alpha: v.f64_or("alpha", 2.0)?,
+            beta: v.f64_or("beta", 1.0)?,
+        },
+        "continuous_seesaw" => ScheduleSpec::ContinuousSeesaw,
+        other => bail!("unknown schedule kind `{other}`"),
+    })
+}
+
+fn parse_optimizer(v: &Value) -> Result<OptimizerKind> {
+    let kind = v.str_or("kind", "adamw")?;
+    Ok(match kind.as_str() {
+        "adamw" | "adam_w" => OptimizerKind::AdamW { weight_decay: v.f64_or("weight_decay", 0.0)? },
+        "nsgd" => OptimizerKind::Nsgd { ema: v.f64_or("ema", 0.95)? },
+        "sgd" => OptimizerKind::Sgd,
+        other => bail!("unknown optimizer kind `{other}`"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = TrainConfig::default();
+        assert_eq!(c.model, "s");
+        assert_eq!(c.variant, "ref");
+        assert_eq!(c.base_batch_tokens, 4096);
+        assert!(matches!(c.schedule, ScheduleSpec::Cosine));
+        assert!(matches!(c.optimizer, OptimizerKind::AdamW { .. }));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let text = r#"{
+            "model": "m",
+            "variant": "pallas",
+            "base_lr": 0.001,
+            "total_tokens": 500000,
+            "schedule": {"kind": "seesaw", "alpha": 1.1},
+            "optimizer": {"kind": "adamw", "weight_decay": 0.0001},
+            "wallclock": {"devices": 8, "tokens_per_device": 1024, "step_latency": 2.0}
+        }"#;
+        let c = TrainConfig::from_json(text).unwrap();
+        assert_eq!(c.model, "m");
+        assert_eq!(c.model_dir(), PathBuf::from("artifacts/m_pallas"));
+        assert!(matches!(c.schedule, ScheduleSpec::Seesaw { alpha } if (alpha - 1.1).abs() < 1e-12));
+        assert!(matches!(c.optimizer, OptimizerKind::AdamW { weight_decay } if weight_decay == 1e-4));
+        assert_eq!(c.wallclock.unwrap().devices, 8);
+        assert_eq!(c.base_lr, 0.001);
+    }
+
+    #[test]
+    fn empty_json_gives_defaults() {
+        let c = TrainConfig::from_json("{}").unwrap();
+        assert_eq!(c.base_batch_tokens, TrainConfig::default().base_batch_tokens);
+    }
+
+    #[test]
+    fn unknown_kind_is_error() {
+        assert!(TrainConfig::from_json(r#"{"schedule": {"kind": "bogus"}}"#).is_err());
+        assert!(TrainConfig::from_json(r#"{"optimizer": {"kind": "bogus"}}"#).is_err());
+    }
+
+    #[test]
+    fn chinchilla_budget() {
+        let mut c = TrainConfig::default();
+        c.total_tokens = 0;
+        assert_eq!(c.resolve_total_tokens(100_000), 2_000_000);
+        c.total_tokens = 77;
+        assert_eq!(c.resolve_total_tokens(100_000), 77);
+    }
+
+    #[test]
+    fn schedule_spec_builds_matching_kind() {
+        let mut c = TrainConfig::default();
+        c.schedule = ScheduleSpec::Seesaw { alpha: 2.0 };
+        let s = c.build_schedule(1_000_000);
+        match s.kind {
+            ScheduleKind::BatchRamp { alpha, beta, .. } => {
+                assert!((alpha - 2f64.sqrt()).abs() < 1e-12);
+                assert!((beta - 2.0).abs() < 1e-12);
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+        assert_eq!(s.warmup_tokens, 100_000);
+    }
+}

@@ -1,0 +1,175 @@
+//! Binary checkpoints: training state + data-loader cursor, so a resumed
+//! run continues the exact token stream (bit-identical loss curves across
+//! a save/restore boundary — asserted in the integration tests).
+//!
+//! Format: little-endian; magic `SEESAWCK`, version u32, scalar state,
+//! then 3 leaf groups (params/m/v), each as `count:u64 (len:u64 f32…)*`.
+
+use anyhow::{anyhow, ensure, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SEESAWCK";
+const VERSION: u32 = 1;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub tokens: u64,
+    pub gnorm_ema: f64,
+    pub flops: f64,
+    pub serial_time: f64,
+    pub data_cursor: u64,
+    pub params: Vec<Vec<f32>>,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.as_ref().with_extension("tmp");
+        {
+            let mut w = BufWriter::new(std::fs::File::create(&tmp)?);
+            w.write_all(MAGIC)?;
+            w.write_all(&VERSION.to_le_bytes())?;
+            for x in [self.step, self.tokens, self.data_cursor] {
+                w.write_all(&x.to_le_bytes())?;
+            }
+            for x in [self.gnorm_ema, self.flops, self.serial_time] {
+                w.write_all(&x.to_le_bytes())?;
+            }
+            for group in [&self.params, &self.m, &self.v] {
+                w.write_all(&(group.len() as u64).to_le_bytes())?;
+                for leaf in group.iter() {
+                    w.write_all(&(leaf.len() as u64).to_le_bytes())?;
+                    // bulk-copy the f32 payload
+                    let bytes: &[u8] = unsafe {
+                        std::slice::from_raw_parts(leaf.as_ptr() as *const u8, leaf.len() * 4)
+                    };
+                    w.write_all(bytes)?;
+                }
+            }
+            w.flush()?;
+        }
+        std::fs::rename(&tmp, path.as_ref())?; // atomic replace
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut r = BufReader::new(std::fs::File::open(path.as_ref())?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        ensure!(&magic == MAGIC, "not a seesaw checkpoint");
+        let mut u32b = [0u8; 4];
+        r.read_exact(&mut u32b)?;
+        let version = u32::from_le_bytes(u32b);
+        ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        let mut u64b = [0u8; 8];
+        let mut read_u64 = |r: &mut BufReader<std::fs::File>| -> Result<u64> {
+            r.read_exact(&mut u64b)?;
+            Ok(u64::from_le_bytes(u64b))
+        };
+        let step = read_u64(&mut r)?;
+        let tokens = read_u64(&mut r)?;
+        let data_cursor = read_u64(&mut r)?;
+        let mut f64b = [0u8; 8];
+        let mut read_f64 = |r: &mut BufReader<std::fs::File>| -> Result<f64> {
+            r.read_exact(&mut f64b)?;
+            Ok(f64::from_le_bytes(f64b))
+        };
+        let gnorm_ema = read_f64(&mut r)?;
+        let flops = read_f64(&mut r)?;
+        let serial_time = read_f64(&mut r)?;
+        let read_group = |r: &mut BufReader<std::fs::File>| -> Result<Vec<Vec<f32>>> {
+            let mut b8 = [0u8; 8];
+            r.read_exact(&mut b8)?;
+            let count = u64::from_le_bytes(b8) as usize;
+            ensure!(count < 1_000_000, "absurd leaf count {count}");
+            let mut group = Vec::with_capacity(count);
+            for _ in 0..count {
+                r.read_exact(&mut b8)?;
+                let len = u64::from_le_bytes(b8) as usize;
+                ensure!(len < 1 << 32, "absurd leaf length {len}");
+                let mut leaf = vec![0f32; len];
+                let bytes: &mut [u8] = unsafe {
+                    std::slice::from_raw_parts_mut(leaf.as_mut_ptr() as *mut u8, len * 4)
+                };
+                r.read_exact(bytes)?;
+                group.push(leaf);
+            }
+            Ok(group)
+        };
+        let params = read_group(&mut r)?;
+        let m = read_group(&mut r)?;
+        let v = read_group(&mut r)?;
+        let mut rest = Vec::new();
+        r.read_to_end(&mut rest)?;
+        if !rest.is_empty() {
+            return Err(anyhow!("trailing bytes in checkpoint"));
+        }
+        Ok(Self { step, tokens, gnorm_ema, flops, serial_time, data_cursor, params, m, v })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            step: 42,
+            tokens: 9001,
+            gnorm_ema: 0.125,
+            flops: 1e12,
+            serial_time: 3.5,
+            data_cursor: 77,
+            params: vec![vec![1.0, -2.0, 3.5], vec![0.0; 5]],
+            m: vec![vec![0.1, 0.2, 0.3], vec![1.0; 5]],
+            v: vec![vec![9.0, 8.0, 7.0], vec![2.0; 5]],
+        }
+    }
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let dir = crate::util::TempDir::new("ckpt").unwrap();
+        let path = dir.path().join("ck/latest.ckpt");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn rejects_garbage_and_truncation() {
+        let dir = crate::util::TempDir::new("ckpt").unwrap();
+        let path = dir.path().join("x.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        // truncated real checkpoint
+        let good = dir.path().join("good.ckpt");
+        sample().save(&good).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        // trailing junk
+        let mut extended = bytes.clone();
+        extended.extend_from_slice(b"JUNK");
+        std::fs::write(&path, &extended).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn save_is_atomic_replace() {
+        let dir = crate::util::TempDir::new("ckpt").unwrap();
+        let path = dir.path().join("latest.ckpt");
+        sample().save(&path).unwrap();
+        let mut second = sample();
+        second.step = 43;
+        second.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().step, 43);
+        assert!(!path.with_extension("tmp").exists());
+    }
+}

@@ -1,0 +1,277 @@
+//! L3 training coordinator — the paper's system contribution wired end to
+//! end: the joint LR/batch schedule drives a data-parallel training loop
+//! whose batch ramps are realized by *re-planning microbatches*, never by
+//! re-compiling (DESIGN.md §2).
+//!
+//! Per optimizer step:
+//! 1. query the [`JointSchedule`] at the current token count → `(lr, B)`;
+//! 2. plan `B / micro_tokens` microbatches and shard them across
+//!    `world_size` simulated workers;
+//! 3. each worker accumulates fwd+bwd gradients over its microbatches
+//!    (`grad_step` executable);
+//! 4. ring-allreduce the worker sums, average to the global gradient;
+//! 5. apply the optimizer executable (`adamw_step` / `sgd_step` — NSGD is
+//!    sgd with `lr/√(EMA‖ḡ‖²)`, eq. 7);
+//! 6. log metrics (loss, z-loss, grad norm, FLOPs, modeled serial time).
+
+mod checkpoint;
+
+pub use checkpoint::Checkpoint;
+
+use crate::collective::ring_allreduce_mean;
+use crate::config::{OptimizerKind, TrainConfig};
+use crate::data::{Corpus, Loader};
+use crate::metrics::{RunLog, StepRecord, WallClockModel};
+use crate::runtime::ModelRuntime;
+use crate::schedule::JointSchedule;
+use anyhow::{ensure, Result};
+
+/// Mutable training state: parameters + optimizer moments + clocks.
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+    pub m: Vec<xla::Literal>,
+    pub v: Vec<xla::Literal>,
+    pub step: u64,
+    pub tokens: u64,
+    /// EMA of ‖ḡ‖² — the NSGD denominator estimate (Assumption 2).
+    pub gnorm_ema: f64,
+    pub flops: f64,
+    pub serial_time: f64,
+}
+
+/// The training coordinator.
+pub struct Trainer {
+    pub rt: ModelRuntime,
+    pub cfg: TrainConfig,
+    pub schedule: JointSchedule,
+    pub loader: Loader,
+    pub wall: WallClockModel,
+    pub total_tokens: u64,
+}
+
+impl Trainer {
+    /// Load artifacts + corpus and resolve the schedule.
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        let rt = ModelRuntime::load(cfg.model_dir())?;
+        let total = cfg.resolve_total_tokens(rt.manifest.non_embedding_params);
+        let schedule = cfg.build_schedule(total);
+        let corpus = match &cfg.corpus_path {
+            Some(p) => Corpus::from_text(&std::fs::read_to_string(p)?),
+            None => Corpus::synthetic(cfg.corpus_tokens, cfg.seed),
+        };
+        let loader = Loader::new(corpus, rt.seq_len(), cfg.seed.wrapping_add(1));
+        let wall = cfg.wallclock.unwrap_or_default();
+        Ok(Self { rt, cfg, schedule, loader, wall, total_tokens: total })
+    }
+
+    /// Fresh state (params from the `init` executable).
+    pub fn init_state(&self) -> Result<TrainState> {
+        Ok(TrainState {
+            params: self.rt.init(self.cfg.seed as i32)?,
+            m: self.rt.zeros_like_params()?,
+            v: self.rt.zeros_like_params()?,
+            step: 0,
+            tokens: 0,
+            gnorm_ema: 0.0,
+            flops: 0.0,
+            serial_time: 0.0,
+        })
+    }
+
+    /// Round a scheduled batch (tokens) to whole microbatches ≥ 1.
+    pub fn plan_microbatches(&self, batch_tokens: u64) -> u64 {
+        (batch_tokens as f64 / self.rt.micro_tokens() as f64).round().max(1.0) as u64
+    }
+
+    /// One optimizer step. Returns the step's record.
+    pub fn train_step(&mut self, state: &mut TrainState) -> Result<StepRecord> {
+        let point = self.schedule.at(state.tokens);
+        let n_micro = self.plan_microbatches(point.batch_tokens);
+        let batch_tokens = n_micro * self.rt.micro_tokens();
+        let world = self.cfg.world_size.max(1).min(n_micro as usize);
+        let b = self.rt.microbatch();
+        let leaf_elems = self.rt.manifest.total_elements();
+
+        // --- accumulate gradients, sharded over simulated workers -------
+        let mut worker_sums: Vec<Vec<f32>> = vec![vec![0f32; leaf_elems]; world];
+        let mut micro_per_worker = vec![0u64; world];
+        let mut ce_sum = 0f64;
+        let mut zsq_sum = 0f64;
+        for i in 0..n_micro {
+            let w = (i as usize) % world;
+            let (tokens, targets) = self.loader.next_batch(b);
+            let out = self.rt.grad_step(&state.params, &tokens, &targets, self.cfg.zcoef as f32)?;
+            ce_sum += out.ce as f64;
+            zsq_sum += out.zsq as f64;
+            let sink = &mut worker_sums[w];
+            let mut off = 0usize;
+            for g in &out.grads {
+                for (dst, src) in sink[off..off + g.len()].iter_mut().zip(g) {
+                    *dst += *src;
+                }
+                off += g.len();
+            }
+            micro_per_worker[w] += 1;
+        }
+
+        // --- combine: ring allreduce of worker sums, then divide --------
+        let mean_grad: Vec<f32> = if world > 1 {
+            ring_allreduce_mean(&mut worker_sums);
+            // allreduce averaged the *sums* over workers; rescale to the
+            // mean over microbatches: mean_g = (Σ_w sum_w)/n = avg_w·W/n.
+            let scale = world as f32 / n_micro as f32;
+            worker_sums[0].iter().map(|x| x * scale).collect()
+        } else {
+            let inv = 1.0 / n_micro as f32;
+            worker_sums.pop().unwrap().into_iter().map(|x| x * inv).collect()
+        };
+        let gnorm_sq: f64 = mean_grad.iter().map(|&x| (x as f64) * (x as f64)).sum();
+
+        // --- optimizer update -------------------------------------------
+        let grads = self.split_leaves(&mean_grad)?;
+        let grad_lits = self.rt.grads_to_literals(&grads)?;
+        state.step += 1;
+        match self.cfg.optimizer {
+            OptimizerKind::AdamW { weight_decay } => {
+                let beta1 = self.rt.manifest.adam.beta1;
+                let beta2 = self.rt.manifest.adam.beta2;
+                let t = state.step as i32;
+                let c1 = 1.0 / (1.0 - beta1.powi(t));
+                let c2 = 1.0 / (1.0 - beta2.powi(t));
+                let (p, m, v) = self.rt.adamw_step(
+                    &state.params,
+                    &grad_lits,
+                    &state.m,
+                    &state.v,
+                    point.lr as f32,
+                    weight_decay as f32,
+                    c1 as f32,
+                    c2 as f32,
+                )?;
+                state.params = p;
+                state.m = m;
+                state.v = v;
+            }
+            OptimizerKind::Nsgd { ema } => {
+                state.gnorm_ema = if state.step == 1 {
+                    gnorm_sq
+                } else {
+                    ema * state.gnorm_ema + (1.0 - ema) * gnorm_sq
+                };
+                let lr_eff = point.lr / state.gnorm_ema.sqrt().max(1e-12);
+                state.params = self.rt.sgd_step(&state.params, &grad_lits, lr_eff as f32)?;
+            }
+            OptimizerKind::Sgd => {
+                state.params = self.rt.sgd_step(&state.params, &grad_lits, point.lr as f32)?;
+            }
+        }
+
+        // --- bookkeeping -------------------------------------------------
+        let tokens_before = state.tokens;
+        state.tokens += batch_tokens;
+        state.flops += self.rt.manifest.flops_per_token as f64 * batch_tokens as f64;
+        state.serial_time += self.wall.step_time(batch_tokens);
+        Ok(StepRecord {
+            step: state.step,
+            tokens: tokens_before,
+            lr: point.lr,
+            batch_tokens,
+            ce: ce_sum / n_micro as f64,
+            zloss: zsq_sum / n_micro as f64,
+            gnorm_sq,
+            flops: state.flops,
+            serial_time: state.serial_time,
+            val_ce: None,
+        })
+    }
+
+    /// Average validation CE over `self.cfg.eval_batches` held-out batches.
+    pub fn evaluate(&self, state: &TrainState) -> Result<f64> {
+        let b = self.rt.microbatch();
+        let n = self.cfg.eval_batches.max(1);
+        let mut sum = 0f64;
+        for i in 0..n {
+            let (tokens, targets) = self.loader.val_batch(i, b);
+            let (ce, _) = self.rt.eval_step(&state.params, &tokens, &targets)?;
+            sum += ce as f64;
+        }
+        Ok(sum / n as f64)
+    }
+
+    /// Full training run; returns the complete log.
+    pub fn run(&mut self) -> Result<RunLog> {
+        let mut state = match self.maybe_resume()? {
+            Some(s) => s,
+            None => self.init_state()?,
+        };
+        let mut log = RunLog::new(format!("{}-{:?}", self.cfg.model, self.cfg.schedule));
+        while state.tokens < self.total_tokens {
+            let mut rec = self.train_step(&mut state)?;
+            let is_last = state.tokens >= self.total_tokens;
+            if is_last || (self.cfg.eval_every > 0 && state.step % self.cfg.eval_every == 0) {
+                rec.val_ce = Some(self.evaluate(&state)?);
+            }
+            if self.cfg.checkpoint_every > 0 && state.step % self.cfg.checkpoint_every == 0 {
+                self.save_checkpoint(&state)?;
+            }
+            log.push(rec);
+        }
+        if self.cfg.checkpoint_dir.is_some() {
+            self.save_checkpoint(&state)?;
+        }
+        if let Some(path) = &self.cfg.out_csv {
+            log.write_csv(path)?;
+        }
+        Ok(log)
+    }
+
+    fn split_leaves(&self, flat: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(self.rt.manifest.params.len());
+        let mut off = 0usize;
+        for spec in &self.rt.manifest.params {
+            let n = spec.elements();
+            out.push(flat[off..off + n].to_vec());
+            off += n;
+        }
+        ensure!(off == flat.len(), "leaf split mismatch");
+        Ok(out)
+    }
+
+    /// Persist the current state to `<checkpoint_dir>/latest.ckpt`
+    /// (no-op when no checkpoint dir is configured).
+    pub fn save_checkpoint(&self, state: &TrainState) -> Result<()> {
+        let Some(dir) = &self.cfg.checkpoint_dir else { return Ok(()) };
+        let ck = Checkpoint {
+            step: state.step,
+            tokens: state.tokens,
+            gnorm_ema: state.gnorm_ema,
+            flops: state.flops,
+            serial_time: state.serial_time,
+            data_cursor: self.loader.cursor,
+            params: self.rt.to_host(&state.params)?,
+            m: self.rt.to_host(&state.m)?,
+            v: self.rt.to_host(&state.v)?,
+        };
+        ck.save(dir.join("latest.ckpt"))
+    }
+
+    fn maybe_resume(&mut self) -> Result<Option<TrainState>> {
+        let Some(dir) = &self.cfg.checkpoint_dir else { return Ok(None) };
+        let path = dir.join("latest.ckpt");
+        if !path.exists() {
+            return Ok(None);
+        }
+        let ck = Checkpoint::load(&path)?;
+        self.loader.cursor = ck.data_cursor;
+        Ok(Some(TrainState {
+            params: self.rt.from_host(&ck.params)?,
+            m: self.rt.from_host(&ck.m)?,
+            v: self.rt.from_host(&ck.v)?,
+            step: ck.step,
+            tokens: ck.tokens,
+            gnorm_ema: ck.gnorm_ema,
+            flops: ck.flops,
+            serial_time: ck.serial_time,
+        }))
+    }
+}

@@ -1,0 +1,365 @@
+//! Theory-side experiment harnesses on the exact linreg recursion.
+//!
+//! These verify the paper's *claims* rather than re-measure its cluster:
+//! Theorem 1 / Corollary 1 equivalence bands, the Figure 2 equivalence
+//! line + Lemma 4 divergence, the Figure 3 past-CBS failure, the
+//! Assumption 2 decomposition, and the Lemma 1 serial-step integral.
+
+use super::results_dir;
+use crate::linreg::nsgd::{divergence_phase, effective_lr_assumption2, simulate_ramp};
+use crate::linreg::recursion::{PhasedSchedule, Problem};
+use crate::linreg::spectrum::Spectrum;
+use crate::metrics::print_table;
+use crate::schedule::seesaw::table2_grid;
+use crate::schedule::{JointSchedule, ScheduleKind};
+use std::io::Write;
+
+fn standard_problem() -> Problem {
+    Problem::new(Spectrum::PowerLaw { dim: 256, exponent: 1.0 }, 1.0, 1.0)
+}
+
+/// Theorem 1: SGD schedules with equal α·β are risk-equivalent within a
+/// constant factor. Prints per-phase risk ratios for several (α, β) pairs
+/// and spectra. Returns the worst ratio observed (should stay O(1)).
+pub fn theorem1() -> f64 {
+    let spectra = [
+        ("isotropic-64", Spectrum::Isotropic { dim: 64 }),
+        ("powerlaw-1.0", Spectrum::PowerLaw { dim: 256, exponent: 1.0 }),
+        ("powerlaw-2.0", Spectrum::PowerLaw { dim: 256, exponent: 2.0 }),
+        ("spiked", Spectrum::Spiked { dim: 128, head: 8, tail: 0.01 }),
+    ];
+    // all pairs share α·β = 4
+    let pairs = [(4.0, 1.0), (2.0, 2.0), (1.0, 4.0)];
+    let mut rows = Vec::new();
+    let mut worst: f64 = 1.0;
+    let mut csv = String::from("spectrum,alpha,beta,phase,risk,ratio_vs_first\n");
+    for (sname, spec) in spectra {
+        let p = Problem::new(spec, 1.0, 1.0);
+        let eta = p.eta_max();
+        let runs: Vec<Vec<f64>> = pairs
+            .iter()
+            .map(|&(a, b)| {
+                PhasedSchedule { eta0: eta, b0: 8, alpha: a, beta: b, phase_samples: vec![200_000; 5] }
+                    .run(&p)
+            })
+            .collect();
+        for (pi, &(a, b)) in pairs.iter().enumerate() {
+            for (k, r) in runs[pi].iter().enumerate() {
+                let ratio = r / runs[0][k];
+                worst = worst.max(ratio.max(1.0 / ratio));
+                csv.push_str(&format!("{sname},{a},{b},{k},{r:.6e},{ratio:.4}\n"));
+            }
+            rows.push(vec![
+                sname.to_string(),
+                format!("{a:.2}"),
+                format!("{b:.2}"),
+                format!("{:.3e}", runs[pi].last().unwrap()),
+                format!("{:.3}", runs[pi].last().unwrap() / runs[0].last().unwrap()),
+            ]);
+        }
+    }
+    print_table(
+        "Theorem 1 — SGD equivalence (equal α·β ⇒ risk within constant factor)",
+        &["spectrum", "alpha", "beta", "final risk", "ratio vs (4,1)"],
+        &rows,
+    );
+    write_csv("theorem1.csv", &csv);
+    println!("worst per-phase risk ratio: {worst:.3} (Theorem 1 predicts an O(1) constant)");
+    worst
+}
+
+/// Corollary 1: NSGD equivalence along α·√β = const; members off the line
+/// separate. Returns (max on-line ratio, min off-line ratio).
+pub fn corollary1() -> (f64, f64) {
+    let p = standard_problem();
+    let eta = 0.3 * p.eta_max() * (p.sigma2 * p.spectrum.trace()).sqrt();
+    let mk = |alpha: f64, beta: f64| PhasedSchedule {
+        eta0: eta,
+        b0: 8,
+        alpha,
+        beta,
+        phase_samples: vec![150_000; 5],
+    };
+    // on the line α√β = 2
+    let on_line = [(2.0, 1.0), (2f64.powf(0.75), 2f64.sqrt()), (2f64.sqrt(), 2.0)];
+    // far off the line (much less decay)
+    let off = mk(1.12, 1.0);
+    let base = mk(2.0, 1.0).run_nsgd(&p, true);
+    let mut rows = Vec::new();
+    let mut worst_on: f64 = 1.0;
+    for &(a, b) in &on_line {
+        let r = mk(a, b).run_nsgd(&p, true);
+        let ratio = r.last().unwrap() / base.last().unwrap();
+        worst_on = worst_on.max(ratio.max(1.0 / ratio));
+        rows.push(vec![format!("{a:.3}"), format!("{b:.3}"), "on".into(), format!("{:.3e}", r.last().unwrap()), format!("{ratio:.3}")]);
+    }
+    let r_off = off.run_nsgd(&p, true);
+    let off_ratio = r_off.last().unwrap() / base.last().unwrap();
+    // separation factor: how far outside the on-line band the off member is
+
+    rows.push(vec!["1.120".into(), "1.000".into(), "off".into(), format!("{:.3e}", r_off.last().unwrap()), format!("{off_ratio:.3}")]);
+    print_table(
+        "Corollary 1 — NSGD equivalence along α·√β = 2",
+        &["alpha", "beta", "line", "final risk", "ratio vs (2,1)"],
+        &rows,
+    );
+    (worst_on, off_ratio)
+}
+
+/// True maximum-stable SGD learning rate for the recursion at batch `b`:
+/// the contraction bound `η < 2/(λ₁(1+1/B) + Tr(H)/B)`.
+pub fn eta_stable(p: &Problem, b: u64) -> f64 {
+    let lmax = p.spectrum.eigenvalues().into_iter().fold(0.0f64, f64::max);
+    let bf = b as f64;
+    2.0 / (lmax * (1.0 + 1.0 / bf) + p.spectrum.trace() / bf)
+}
+
+/// Figure 2 + Table 2: the (α,β) grid on α√β = 2. Equivalent members track
+/// the (2,1) baseline; per Lemma 4, members with α<√β destabilize. Rows:
+/// (α, β, verdict, final risk, diverged?).
+pub fn figure2() -> Vec<(f64, f64, bool)> {
+    let p = standard_problem();
+    let b0 = 8u64;
+    // start the NSGD effective lr at 30% of the true stability threshold:
+    // Lemma-4 divergent members (×√β/α per phase) cross it within ~4 phases.
+    let eff0 = 0.3 * eta_stable(&p, b0);
+    let eta = eff0 * (p.sigma2 * p.spectrum.trace()).sqrt() / (b0 as f64).sqrt();
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    let mut csv = String::from("alpha,beta,verdict,phase,risk\n");
+    for (a, b, verdict) in table2_grid() {
+        let (diverged, risks) = simulate_ramp(&p, eta, b0, a, b, 12, 120_000);
+        for (k, r) in risks.iter().enumerate() {
+            csv.push_str(&format!("{a},{b},{verdict:?},{k},{r:.6e}\n"));
+        }
+        rows.push(vec![
+            format!("{a:.3}"),
+            format!("{b:.3}"),
+            format!("{verdict:?}"),
+            format!("{:.3e}", risks.last().unwrap()),
+            if diverged { "DIVERGED".into() } else { "stable".into() },
+        ]);
+        out.push((a, b, diverged));
+    }
+    print_table(
+        "Figure 2 / Table 2 — equivalence line α√β=2 (NSGD, exact recursion)",
+        &["alpha", "beta", "Lemma 4", "final risk", "outcome"],
+        &rows,
+    );
+    write_csv("figure2_linreg.csv", &csv);
+    out
+}
+
+/// Figure 3 (theory side): past the CBS, neither Seesaw nor constant-lr
+/// ramp matches cosine-style decay. Compares three schedules at growing
+/// base batch; returns (B, gap_seesaw, gap_const_ramp) rows where gap =
+/// final risk / baseline final risk.
+pub fn figure3() -> Vec<(u64, f64, f64)> {
+    let p = standard_problem();
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    let mut csv = String::from("batch,schedule,final_risk,gap\n");
+    for &b0 in &[8u64, 64, 512, 4096, 32768] {
+        let eta = 0.45 * p.eta_max() * (p.sigma2 * p.spectrum.trace()).sqrt();
+        let samples = vec![400_000u64; 6];
+        // baseline: lr decay at fixed batch (the "cosine" proxy), exact denominator
+        let base = PhasedSchedule { eta0: eta, b0, alpha: 2.0, beta: 1.0, phase_samples: samples.clone() }
+            .run_nsgd(&p, false);
+        // Seesaw: (√2, 2)
+        let seesaw = PhasedSchedule { eta0: eta, b0, alpha: 2f64.sqrt(), beta: 2.0, phase_samples: samples.clone() }
+            .run_nsgd(&p, false);
+        // constant lr, ramp ×2 (Figure 3 orange)
+        let konst = PhasedSchedule { eta0: eta, b0, alpha: 1.0, beta: 2.0, phase_samples: samples }
+            .run_nsgd(&p, false);
+        let gap_s = seesaw.last().unwrap() / base.last().unwrap();
+        let gap_c = konst.last().unwrap() / base.last().unwrap();
+        csv.push_str(&format!("{b0},baseline,{:.6e},1.0\n", base.last().unwrap()));
+        csv.push_str(&format!("{b0},seesaw,{:.6e},{gap_s:.4}\n", seesaw.last().unwrap()));
+        csv.push_str(&format!("{b0},const_ramp,{:.6e},{gap_c:.4}\n", konst.last().unwrap()));
+        rows.push(vec![
+            b0.to_string(),
+            format!("{:.3e}", base.last().unwrap()),
+            format!("{gap_s:.3}"),
+            format!("{gap_c:.3}"),
+        ]);
+        out.push((b0, gap_s, gap_c));
+    }
+    print_table(
+        "Figure 3 — past-CBS failure (exact NSGD denominator): gap vs baseline grows with B",
+        &["batch", "baseline risk", "seesaw gap", "const-lr ramp gap"],
+        &rows,
+    );
+    write_csv("figure3_linreg.csv", &csv);
+    out
+}
+
+/// Assumption 2 diagnostics: share of the additive-noise term in E‖g‖²
+/// when each batch size trains on the SAME token budget (the paper's
+/// regime): big batches take few steps, the bias/"mean" term survives and
+/// the additive term — which scales as 1/B — stops dominating.
+pub fn assumption2() -> Vec<(u64, f64, f64)> {
+    let p = standard_problem();
+    let eta = p.eta_max();
+    let budget = 2_000_000u64;
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for &b in &[8u64, 64, 512, 4096, 32768, 262144] {
+        let mut mid = p.iter();
+        mid.run(eta, b, (budget / 2 / b).max(1));
+        let mut end = p.iter();
+        end.run(eta, b, (budget / b).max(1));
+        let fm = mid.grad_norm_sq(b).additive / mid.grad_norm_sq(b).total();
+        let fe = end.grad_norm_sq(b).additive / end.grad_norm_sq(b).total();
+        rows.push(vec![b.to_string(), format!("{fm:.3}"), format!("{fe:.3}")]);
+        out.push((b, fm, fe));
+    }
+    print_table(
+        "Assumption 2 — additive-noise share of E‖g‖² at equal token budget (fails at large B)",
+        &["batch", "mid-train share", "end-train share"],
+        &rows,
+    );
+    out
+}
+
+/// Lemma 1: serial-step counts of cosine vs discrete Seesaw vs the
+/// continuous limit, at several staircase factors α.
+pub fn lemma1() -> Vec<(String, u64, f64)> {
+    let total = 20_000_000u64;
+    let base_batch = 4_096u64;
+    let cosine = JointSchedule::new(1.0, base_batch, 0, total, ScheduleKind::CosineContinuous);
+    let t = cosine.serial_steps();
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    out.push(("cosine".to_string(), t, 0.0));
+    rows.push(vec!["cosine (baseline)".into(), t.to_string(), "0.0%".into()]);
+    for alpha in [2.0, 1.5, 1.2, 1.1, 1.05] {
+        let b = crate::schedule::SeesawBuilder::new(1.0, base_batch, total, alpha).warmup(0).max_cuts(256);
+        let s = b.seesaw().serial_steps();
+        let red = 1.0 - s as f64 / t as f64;
+        rows.push(vec![format!("seesaw α={alpha}"), s.to_string(), format!("{:.1}%", red * 100.0)]);
+        out.push((format!("seesaw-{alpha}"), s, red));
+    }
+    let cont = JointSchedule::new(1.0, base_batch, 0, total, ScheduleKind::ContinuousSeesaw);
+    let s = cont.serial_steps();
+    let red = 1.0 - s as f64 / t as f64;
+    rows.push(vec!["continuous limit".into(), s.to_string(), format!("{:.1}%", red * 100.0)]);
+    rows.push(vec!["Lemma 1 bound".into(), format!("{}", (t as f64 * 2.0 / std::f64::consts::PI) as u64), "36.3%".into()]);
+    out.push(("continuous".to_string(), s, red));
+    print_table(
+        "Lemma 1 — serial steps: cosine vs Seesaw (→ 2T/π)",
+        &["schedule", "serial steps", "reduction"],
+        &rows,
+    );
+    out
+}
+
+/// Lemma 4 divergence-phase table: predicted first unstable phase for the
+/// Table 2 grid at a given headroom between η̃₀ and η_max.
+pub fn lemma4() -> Vec<(f64, f64, Option<u32>)> {
+    let headroom = 8.0; // η_max / η̃₀
+    let eta0 = 1.0;
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for (a, b, verdict) in table2_grid() {
+        let k = divergence_phase(eta0, a, b, eta0 * headroom);
+        rows.push(vec![
+            format!("{a:.3}"),
+            format!("{b:.3}"),
+            format!("{verdict:?}"),
+            k.map(|x| x.to_string()).unwrap_or_else(|| "never".into()),
+        ]);
+        out.push((a, b, k));
+    }
+    print_table(
+        &format!("Lemma 4 — first divergent phase (η_max/η̃₀ = {headroom})"),
+        &["alpha", "beta", "verdict", "diverges at phase"],
+        &rows,
+    );
+    out
+}
+
+/// NSGD effective-lr staircase demo used in docs/tests.
+pub fn effective_lr_table(eta: f64, b0: u64, sigma2: f64, tr_h: f64) -> Vec<f64> {
+    (0..6).map(|k| {
+        let etak = eta / 2f64.sqrt().powi(k);
+        let bk = b0 * 2u64.pow(k as u32);
+        effective_lr_assumption2(etak, bk, sigma2, tr_h)
+    }).collect()
+}
+
+fn write_csv(name: &str, content: &str) {
+    let dir = results_dir();
+    if std::fs::create_dir_all(&dir).is_ok() {
+        if let Ok(mut f) = std::fs::File::create(dir.join(name)) {
+            let _ = f.write_all(content.as_bytes());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theorem1_constant_factor_band() {
+        let worst = theorem1();
+        assert!(worst < 10.0, "equivalence constant blew up: {worst}");
+    }
+
+    #[test]
+    fn corollary1_on_line_tight_off_line_loose() {
+        let (on, off) = corollary1();
+        assert!(on < 1.5, "on-line ratio {on} should hug 1");
+        let off_dev = off.max(1.0 / off); // deviation factor from 1
+        assert!(off_dev > on * 1.3, "off-line member should separate: {off} (on-line worst {on})");
+    }
+
+    #[test]
+    fn figure2_only_sublemma4_diverges() {
+        for (a, b, diverged) in figure2() {
+            let should = b.sqrt() > a + 1e-9;
+            if should {
+                assert!(diverged, "(α={a},β={b}) must diverge per Lemma 4");
+            } else {
+                assert!(!diverged, "(α={a},β={b}) must stay stable");
+            }
+        }
+    }
+
+    #[test]
+    fn figure3_gap_grows_with_batch() {
+        let rows = figure3();
+        let first = rows.first().unwrap();
+        let last = rows.last().unwrap();
+        assert!(first.1 < 1.5, "at small batch seesaw ≈ baseline: {:?}", first);
+        assert!(last.1 > first.1, "gap must grow with batch");
+    }
+
+    #[test]
+    fn assumption2_share_falls_with_batch() {
+        let rows = assumption2();
+        let shares: Vec<f64> = rows.iter().map(|r| r.2).collect();
+        assert!(shares[0] > 0.9, "small batch must be variance dominated: {shares:?}");
+        assert!(shares.last().unwrap() < &0.5, "huge batch must not be: {shares:?}");
+        assert!(shares.windows(2).all(|w| w[1] <= w[0] + 1e-6), "monotone: {shares:?}");
+    }
+
+    #[test]
+    fn lemma1_reduction_approaches_bound() {
+        let rows = lemma1();
+        let cont = rows.iter().find(|r| r.0 == "continuous").unwrap();
+        assert!((cont.2 - (1.0 - 2.0 / std::f64::consts::PI)).abs() < 0.02);
+        // finer staircases → closer to the bound
+        let r_11 = rows.iter().find(|r| r.0 == "seesaw-1.1").unwrap().2;
+        let r_20 = rows.iter().find(|r| r.0 == "seesaw-2").unwrap().2;
+        assert!(r_11 > r_20 * 0.9, "finer staircase {r_11} vs coarse {r_20}");
+    }
+
+    #[test]
+    fn effective_lr_constant_along_seesaw() {
+        let t = effective_lr_table(1e-3, 8, 1.0, 10.0);
+        for w in t.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-12, "{t:?}");
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! Experiment harnesses — one function per paper table/figure.
+//!
+//! Each harness regenerates the rows/series the paper reports (DESIGN.md
+//! §5 maps ids → modules). The linreg-backed experiments evaluate the
+//! exact risk recursion (deterministic, seconds); the LM-backed ones drive
+//! the full three-layer stack through [`crate::coordinator::Trainer`].
+//! Every harness writes a CSV under `results/` and prints its table.
+
+pub mod linreg_exps;
+pub mod lm_exps;
+
+use std::path::PathBuf;
+
+/// Where harnesses drop their CSVs.
+pub fn results_dir() -> PathBuf {
+    std::env::var("SEESAW_RESULTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("results"))
+}
+
+/// Effort level for the LM experiments: `Quick` for CI-sized runs,
+/// `Full` for the EXPERIMENTS.md numbers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    pub fn from_flag(full: bool) -> Self {
+        if full {
+            Scale::Full
+        } else {
+            Scale::Quick
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! # Seesaw — balancing learning-rate and batch-size scheduling
+//!
+//! Production-style reproduction of *"Seesaw: Accelerating Training by
+//! Balancing Learning Rate and Batch Size Scheduling"* (Meterez et al.,
+//! 2025) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the training coordinator: joint LR/batch-size
+//!   schedules ([`schedule`], including the paper's Algorithm 1), a
+//!   data-parallel training loop with gradient accumulation and simulated
+//!   multi-worker collectives ([`coordinator`], [`collective`]), plus the
+//!   noisy-linear-regression theory substrate that verifies Theorem 1,
+//!   Corollary 1 and Lemma 4 exactly ([`linreg`]).
+//! * **L2/L1 (python/, build-time only)** — a JAX transformer LM whose
+//!   attention / cross-entropy / AdamW hot-spots are Pallas kernels,
+//!   AOT-lowered once to HLO-text artifacts.
+//! * **Runtime bridge** — [`runtime`] loads those artifacts through the
+//!   PJRT CPU client (`xla` crate) and executes them from the rust hot
+//!   path; Python never runs at train time.
+//!
+//! See `DESIGN.md` for the experiment index (every paper table/figure →
+//! bench harness) and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod collective;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linreg;
+pub mod metrics;
+pub mod runtime;
+pub mod schedule;
+pub mod util;
+
+pub use config::TrainConfig;
+pub use schedule::{JointSchedule, ScheduleKind};

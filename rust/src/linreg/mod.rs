@@ -1,0 +1,20 @@
+//! Noisy-linear-regression substrate — the paper's theory testbed (§5).
+//!
+//! The paper's equivalence results (Theorem 1, Corollary 1) and stability
+//! constraint (Lemma 4) are stated for SGD / normalized SGD on
+//! `y|x ~ N(⟨w*, x⟩, σ²)`, `x ~ N(0, H)`. Working in the eigenbasis of `H`
+//! (Appendix A.1), the *expected* risk obeys an exact `O(d)`-per-step
+//! diagonal recursion — so we can verify every theoretical claim without
+//! sampling noise ([`recursion`]), cross-check the recursion against
+//! Monte-Carlo SGD ([`sgd`]), reproduce the NSGD denominator decomposition
+//! of Appendix B and the past-CBS failure of Figure 3 ([`nsgd`]), and the
+//! 1-D NGD stable-cycle toy of §4.2 ([`ngd_toy`]).
+
+pub mod ngd_toy;
+pub mod nsgd;
+pub mod recursion;
+pub mod sgd;
+pub mod spectrum;
+
+pub use recursion::{PhasedSchedule, Problem, RiskIter};
+pub use spectrum::Spectrum;

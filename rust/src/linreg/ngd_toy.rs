@@ -1,0 +1,66 @@
+//! §4.2's 1-D normalized-gradient-descent toy, packaged for the Figure 3
+//! narrative: past the critical batch size the NSGD dynamics approach NGD,
+//! where only learning-rate decay — never batch growth — can shrink the
+//! terminal cycle.
+
+/// Terminal oscillation amplitude of NGD on `L(x)=½hx²` at step size η.
+pub fn cycle_amplitude(h: f64, eta: f64) -> f64 {
+    eta * h
+}
+
+/// Run NGD with a per-step learning-rate schedule; returns |x| trajectory.
+pub fn run_ngd_schedule(h: f64, x0: f64, etas: &[f64]) -> Vec<f64> {
+    let mut x = x0;
+    etas.iter()
+        .map(|&eta| {
+            let sign = if x >= 0.0 { 1.0 } else { -1.0 };
+            x -= eta * h * sign;
+            x.abs()
+        })
+        .collect()
+}
+
+/// Final loss `½hx²` after running a schedule.
+pub fn final_loss(h: f64, x0: f64, etas: &[f64]) -> f64 {
+    let traj = run_ngd_schedule(h, x0, etas);
+    let x = traj.last().copied().unwrap_or(x0.abs());
+    0.5 * h * x * x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_lr_floors_at_cycle() {
+        let etas = vec![0.0707; 500];
+        let loss = final_loss(1.0, 1.0, &etas);
+        let amp = cycle_amplitude(1.0, 0.0707);
+        assert!(loss <= 0.5 * amp * amp + 1e-12);
+        assert!(loss > 0.0);
+    }
+
+    #[test]
+    fn decayed_lr_beats_any_constant_lr_floor() {
+        // halve the lr every 100 steps → amplitude shrinks geometrically.
+        // (lr incommensurate with x0 so the cycle cannot hit 0 exactly)
+        let (h, x0, eta0) = (1.0, 1.0, 0.0707);
+        let mut etas = Vec::new();
+        for k in 0..5 {
+            etas.extend(std::iter::repeat(eta0 / 2f64.powi(k)).take(100));
+        }
+        let decayed = final_loss(h, x0, &etas);
+        let constant = final_loss(h, x0, &vec![eta0; 500]);
+        assert!(decayed < constant * 0.1, "decayed {decayed} vs constant {constant}");
+    }
+
+    #[test]
+    fn batch_growth_is_a_noop_for_ngd() {
+        // NGD has no noise: "increasing batch" = same dynamics. We encode
+        // this by the trivial observation that the trajectory depends only
+        // on etas — documented here as the §4.2 takeaway.
+        let a = run_ngd_schedule(2.0, 1.0, &vec![0.05; 200]);
+        let b = run_ngd_schedule(2.0, 1.0, &vec![0.05; 200]);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,331 @@
+//! Exact expected-risk recursion for mini-batch SGD on noisy linear
+//! regression (Appendix A.1, eq. 6 diagonalized).
+//!
+//! In the eigenbasis of `H`, with `mₜ = diag(Q Σₜ Qᵀ)` the diagonal of the
+//! second-moment matrix of `δₜ = wₜ − w*` and `eₜ = Q·E[δₜ]` its mean,
+//!
+//! ```text
+//! mₜ₊₁ = [I − 2ηΛ + η²(1+1/B)Λ² + (η²/B)·λλᵀ]·mₜ + (η²σ²/B)·λ
+//! eₜ₊₁ = (I − ηΛ)·eₜ
+//! ```
+//!
+//! and the excess risk is `R − R* = ½·⟨λ, mₜ⟩`. Each step costs `O(d)` —
+//! no matrices, no sampling — so Theorem 1's two-process comparison can be
+//! evaluated *exactly* at any scale.
+
+use super::spectrum::Spectrum;
+
+/// A noisy-linear-regression problem instance.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub spectrum: Spectrum,
+    /// Additive-noise variance σ² of `y | x`.
+    pub sigma2: f64,
+    /// Initial second moment per eigen-direction: `m₀ᵢ = r0 / d`
+    /// (isotropic init at squared distance `r0` from `w*`).
+    pub init_radius2: f64,
+}
+
+impl Problem {
+    pub fn new(spectrum: Spectrum, sigma2: f64, init_radius2: f64) -> Self {
+        Self { spectrum, sigma2, init_radius2 }
+    }
+
+    /// The Theorem 1 step-size gate: `η ≤ 0.01 / Tr(H)`.
+    pub fn eta_max(&self) -> f64 {
+        0.01 / self.spectrum.trace()
+    }
+
+    pub fn iter(&self) -> RiskIter {
+        let lambda = self.spectrum.eigenvalues();
+        let d = lambda.len();
+        RiskIter {
+            lambda,
+            sigma2: self.sigma2,
+            m: vec![self.init_radius2 / d as f64; d],
+            e: vec![(self.init_radius2 / d as f64).sqrt(); d],
+            steps: 0,
+            samples: 0,
+        }
+    }
+}
+
+/// The exact risk iterate. `m` is the diagonal second moment, `e` the mean
+/// iterate (both in the eigenbasis); `e` only feeds the NSGD denominator's
+/// mean term (Appendix B) — the risk itself is a function of `m` alone.
+#[derive(Debug, Clone)]
+pub struct RiskIter {
+    pub lambda: Vec<f64>,
+    pub sigma2: f64,
+    pub m: Vec<f64>,
+    pub e: Vec<f64>,
+    pub steps: u64,
+    pub samples: u64,
+}
+
+impl RiskIter {
+    /// Excess risk `½⟨λ, m⟩`.
+    pub fn risk(&self) -> f64 {
+        0.5 * self.lambda.iter().zip(&self.m).map(|(l, m)| l * m).sum::<f64>()
+    }
+
+    /// Bias component of the risk: the same recursion run without the
+    /// noise injection (tracked implicitly through `e`): `½⟨λ, e²⟩` is a
+    /// lower proxy; the exact bias iterate is available via
+    /// [`RiskIter::split_bias_variance`].
+    pub fn mean_risk(&self) -> f64 {
+        0.5 * self.lambda.iter().zip(&self.e).map(|(l, e)| l * e * e).sum::<f64>()
+    }
+
+    /// One SGD step at learning rate `eta` and batch size `b` samples.
+    pub fn step(&mut self, eta: f64, b: u64) {
+        let bf = b as f64;
+        let lam_dot_m: f64 = self.lambda.iter().zip(&self.m).map(|(l, m)| l * m).sum();
+        let coupling = eta * eta / bf * lam_dot_m;
+        let noise = eta * eta * self.sigma2 / bf;
+        let c2 = eta * eta * (1.0 + 1.0 / bf);
+        for i in 0..self.m.len() {
+            let l = self.lambda[i];
+            self.m[i] = (1.0 - 2.0 * eta * l + c2 * l * l) * self.m[i] + (coupling + noise) * l;
+            self.e[i] *= 1.0 - eta * l;
+        }
+        self.steps += 1;
+        self.samples += b;
+    }
+
+    /// Run `n` steps at fixed `(eta, b)`.
+    pub fn run(&mut self, eta: f64, b: u64, n: u64) {
+        for _ in 0..n {
+            self.step(eta, b);
+        }
+    }
+
+    /// `E‖g‖²` — the NSGD denominator, decomposed per Appendix B:
+    ///
+    /// ```text
+    ///   σ²Tr(H)/B                              (additive noise — "variance")
+    /// + [2·Tr(H²Σ) + Tr(H)·Tr(HΣ)]/B           (iterate-noise part)
+    /// + (1−1/B)·Tr(H²·E[δ]E[δ]ᵀ)               ("mean")
+    /// ```
+    pub fn grad_norm_sq(&self, b: u64) -> GradNorm {
+        let bf = b as f64;
+        let tr_h: f64 = self.lambda.iter().sum();
+        let tr_h_sigma: f64 = self.lambda.iter().zip(&self.m).map(|(l, m)| l * m).sum();
+        let tr_h2_sigma: f64 = self.lambda.iter().zip(&self.m).map(|(l, m)| l * l * m).sum();
+        let mean_term: f64 = self.lambda.iter().zip(&self.e).map(|(l, e)| l * l * e * e).sum();
+        GradNorm {
+            additive: self.sigma2 * tr_h / bf,
+            iterate: (2.0 * tr_h2_sigma + tr_h * tr_h_sigma) / bf,
+            mean: (1.0 - 1.0 / bf) * mean_term,
+        }
+    }
+
+    /// True when the additive-noise term dominates `E‖g‖²` — Assumption 2.
+    pub fn variance_dominated(&self, b: u64, factor: f64) -> bool {
+        let g = self.grad_norm_sq(b);
+        g.additive >= factor * (g.iterate + g.mean)
+    }
+
+    /// Split the current risk into bias (noise-free process) and variance
+    /// (risk − bias) by re-running the same schedule without noise. The
+    /// caller supplies the `(eta, b)` history; this is a diagnostic used in
+    /// tests, not on the hot path.
+    pub fn split_bias_variance(problem: &Problem, history: &[(f64, u64)]) -> (f64, f64) {
+        let mut full = problem.iter();
+        let mut unnoised = problem.iter();
+        let noiseless = Problem { sigma2: 0.0, ..problem.clone() };
+        let mut bias_iter = noiseless.iter();
+        for &(eta, b) in history {
+            full.step(eta, b);
+            bias_iter.step(eta, b);
+            unnoised.step(eta, b);
+        }
+        let bias = bias_iter.risk();
+        (bias, full.risk() - bias)
+    }
+}
+
+/// Appendix B decomposition of `E‖g‖²`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GradNorm {
+    /// `σ²Tr(H)/B` — scales down with batch size (Assumption 2's term).
+    pub additive: f64,
+    /// `[2Tr(H²Σ)+Tr(H)Tr(HΣ)]/B`.
+    pub iterate: f64,
+    /// `(1−1/B)·Tr(H²E[δ]E[δ]ᵀ)` — does NOT scale with batch size.
+    pub mean: f64,
+}
+
+impl GradNorm {
+    pub fn total(&self) -> f64 {
+        self.additive + self.iterate + self.mean
+    }
+}
+
+/// A phase-indexed schedule in the exact form of Theorem 1: in phase `k`
+/// the process runs at `(η·α⁻ᵏ, B·βᵏ)` and consumes `phase_samples[k]`
+/// samples (the SAME samples count for every family member).
+#[derive(Debug, Clone)]
+pub struct PhasedSchedule {
+    pub eta0: f64,
+    pub b0: u64,
+    pub alpha: f64,
+    pub beta: f64,
+    pub phase_samples: Vec<u64>,
+}
+
+impl PhasedSchedule {
+    /// Run the exact recursion through all phases; returns the risk at the
+    /// end of every phase.
+    pub fn run(&self, problem: &Problem) -> Vec<f64> {
+        self.run_scaled(problem, 1.0)
+    }
+
+    /// Same, with the whole learning-rate schedule multiplied by `scale`
+    /// (the `R(1.01·η′)` comparison in Theorem 1's lower bound).
+    pub fn run_scaled(&self, problem: &Problem, scale: f64) -> Vec<f64> {
+        let mut it = problem.iter();
+        let mut risks = Vec::with_capacity(self.phase_samples.len());
+        for (k, &samples) in self.phase_samples.iter().enumerate() {
+            let eta = scale * self.eta0 * self.alpha.powi(-(k as i32));
+            let b = ((self.b0 as f64) * self.beta.powi(k as i32)).round().max(1.0) as u64;
+            let steps = samples / b;
+            it.run(eta, b, steps);
+            risks.push(it.risk());
+        }
+        risks
+    }
+
+    /// NSGD variant (Corollary 1): each step's effective learning rate is
+    /// `η / √(E‖g‖²)` with the *exact* Appendix-B denominator. Under
+    /// Assumption 2 this reduces to `η·√B/(σ√Tr(H))` (eq. 7).
+    pub fn run_nsgd(&self, problem: &Problem, assume_variance_dominated: bool) -> Vec<f64> {
+        let tr_h = problem.spectrum.trace();
+        let mut it = problem.iter();
+        let mut risks = Vec::with_capacity(self.phase_samples.len());
+        for (k, &samples) in self.phase_samples.iter().enumerate() {
+            let eta = self.eta0 * self.alpha.powi(-(k as i32));
+            let b = ((self.b0 as f64) * self.beta.powi(k as i32)).round().max(1.0) as u64;
+            let steps = samples / b;
+            for _ in 0..steps {
+                let denom = if assume_variance_dominated {
+                    (problem.sigma2 * tr_h / b as f64).sqrt()
+                } else {
+                    it.grad_norm_sq(b).total().sqrt()
+                };
+                it.step(eta / denom, b);
+            }
+            risks.push(it.risk());
+        }
+        risks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn problem() -> Problem {
+        Problem::new(Spectrum::PowerLaw { dim: 64, exponent: 1.0 }, 1.0, 1.0)
+    }
+
+    #[test]
+    fn risk_decreases_then_floors_at_noise_scale() {
+        let p = problem();
+        let mut it = p.iter();
+        let r0 = it.risk();
+        it.run(p.eta_max(), 8, 20_000);
+        let r1 = it.risk();
+        assert!(r1 < r0 * 0.2, "risk should fall: {r0} → {r1}");
+        assert!(r1 > 0.0);
+    }
+
+    #[test]
+    fn zero_noise_pure_bias_decays_monotonically() {
+        let p = Problem::new(Spectrum::Isotropic { dim: 4 }, 0.0, 1.0);
+        let mut it = p.iter();
+        let mut last = it.risk();
+        for _ in 0..200 {
+            it.step(p.eta_max(), 4);
+            let r = it.risk();
+            assert!(r <= last + 1e-15);
+            last = r;
+        }
+    }
+
+    #[test]
+    fn doubling_batch_reduces_noise_floor() {
+        let p = problem();
+        let eta = p.eta_max();
+        let mut small = p.iter();
+        let mut large = p.iter();
+        small.run(eta, 4, 50_000);
+        large.run(eta, 64, 50_000);
+        assert!(large.risk() < small.risk());
+    }
+
+    #[test]
+    fn mean_iterate_decays_exponentially() {
+        // isotropic so every direction contracts at the same rate
+        let p = Problem::new(Spectrum::Isotropic { dim: 8 }, 1.0, 1.0);
+        let mut it = p.iter();
+        let m0 = it.mean_risk();
+        it.run(p.eta_max(), 8, 5_000);
+        assert!(it.mean_risk() < m0 * 1e-2, "{} vs {}", it.mean_risk(), m0);
+    }
+
+    #[test]
+    fn grad_norm_additive_term_scales_inverse_with_batch() {
+        let p = problem();
+        let it = p.iter();
+        let g1 = it.grad_norm_sq(1);
+        let g8 = it.grad_norm_sq(8);
+        assert!((g1.additive / g8.additive - 8.0).abs() < 1e-9);
+        // mean term does not scale down
+        assert!(g8.mean >= g1.mean);
+    }
+
+    #[test]
+    fn assumption2_holds_late_small_batch_fails_huge_batch() {
+        let p = problem();
+        let eta = p.eta_max();
+        let mut it = p.iter();
+        it.run(eta, 8, 30_000); // late in training: bias ≈ 0
+        assert!(
+            it.variance_dominated(8, 1.0),
+            "small batch late in training must be variance dominated: {:?}",
+            it.grad_norm_sq(8)
+        );
+        // At astronomically large batch the additive term vanishes.
+        assert!(!it.variance_dominated(1_000_000_000, 1.0));
+    }
+
+    #[test]
+    fn sgd_linear_scaling_rule_exact_equivalence_direction() {
+        // Theorem 1 sanity: (η, 2B) over P samples ≈ (η/2, B) over P samples.
+        let p = problem();
+        let eta = p.eta_max();
+        let s1 = PhasedSchedule { eta0: eta, b0: 8, alpha: 2.0, beta: 1.0, phase_samples: vec![80_000; 4] };
+        let s2 = PhasedSchedule { eta0: eta, b0: 8, alpha: 1.0, beta: 2.0, phase_samples: vec![80_000; 4] };
+        let r1 = s1.run(&p);
+        let r2 = s2.run(&p);
+        for (a, b) in r1.iter().zip(&r2) {
+            let ratio = a / b;
+            assert!(ratio > 0.2 && ratio < 5.0, "risk ratio {ratio} outside constant band");
+        }
+    }
+
+    #[test]
+    fn bias_variance_split_sums_to_risk() {
+        let p = problem();
+        let eta = p.eta_max();
+        let history: Vec<(f64, u64)> = (0..2_000).map(|_| (eta, 8)).collect();
+        let (bias, variance) = RiskIter::split_bias_variance(&p, &history);
+        let mut it = p.iter();
+        for &(e, b) in &history {
+            it.step(e, b);
+        }
+        assert!((bias + variance - it.risk()).abs() < 1e-12);
+        assert!(bias >= 0.0 && variance >= 0.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Monte-Carlo mini-batch SGD on the same problem — validates the exact
+//! recursion ([`super::recursion`]) and measures the empirical gradient
+//! norm for the Assumption 2 diagnostics.
+//!
+//! WLOG the dynamics are simulated in the eigenbasis (x ~ N(0, Λ)), so a
+//! sample is `xᵢ = √λᵢ·zᵢ` with iid standard normal `z`.
+
+use super::recursion::Problem;
+use crate::util::rng::Rng;
+
+/// One sampled SGD trajectory.
+pub struct SgdRun {
+    pub lambda: Vec<f64>,
+    pub sigma: f64,
+    /// Current error vector δ = w − w* (eigenbasis).
+    pub delta: Vec<f64>,
+    rng: Rng,
+}
+
+impl SgdRun {
+    pub fn new(problem: &Problem, seed: u64) -> Self {
+        let lambda = problem.spectrum.eigenvalues();
+        let d = lambda.len();
+        let init = (problem.init_radius2 / d as f64).sqrt();
+        Self {
+            lambda,
+            sigma: problem.sigma2.sqrt(),
+            delta: vec![init; d],
+            rng: Rng::seed_from_u64(seed),
+        }
+    }
+
+    /// Excess risk of the current iterate: `½Σ λᵢ δᵢ²`.
+    pub fn risk(&self) -> f64 {
+        0.5 * self.lambda.iter().zip(&self.delta).map(|(l, x)| l * x * x).sum::<f64>()
+    }
+
+    /// Draw one mini-batch gradient at the current iterate.
+    pub fn sample_grad(&mut self, b: u64) -> Vec<f64> {
+        let d = self.delta.len();
+        let mut grad = vec![0.0; d];
+        for _ in 0..b {
+            // x = √λ ⊙ z;   residual = ⟨δ, x⟩ − ε
+            let x: Vec<f64> = self
+                .lambda
+                .iter()
+                .map(|&l| l.sqrt() * self.rng.normal())
+                .collect();
+            let eps: f64 = self.sigma * self.rng.normal();
+            let resid: f64 = x.iter().zip(&self.delta).map(|(a, b)| a * b).sum::<f64>() - eps;
+            for i in 0..d {
+                grad[i] += resid * x[i];
+            }
+        }
+        for g in &mut grad {
+            *g /= b as f64;
+        }
+        grad
+    }
+
+    /// One SGD step; returns ‖g‖² of the sampled batch gradient.
+    pub fn step(&mut self, eta: f64, b: u64) -> f64 {
+        let g = self.sample_grad(b);
+        let norm_sq: f64 = g.iter().map(|x| x * x).sum();
+        for i in 0..self.delta.len() {
+            self.delta[i] -= eta * g[i];
+        }
+        norm_sq
+    }
+
+    /// One *normalized* SGD step (eq. 4) using the supplied `E‖g‖²`
+    /// estimate for the denominator; returns this batch's ‖g‖².
+    pub fn step_normalized(&mut self, eta: f64, b: u64, expected_norm_sq: f64) -> f64 {
+        let g = self.sample_grad(b);
+        let norm_sq: f64 = g.iter().map(|x| x * x).sum();
+        let scale = eta / expected_norm_sq.sqrt().max(1e-30);
+        for i in 0..self.delta.len() {
+            self.delta[i] -= scale * g[i];
+        }
+        norm_sq
+    }
+}
+
+/// Average risk over `replicas` independent trajectories after running a
+/// fixed `(eta, b)` schedule for `steps` steps.
+pub fn expected_risk(problem: &Problem, eta: f64, b: u64, steps: u64, replicas: u32, seed: u64) -> f64 {
+    let total: f64 = (0..replicas)
+        .map(|r| {
+            let mut run = SgdRun::new(problem, seed.wrapping_add(r as u64));
+            for _ in 0..steps {
+                run.step(eta, b);
+            }
+            run.risk()
+        })
+        .sum();
+    total / replicas as f64
+}
+
+/// Empirical `E‖g‖²` at the current iterate of a fresh problem, averaged
+/// over `trials` batches — the Assumption 2 measurement of Appendix B.
+pub fn measure_grad_norm_sq(problem: &Problem, b: u64, trials: u32, seed: u64) -> f64 {
+    let mut run = SgdRun::new(problem, seed);
+    let total: f64 = (0..trials).map(|_| {
+        let g = run.sample_grad(b);
+        g.iter().map(|x| x * x).sum::<f64>()
+    }).sum();
+    total / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linreg::spectrum::Spectrum;
+
+    fn problem() -> Problem {
+        Problem::new(Spectrum::PowerLaw { dim: 16, exponent: 1.0 }, 1.0, 1.0)
+    }
+
+    #[test]
+    fn monte_carlo_matches_exact_recursion() {
+        let p = problem();
+        let eta = p.eta_max() * 0.5;
+        let (b, steps) = (4u64, 400u64);
+        let mc = expected_risk(&p, eta, b, steps, 64, 42);
+        let mut exact = p.iter();
+        exact.run(eta, b, steps);
+        let want = exact.risk();
+        let rel = (mc - want).abs() / want;
+        assert!(rel < 0.15, "MC {mc} vs exact {want} (rel {rel})");
+    }
+
+    #[test]
+    fn measured_grad_norm_matches_closed_form_at_init() {
+        let p = problem();
+        for &b in &[1u64, 4, 16] {
+            let measured = measure_grad_norm_sq(&p, b, 3_000, 7);
+            let want = p.iter().grad_norm_sq(b).total();
+            let rel = (measured - want).abs() / want;
+            assert!(rel < 0.15, "B={b}: measured {measured} vs closed-form {want}");
+        }
+    }
+
+    #[test]
+    fn sgd_is_deterministic_under_seed() {
+        let p = problem();
+        let r1 = expected_risk(&p, p.eta_max(), 4, 100, 4, 9);
+        let r2 = expected_risk(&p, p.eta_max(), 4, 100, 4, 9);
+        assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn normalized_step_scales_update_by_denominator() {
+        let p = problem();
+        let mut a = SgdRun::new(&p, 1);
+        let mut b = SgdRun::new(&p, 1);
+        // identical rng streams → identical batches; normalized with
+        // denominator n² must equal plain step at eta/n.
+        let n: f64 = 4.0;
+        a.step_normalized(0.001, 2, n * n);
+        b.step(0.001 / n, 2);
+        for (x, y) in a.delta.iter().zip(&b.delta) {
+            assert!((x - y).abs() < 1e-15);
+        }
+    }
+}

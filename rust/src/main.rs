@@ -1,0 +1,188 @@
+//! `seesaw` — launcher CLI for the three-layer training stack.
+//!
+//! ```text
+//! seesaw train [--config run.json] [--model s] [--schedule seesaw] [--alpha 1.1]
+//!              [--lr 3e-3] [--batch-tokens 4096] [--total-tokens N]
+//!              [--world-size W] [--variant ref|pallas] [--out-csv path]
+//! seesaw exp <figure1|table1|figure2|figure3|figure4|figure5|figure6|
+//!             figure7|theorem1|corollary1|lemma1|lemma4|assumption2|
+//!             all-theory> [--full] [--alpha 1.1]
+//! seesaw cbs [--model s] [--full]
+//! seesaw info [--model s] [--artifacts-dir artifacts]
+//! ```
+
+use anyhow::{bail, Result};
+use seesaw::config::{ScheduleSpec, TrainConfig};
+use seesaw::coordinator::Trainer;
+use seesaw::experiments::{linreg_exps, lm_exps, Scale};
+use seesaw::runtime::ModelRuntime;
+use seesaw::util::cli::Args;
+
+const USAGE: &str = "usage: seesaw <train|exp|cbs|info> [flags] (see --help in source header)";
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["full"])?;
+    match args.subcommand.as_deref() {
+        Some("train") => train(&args),
+        Some("exp") => exp(&args),
+        Some("cbs") => {
+            let model = args.str_or("model", "s");
+            let cbs = lm_exps::cbs_sweep(Scale::from_flag(args.switch("full")), &model)?;
+            println!("estimated CBS for `{model}`: {cbs} tokens/step");
+            Ok(())
+        }
+        Some("info") => info(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            bail!("missing or unknown subcommand");
+        }
+    }
+}
+
+fn train(args: &Args) -> Result<()> {
+    let mut cfg = match args.str_opt("config") {
+        Some(path) => TrainConfig::from_json_file(path)?,
+        None => TrainConfig::default(),
+    };
+    if let Some(m) = args.str_opt("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(v) = args.str_opt("variant") {
+        cfg.variant = v.to_string();
+    }
+    let alpha = args.f64_or("alpha", 1.1)?;
+    if let Some(s) = args.str_opt("schedule") {
+        cfg.schedule = match s {
+            "cosine" => ScheduleSpec::Cosine,
+            "seesaw" => ScheduleSpec::Seesaw { alpha },
+            "step" => ScheduleSpec::StepDecay { alpha },
+            "constant" => ScheduleSpec::Constant,
+            "continuous" => ScheduleSpec::ContinuousSeesaw,
+            other => bail!("unknown schedule `{other}`"),
+        };
+    }
+    if let Some(x) = args.f64_opt("lr")? {
+        cfg.base_lr = x;
+    }
+    if let Some(x) = args.u64_opt("batch-tokens")? {
+        cfg.base_batch_tokens = x;
+    }
+    if let Some(x) = args.u64_opt("total-tokens")? {
+        cfg.total_tokens = x;
+    }
+    if let Some(x) = args.u64_opt("world-size")? {
+        cfg.world_size = x as usize;
+    }
+    if let Some(p) = args.str_opt("out-csv") {
+        cfg.out_csv = Some(p.into());
+    }
+    if let Some(p) = args.str_opt("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(p.into());
+    }
+    let mut t = Trainer::new(cfg)?;
+    println!(
+        "model={} params={} budget={} tokens, schedule={:?}, world={}",
+        t.rt.manifest.model.name,
+        t.rt.manifest.param_count,
+        t.total_tokens,
+        t.cfg.schedule,
+        t.cfg.world_size
+    );
+    let log = t.run()?;
+    println!(
+        "done: {} steps, final train CE {:.4}, final val CE {}, serial time {:.1}s (modeled)",
+        log.total_steps(),
+        log.final_train_ce().unwrap_or(f64::NAN),
+        log.final_val_ce().map(|v| format!("{v:.4}")).unwrap_or_else(|| "-".into()),
+        log.total_serial_time()
+    );
+    Ok(())
+}
+
+fn exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| args.str_opt("id").map(String::from))
+        .unwrap_or_default();
+    let scale = Scale::from_flag(args.switch("full"));
+    let alpha = args.f64_or("alpha", 1.1)?;
+    match id.as_str() {
+        "figure1" => {
+            lm_exps::figure1(scale, alpha)?;
+        }
+        "table1" => {
+            lm_exps::table1(scale, alpha)?;
+        }
+        "figure2" => {
+            linreg_exps::figure2();
+        }
+        "figure3" => {
+            linreg_exps::figure3();
+        }
+        "figure4" => {
+            lm_exps::figure4(scale, alpha)?;
+        }
+        "figure5" => {
+            lm_exps::figure5(scale)?;
+        }
+        "figure6" => {
+            lm_exps::figure6(scale)?;
+        }
+        "figure7" => {
+            lm_exps::figure7(scale)?;
+        }
+        "theorem1" => {
+            linreg_exps::theorem1();
+        }
+        "corollary1" => {
+            linreg_exps::corollary1();
+        }
+        "lemma1" => {
+            linreg_exps::lemma1();
+        }
+        "lemma4" => {
+            linreg_exps::lemma4();
+        }
+        "assumption2" => {
+            linreg_exps::assumption2();
+        }
+        "all-theory" => {
+            linreg_exps::theorem1();
+            linreg_exps::corollary1();
+            linreg_exps::figure2();
+            linreg_exps::figure3();
+            linreg_exps::assumption2();
+            linreg_exps::lemma1();
+            linreg_exps::lemma4();
+        }
+        other => bail!("unknown experiment `{other}` (see DESIGN.md §5)"),
+    }
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "s");
+    let dir = std::path::PathBuf::from(args.str_or("artifacts-dir", "artifacts")).join(&model);
+    let rt = ModelRuntime::load(dir)?;
+    let m = &rt.manifest;
+    println!("model {} (platform {})", m.model.name, rt.platform());
+    println!(
+        "  depth={} heads={} width={} seq={} vocab={}",
+        m.model.n_layers, m.model.n_heads, m.model.d_model, m.seq_len, m.vocab
+    );
+    println!(
+        "  params={} ({} non-embedding), {} leaves, microbatch={}×{}",
+        m.param_count,
+        m.non_embedding_params,
+        m.params.len(),
+        m.microbatch,
+        m.seq_len
+    );
+    println!("  variant={} flops/token≈{}", m.variant, m.flops_per_token);
+    for p in &m.params {
+        println!("    {:24} {:?} {}", p.name, p.shape, p.dtype);
+    }
+    Ok(())
+}

@@ -1,0 +1,193 @@
+//! Metrics: per-step training records, CSV/JSON sinks, FLOPs accounting
+//! and the wall-clock model that renders the paper's "serial runtime" axis.
+
+mod wallclock;
+
+pub use wallclock::WallClockModel;
+
+use std::io::Write;
+use std::path::Path;
+
+/// One optimizer step's log line — the columns behind every figure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepRecord {
+    pub step: u64,
+    /// Tokens consumed *before* this step.
+    pub tokens: u64,
+    pub lr: f64,
+    pub batch_tokens: u64,
+    /// Training cross-entropy (averaged over the step's microbatches).
+    pub ce: f64,
+    /// Unscaled z-loss term mean(lse²) — Figure 7's instability signal.
+    pub zloss: f64,
+    /// ‖ḡ‖² of the averaged gradient (NSGD denominator diagnostic).
+    pub gnorm_sq: f64,
+    /// Cumulative training FLOPs after this step.
+    pub flops: f64,
+    /// Modeled serial wall-clock seconds after this step.
+    pub serial_time: f64,
+    /// Validation CE if evaluated at this step.
+    pub val_ce: Option<f64>,
+}
+
+/// An entire run's log plus its identity (schedule, scale, lr …).
+#[derive(Debug, Clone, Default)]
+pub struct RunLog {
+    pub name: String,
+    pub records: Vec<StepRecord>,
+}
+
+impl RunLog {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn final_val_ce(&self) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| r.val_ce)
+    }
+
+    pub fn final_train_ce(&self) -> Option<f64> {
+        self.records.last().map(|r| r.ce)
+    }
+
+    pub fn total_steps(&self) -> u64 {
+        self.records.len() as u64
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.records.last().map(|r| r.tokens + r.batch_tokens).unwrap_or(0)
+    }
+
+    pub fn total_serial_time(&self) -> f64 {
+        self.records.last().map(|r| r.serial_time).unwrap_or(0.0)
+    }
+
+    /// Write the standard CSV the experiment harnesses consume.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "run,step,tokens,lr,batch_tokens,ce,zloss,gnorm_sq,flops,serial_time,val_ce")?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{},{},{:.6e},{},{:.6},{:.6},{:.6e},{:.6e},{:.6},{}",
+                self.name,
+                r.step,
+                r.tokens,
+                r.lr,
+                r.batch_tokens,
+                r.ce,
+                r.zloss,
+                r.gnorm_sq,
+                r.flops,
+                r.serial_time,
+                r.val_ce.map(|v| format!("{v:.6}")).unwrap_or_default()
+            )?;
+        }
+        f.flush()
+    }
+}
+
+/// Append several runs into one long-format CSV (figure-friendly).
+pub fn write_runs_csv(runs: &[RunLog], path: impl AsRef<Path>) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    writeln!(f, "run,step,tokens,lr,batch_tokens,ce,zloss,gnorm_sq,flops,serial_time,val_ce")?;
+    for run in runs {
+        for r in &run.records {
+            writeln!(
+                f,
+                "{},{},{},{:.6e},{},{:.6},{:.6},{:.6e},{:.6e},{:.6},{}",
+                run.name,
+                r.step,
+                r.tokens,
+                r.lr,
+                r.batch_tokens,
+                r.ce,
+                r.zloss,
+                r.gnorm_sq,
+                r.flops,
+                r.serial_time,
+                r.val_ce.map(|v| format!("{v:.6}")).unwrap_or_default()
+            )?;
+        }
+    }
+    f.flush()
+}
+
+/// Simple fixed-width table printer for the bench harnesses.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let widths: Vec<usize> = header
+        .iter()
+        .enumerate()
+        .map(|(i, h)| rows.iter().map(|r| r[i].len()).chain([h.len()]).max().unwrap_or(0))
+        .collect();
+    let fmt_row = |cells: Vec<String>| {
+        cells
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:>w$}"))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(header.iter().map(|s| s.to_string()).collect()));
+    for r in rows {
+        println!("{}", fmt_row(r.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, val: Option<f64>) -> StepRecord {
+        StepRecord {
+            step,
+            tokens: step * 100,
+            lr: 1e-3,
+            batch_tokens: 100,
+            ce: 3.0,
+            zloss: 10.0,
+            gnorm_sq: 0.5,
+            flops: 1e9,
+            serial_time: step as f64,
+            val_ce: val,
+        }
+    }
+
+    #[test]
+    fn runlog_accessors() {
+        let mut log = RunLog::new("x");
+        log.push(rec(0, None));
+        log.push(rec(1, Some(2.5)));
+        log.push(rec(2, None));
+        assert_eq!(log.final_val_ce(), Some(2.5));
+        assert_eq!(log.total_steps(), 3);
+        assert_eq!(log.total_tokens(), 300);
+        assert_eq!(log.total_serial_time(), 2.0);
+    }
+
+    #[test]
+    fn csv_roundtrip_lines() {
+        let dir = crate::util::TempDir::new("metrics").unwrap();
+        let path = dir.path().join("runs/x.csv");
+        let mut log = RunLog::new("x");
+        log.push(rec(0, Some(1.0)));
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("run,step,"));
+        assert!(lines[1].starts_with("x,0,"));
+        assert!(lines[1].ends_with("1.000000"));
+    }
+}

@@ -1,0 +1,72 @@
+//! Wall-clock model for the "serial runtime" axis of Figure 1.
+//!
+//! The paper's speedup claim is about *serial* time: with enough devices,
+//! a batch of any size (up to device capacity) completes in one
+//! data-parallel step of roughly constant latency, so serial runtime ∝
+//! optimizer steps. This model makes that assumption explicit and bounded:
+//! a cluster of `devices` workers each processing up to `tokens_per_device`
+//! tokens per step at `step_latency` seconds; batches beyond total
+//! capacity serialize into multiple waves (the regime where ramping stops
+//! helping — the guard Figure 3 probes from the optimization side).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WallClockModel {
+    /// Number of data-parallel devices in the modeled cluster.
+    pub devices: u64,
+    /// Microbatch capacity of one device per step, in tokens.
+    pub tokens_per_device: u64,
+    /// Latency of one data-parallel step (compute + allreduce), seconds.
+    pub step_latency: f64,
+}
+
+impl Default for WallClockModel {
+    fn default() -> Self {
+        // Capacity chosen so every batch the testbed sweeps (≤64k tokens)
+        // fits in one wave — matching the paper's "assuming enough
+        // devices are available" premise (§4.1).
+        Self { devices: 64, tokens_per_device: 4096, step_latency: 1.0 }
+    }
+}
+
+impl WallClockModel {
+    /// Seconds of serial time one optimizer step of `batch_tokens` costs.
+    pub fn step_time(&self, batch_tokens: u64) -> f64 {
+        let capacity = self.devices * self.tokens_per_device;
+        let waves = batch_tokens.div_ceil(capacity).max(1);
+        waves as f64 * self.step_latency
+    }
+
+    /// Total serial seconds of a whole `(batch_tokens per step)` history.
+    pub fn total_time(&self, batches: impl IntoIterator<Item = u64>) -> f64 {
+        batches.into_iter().map(|b| self.step_time(b)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn below_capacity_time_is_flat_in_batch() {
+        let m = WallClockModel { devices: 8, tokens_per_device: 1024, step_latency: 2.0 };
+        assert_eq!(m.step_time(512), 2.0);
+        assert_eq!(m.step_time(8 * 1024), 2.0);
+    }
+
+    #[test]
+    fn beyond_capacity_serializes_into_waves() {
+        let m = WallClockModel { devices: 8, tokens_per_device: 1024, step_latency: 2.0 };
+        assert_eq!(m.step_time(8 * 1024 + 1), 4.0);
+        assert_eq!(m.step_time(3 * 8 * 1024), 6.0);
+    }
+
+    #[test]
+    fn seesaw_total_time_beats_constant_batch_at_equal_tokens() {
+        // same 80k tokens: 20 steps of 4k vs ramp 4k→8k→16k (fewer steps).
+        let m = WallClockModel { devices: 64, tokens_per_device: 4096, step_latency: 1.0 };
+        let constant = m.total_time(std::iter::repeat(4096).take(20));
+        let ramp: Vec<u64> = vec![4096; 8].into_iter().chain(vec![8192; 4]).chain(vec![16384; 1]).collect();
+        assert_eq!(ramp.iter().sum::<u64>(), 4096 * 20);
+        assert!(m.total_time(ramp) < constant);
+    }
+}

@@ -1,0 +1,228 @@
+//! `manifest.json` — the contract between `python/compile/aot.py` and the
+//! rust runtime: parameter-leaf order/shapes, artifact filenames, model
+//! metadata. The AOT side flattens every pytree in `jax.tree_util` order
+//! (dict keys sorted) and records the result here so the rust side never
+//! guesses argument layouts. Parsed with the from-scratch JSON module.
+
+use crate::util::json::Value;
+use anyhow::{anyhow, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub ff_mult: usize,
+    pub rope_theta: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    /// Dotted pytree path, e.g. `blocks.wq`.
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdamMeta {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub model: ModelMeta,
+    pub variant: String,
+    pub microbatch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub params: Vec<ParamSpec>,
+    pub artifacts: BTreeMap<String, String>,
+    pub param_count: u64,
+    pub non_embedding_params: u64,
+    pub flops_per_token: u64,
+    pub adam: AdamMeta,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?} (run `make artifacts`?)", path.as_ref()))?;
+        let m = Self::from_json(&text)?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        let mv = v.req("model")?;
+        let model = ModelMeta {
+            name: mv.str_or("name", "")?,
+            vocab: mv.req("vocab")?.as_usize()?,
+            d_model: mv.req("d_model")?.as_usize()?,
+            n_layers: mv.req("n_layers")?.as_usize()?,
+            n_heads: mv.req("n_heads")?.as_usize()?,
+            seq_len: mv.req("seq_len")?.as_usize()?,
+            ff_mult: mv.req("ff_mult")?.as_usize()?,
+            rope_theta: mv.req("rope_theta")?.as_f64()?,
+        };
+        let params = v
+            .req("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.req("name")?.as_str()?.to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<_>>()?,
+                    dtype: p.req("dtype")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = v
+            .req("artifacts")?
+            .as_obj()?
+            .iter()
+            .map(|(k, f)| Ok((k.clone(), f.as_str()?.to_string())))
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        let av = v.req("adam")?;
+        Ok(Manifest {
+            model,
+            variant: v.str_or("variant", "ref")?,
+            microbatch: v.req("microbatch")?.as_usize()?,
+            seq_len: v.req("seq_len")?.as_usize()?,
+            vocab: v.req("vocab")?.as_usize()?,
+            params,
+            artifacts,
+            param_count: v.req("param_count")?.as_u64()?,
+            non_embedding_params: v.req("non_embedding_params")?.as_u64()?,
+            flops_per_token: v.req("flops_per_token")?.as_u64()?,
+            adam: AdamMeta {
+                beta1: av.req("beta1")?.as_f64()?,
+                beta2: av.req("beta2")?.as_f64()?,
+                eps: av.req("eps")?.as_f64()?,
+            },
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.params.is_empty(), "manifest has no parameters");
+        let total: usize = self.params.iter().map(|p| p.elements()).sum();
+        ensure!(
+            total as u64 == self.param_count,
+            "param leaves sum to {total}, manifest says {}",
+            self.param_count
+        );
+        for required in ["init", "grad_step", "adamw_step", "sgd_step", "eval_step"] {
+            ensure!(self.artifacts.contains_key(required), "missing artifact `{required}`");
+        }
+        ensure!(self.microbatch > 0 && self.seq_len > 0, "bad microbatch/seq_len");
+        for p in &self.params {
+            ensure!(p.dtype == "float32", "unsupported dtype {} for {}", p.dtype, p.name);
+        }
+        Ok(())
+    }
+
+    pub fn check_param_leaves(&self, n: usize) -> Result<()> {
+        if n == self.params.len() {
+            Ok(())
+        } else {
+            Err(anyhow!("expected {} param leaves, got {n}", self.params.len()))
+        }
+    }
+
+    /// Total f32 elements across all leaves.
+    pub fn total_elements(&self) -> usize {
+        self.params.iter().map(|p| p.elements()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest::from_json(
+            r#"{
+            "model": {"name":"test","vocab":256,"d_model":64,"n_layers":2,
+                      "n_heads":4,"seq_len":64,"ff_mult":4,"rope_theta":10000.0},
+            "variant": "ref", "microbatch": 2, "seq_len": 64, "vocab": 256,
+            "params": [{"name":"embed","shape":[256,64],"dtype":"float32"},
+                       {"name":"ln_f","shape":[64],"dtype":"float32"}],
+            "artifacts": {"init":"init.hlo.txt","grad_step":"g.hlo.txt",
+                          "adamw_step":"a.hlo.txt","sgd_step":"s.hlo.txt",
+                          "eval_step":"e.hlo.txt"},
+            "param_count": 16448, "non_embedding_params": 64,
+            "flops_per_token": 100, "adam": {"beta1":0.9,"beta2":0.95,"eps":1e-8}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn validates_param_totals() {
+        let m = sample();
+        assert!(m.validate().is_ok());
+        assert_eq!(m.total_elements(), 16448);
+        let mut bad = m.clone();
+        bad.param_count = 1;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn missing_artifact_rejected() {
+        let mut m = sample();
+        m.artifacts.remove("sgd_step");
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn non_f32_dtype_rejected() {
+        let mut m = sample();
+        m.params[0].dtype = "bfloat16".into();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn spec_helpers() {
+        let m = sample();
+        assert_eq!(m.params[0].elements(), 256 * 64);
+        assert_eq!(m.params[0].dims_i64(), vec![256, 64]);
+        assert!(m.check_param_leaves(2).is_ok());
+        assert!(m.check_param_leaves(3).is_err());
+        assert_eq!(m.adam.beta2, 0.95);
+        assert_eq!(m.model.d_model, 64);
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // integration guard: run after `make artifacts`
+        let path = std::path::Path::new("artifacts/test/manifest.json");
+        if path.exists() {
+            let m = Manifest::load(path).unwrap();
+            assert_eq!(m.model.name, "test");
+            assert_eq!(m.params.len(), 10);
+        }
+    }
+}

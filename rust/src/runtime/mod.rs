@@ -1,0 +1,287 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them.
+//!
+//! This is the only module that touches the `xla` crate. It wraps
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute` (the /opt/xla-example/load_hlo pattern)
+//! behind a typed API the coordinator drives:
+//!
+//! * [`ModelRuntime::load`] — compile all executables of one
+//!   `artifacts/<model>[_pallas]/` directory (one-time cost),
+//! * [`ModelRuntime::init`] / [`ModelRuntime::grad_step`] /
+//!   [`ModelRuntime::adamw_step`] / [`ModelRuntime::sgd_step`] /
+//!   [`ModelRuntime::eval_step`] — the train-path calls.
+//!
+//! Parameters and optimizer state live as host [`xla::Literal`]s between
+//! steps (the CPU PJRT client copies host↔device per call; §Perf in
+//! EXPERIMENTS.md quantifies this and the buffer-resident alternative).
+
+mod manifest;
+
+pub use manifest::{Manifest, ParamSpec};
+
+use anyhow::{anyhow, ensure, Result};
+use std::path::{Path, PathBuf};
+
+/// Gradient statistics + per-leaf gradient data from one microbatch.
+pub struct GradOut {
+    pub ce: f32,
+    pub zsq: f32,
+    pub gnorm_sq: f32,
+    /// One flat f32 vector per parameter leaf (manifest order).
+    pub grads: Vec<Vec<f32>>,
+}
+
+/// A compiled model: PJRT client + the five train-path executables.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    client: xla::PjRtClient,
+    init_exe: xla::PjRtLoadedExecutable,
+    grad_exe: xla::PjRtLoadedExecutable,
+    adamw_exe: xla::PjRtLoadedExecutable,
+    sgd_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+}
+
+impl ModelRuntime {
+    /// Compile every artifact in `dir` on a fresh CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let file = manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact `{name}` missing from manifest"))?;
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))
+        };
+        let init_exe = compile("init")?;
+        let grad_exe = compile("grad_step")?;
+        let adamw_exe = compile("adamw_step")?;
+        let sgd_exe = compile("sgd_step")?;
+        let eval_exe = compile("eval_step")?;
+        Ok(Self { manifest, init_exe, grad_exe, adamw_exe, sgd_exe, eval_exe, client, dir })
+    }
+
+    pub fn microbatch(&self) -> usize {
+        self.manifest.microbatch
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.manifest.seq_len
+    }
+
+    /// Tokens in one microbatch.
+    pub fn micro_tokens(&self) -> u64 {
+        (self.manifest.microbatch * self.manifest.seq_len) as u64
+    }
+
+    fn run(&self, exe: &xla::PjRtLoadedExecutable, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = exe.execute::<&xla::Literal>(args).map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    /// Initialize parameters from a seed → one literal per leaf.
+    pub fn init(&self, seed: i32) -> Result<Vec<xla::Literal>> {
+        let s = xla::Literal::scalar(seed);
+        let out = self.run(&self.init_exe, &[&s])?;
+        self.manifest.check_param_leaves(out.len())?;
+        Ok(out)
+    }
+
+    /// Zero-initialized optimizer state (same shapes as the parameters).
+    pub fn zeros_like_params(&self) -> Result<Vec<xla::Literal>> {
+        self.manifest
+            .params
+            .iter()
+            .map(|p| lit_f32(&vec![0f32; p.elements()], &p.dims_i64()))
+            .collect()
+    }
+
+    /// fwd+bwd on one microbatch; `tokens`/`targets` are row-major
+    /// `microbatch × seq_len` i32.
+    pub fn grad_step(
+        &self,
+        params: &[xla::Literal],
+        tokens: &[i32],
+        targets: &[i32],
+        zcoef: f32,
+    ) -> Result<GradOut> {
+        let (b, l) = (self.manifest.microbatch, self.manifest.seq_len);
+        ensure!(tokens.len() == b * l, "tokens len {} != {}", tokens.len(), b * l);
+        ensure!(targets.len() == b * l, "targets len mismatch");
+        let t = lit_i32(tokens, &[b as i64, l as i64])?;
+        let y = lit_i32(targets, &[b as i64, l as i64])?;
+        let z = xla::Literal::scalar(zcoef);
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&t);
+        args.push(&y);
+        args.push(&z);
+        let out = self.run(&self.grad_exe, &args)?;
+        ensure!(
+            out.len() == 3 + self.manifest.params.len(),
+            "grad_step returned {} outputs, want {}",
+            out.len(),
+            3 + self.manifest.params.len()
+        );
+        let mut it = out.into_iter();
+        let ce = scalar_f32(&it.next().unwrap())?;
+        let zsq = scalar_f32(&it.next().unwrap())?;
+        let gnorm_sq = scalar_f32(&it.next().unwrap())?;
+        let grads = it
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("grad to_vec: {e:?}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(GradOut { ce, zsq, gnorm_sq, grads })
+    }
+
+    /// One AdamW update; returns `(params', m', v')` literals.
+    #[allow(clippy::too_many_arguments)]
+    pub fn adamw_step(
+        &self,
+        params: &[xla::Literal],
+        grads: &[xla::Literal],
+        m: &[xla::Literal],
+        v: &[xla::Literal],
+        lr: f32,
+        wd: f32,
+        c1: f32,
+        c2: f32,
+    ) -> Result<(Vec<xla::Literal>, Vec<xla::Literal>, Vec<xla::Literal>)> {
+        let (l1, l2, l3, l4) = (
+            xla::Literal::scalar(lr),
+            xla::Literal::scalar(wd),
+            xla::Literal::scalar(c1),
+            xla::Literal::scalar(c2),
+        );
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(4 * params.len() + 4);
+        args.extend(params.iter());
+        args.extend(grads.iter());
+        args.extend(m.iter());
+        args.extend(v.iter());
+        args.extend([&l1, &l2, &l3, &l4]);
+        let out = self.run(&self.adamw_exe, &args)?;
+        let p = self.manifest.params.len();
+        ensure!(out.len() == 3 * p, "adamw_step returned {} outputs", out.len());
+        let mut out = out.into_iter();
+        let params_new: Vec<_> = out.by_ref().take(p).collect();
+        let m_new: Vec<_> = out.by_ref().take(p).collect();
+        let v_new: Vec<_> = out.collect();
+        Ok((params_new, m_new, v_new))
+    }
+
+    /// One (N)SGD update at (possibly pre-normalized) learning rate.
+    pub fn sgd_step(
+        &self,
+        params: &[xla::Literal],
+        grads: &[xla::Literal],
+        lr: f32,
+    ) -> Result<Vec<xla::Literal>> {
+        let l = xla::Literal::scalar(lr);
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(2 * params.len() + 1);
+        args.extend(params.iter());
+        args.extend(grads.iter());
+        args.push(&l);
+        let out = self.run(&self.sgd_exe, &args)?;
+        self.manifest.check_param_leaves(out.len())?;
+        Ok(out)
+    }
+
+    /// Validation CE (and z term) on one microbatch.
+    pub fn eval_step(
+        &self,
+        params: &[xla::Literal],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f32, f32)> {
+        let (b, l) = (self.manifest.microbatch, self.manifest.seq_len);
+        let t = lit_i32(tokens, &[b as i64, l as i64])?;
+        let y = lit_i32(targets, &[b as i64, l as i64])?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&t);
+        args.push(&y);
+        let out = self.run(&self.eval_exe, &args)?;
+        ensure!(out.len() == 2, "eval_step returned {} outputs", out.len());
+        Ok((scalar_f32(&out[0])?, scalar_f32(&out[1])?))
+    }
+
+    /// Build gradient literals from flat f32 vectors (manifest order) —
+    /// the path back from rust-side accumulation/allreduce.
+    pub fn grads_to_literals(&self, grads: &[Vec<f32>]) -> Result<Vec<xla::Literal>> {
+        ensure!(grads.len() == self.manifest.params.len(), "grad leaf count");
+        self.manifest
+            .params
+            .iter()
+            .zip(grads)
+            .map(|(spec, g)| {
+                ensure!(g.len() == spec.elements(), "leaf {} length", spec.name);
+                lit_f32(g, &spec.dims_i64())
+            })
+            .collect()
+    }
+
+    /// Snapshot literals to host f32 vectors (checkpointing).
+    pub fn to_host(&self, lits: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        lits.iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Rebuild literals from host vectors (checkpoint restore).
+    pub fn from_host(&self, data: &[Vec<f32>]) -> Result<Vec<xla::Literal>> {
+        self.grads_to_literals(data)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// f32 literal with shape `dims` from a flat row-major slice.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    ensure!(n as usize == data.len(), "shape {:?} != len {}", dims, data.len());
+    if dims.len() == 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// i32 literal with shape `dims`.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    ensure!(n as usize == data.len(), "shape {:?} != len {}", dims, data.len());
+    xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Extract a rank-0 f32 literal.
+pub fn scalar_f32(l: &xla::Literal) -> Result<f32> {
+    l.get_first_element::<f32>().map_err(|e| anyhow!("scalar: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_helpers_roundtrip() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let shape = l.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert!(lit_f32(&[1.0], &[2]).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let l = xla::Literal::scalar(7.5f32);
+        assert_eq!(scalar_f32(&l).unwrap(), 7.5);
+    }
+}

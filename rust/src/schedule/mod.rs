@@ -1,0 +1,301 @@
+//! Joint learning-rate / batch-size schedules — the paper's contribution.
+//!
+//! All schedules are functions of **tokens processed** (not steps): batch
+//! ramps change the tokens-per-step, so tokens are the invariant clock the
+//! paper compares schedules on ("each phase processes the same number of
+//! data points", Theorem 1). The coordinator queries
+//! [`JointSchedule::at(tokens)`] before every optimizer step.
+//!
+//! Provided kinds:
+//! * [`ScheduleKind::CosineContinuous`] — the paper's baseline,
+//!   `η(τ) = η₀·cos(πτ/2)` after warmup (decays to 0 at the token budget).
+//! * [`ScheduleKind::StepDecay`] — cosine approximated by cuts of factor
+//!   `α` at the token counts where the cosine crosses `η₀·α⁻ᵏ` (§3.2).
+//! * [`ScheduleKind::BatchRamp`] — the general `(α, β)` family: at every
+//!   cut, `η ← η/α` and `B ← B·β`. Seesaw (Algorithm 1) is
+//!   `(α, β) = (√a, a)` for an underlying step factor `a`; the paper's
+//!   equivalence line fixes `α·√β` (Corollary 1) and Lemma 4 requires
+//!   `α ≥ √β` for stability.
+//! * [`ScheduleKind::ContinuousSeesaw`] — the Lemma 1 continuous limit:
+//!   `η(τ) = η₀·√cos(πτ/2)`, `B(τ) = B₀/cos(πτ/2)`, whose serial step
+//!   count integrates to `(2/π)·T_steps` (≈36.3% fewer steps).
+//! * [`ScheduleKind::Constant`] — fixed lr and batch.
+
+pub mod seesaw;
+
+pub use seesaw::{stability, table2_grid, SeesawBuilder, StabilityVerdict};
+
+use std::f64::consts::PI;
+
+/// What the coordinator needs to know before each optimizer step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SchedulePoint {
+    /// Learning rate for the upcoming step.
+    pub lr: f64,
+    /// Global batch size for the upcoming step, in tokens.
+    pub batch_tokens: u64,
+    /// Index of the current decay phase (0 before the first cut).
+    pub phase: usize,
+}
+
+/// The schedule family. See module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScheduleKind {
+    Constant,
+    CosineContinuous,
+    /// lr cuts by `alpha` at each token count in `cuts`; batch fixed.
+    StepDecay { alpha: f64, cuts: Vec<u64> },
+    /// lr cuts by `alpha` AND batch multiplies by `beta` at each cut.
+    BatchRamp { alpha: f64, beta: f64, cuts: Vec<u64> },
+    /// Lemma 1 continuous limit of the most aggressive stable ramp.
+    ContinuousSeesaw,
+}
+
+/// A complete joint schedule over a fixed token budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JointSchedule {
+    /// Peak learning rate (reached at the end of warmup).
+    pub base_lr: f64,
+    /// Batch size before any ramp, in tokens.
+    pub base_batch: u64,
+    /// Linear-warmup horizon in tokens (paper: 10% of the budget).
+    pub warmup_tokens: u64,
+    /// Total training budget in tokens (Chinchilla: 20·N).
+    pub total_tokens: u64,
+    /// Decay/ramp behaviour after warmup.
+    pub kind: ScheduleKind,
+    /// Clamp for ramped batch sizes (device-memory guard), in tokens.
+    pub max_batch_tokens: u64,
+}
+
+impl JointSchedule {
+    pub fn new(
+        base_lr: f64,
+        base_batch: u64,
+        warmup_tokens: u64,
+        total_tokens: u64,
+        kind: ScheduleKind,
+    ) -> Self {
+        Self {
+            base_lr,
+            base_batch,
+            warmup_tokens,
+            total_tokens,
+            kind,
+            max_batch_tokens: u64::MAX,
+        }
+    }
+
+    /// Paper defaults: warmup = 10% of the budget.
+    pub fn with_default_warmup(base_lr: f64, base_batch: u64, total_tokens: u64, kind: ScheduleKind) -> Self {
+        Self::new(base_lr, base_batch, total_tokens / 10, total_tokens, kind)
+    }
+
+    pub fn max_batch(mut self, tokens: u64) -> Self {
+        self.max_batch_tokens = tokens;
+        self
+    }
+
+    /// Progress through the post-warmup decay interval, in [0, 1].
+    fn tau(&self, tokens: u64) -> f64 {
+        let t = tokens.saturating_sub(self.warmup_tokens) as f64;
+        let span = (self.total_tokens - self.warmup_tokens).max(1) as f64;
+        (t / span).clamp(0.0, 1.0)
+    }
+
+    /// Number of cuts at or before `tokens`.
+    fn phase(cuts: &[u64], tokens: u64) -> usize {
+        cuts.iter().take_while(|&&c| c <= tokens).count()
+    }
+
+    /// Schedule value at a token count.
+    pub fn at(&self, tokens: u64) -> SchedulePoint {
+        let warm = if self.warmup_tokens > 0 && tokens < self.warmup_tokens {
+            // linear warmup, never exactly 0 at token 0
+            ((tokens + 1) as f64 / self.warmup_tokens as f64).min(1.0)
+        } else {
+            1.0
+        };
+        let (decay, batch_mult, phase): (f64, f64, usize) = match &self.kind {
+            ScheduleKind::Constant => (1.0, 1.0, 0),
+            ScheduleKind::CosineContinuous => {
+                let c = (PI / 2.0 * self.tau(tokens)).cos();
+                (c, 1.0, 0)
+            }
+            ScheduleKind::StepDecay { alpha, cuts } => {
+                let k = Self::phase(cuts, tokens);
+                (alpha.powi(-(k as i32)), 1.0, k)
+            }
+            ScheduleKind::BatchRamp { alpha, beta, cuts } => {
+                let k = Self::phase(cuts, tokens);
+                (alpha.powi(-(k as i32)), beta.powi(k as i32), k)
+            }
+            ScheduleKind::ContinuousSeesaw => {
+                // η·√c and B/c, floored so the final step stays finite.
+                let c = (PI / 2.0 * self.tau(tokens)).cos().max(1e-3);
+                (c.sqrt(), 1.0 / c, 0)
+            }
+        };
+        let batch = ((self.base_batch as f64 * batch_mult).round() as u64)
+            .min(self.max_batch_tokens)
+            .max(1);
+        SchedulePoint { lr: self.base_lr * warm * decay, batch_tokens: batch, phase }
+    }
+
+    /// Count serial optimizer steps over the whole budget (quantized to
+    /// whole batches, the way the coordinator consumes it).
+    pub fn serial_steps(&self) -> u64 {
+        let mut tokens = 0u64;
+        let mut steps = 0u64;
+        while tokens < self.total_tokens {
+            let p = self.at(tokens);
+            tokens += p.batch_tokens;
+            steps += 1;
+        }
+        steps
+    }
+
+    /// Total tokens consumed when run step-by-step (≥ total_tokens,
+    /// within one batch of it).
+    pub fn consumed_tokens(&self) -> u64 {
+        let mut tokens = 0u64;
+        while tokens < self.total_tokens {
+            tokens += self.at(tokens).batch_tokens;
+        }
+        tokens
+    }
+}
+
+/// Token counts where a cosine schedule crosses `η₀·α⁻ᵏ` (§3.2): the cut
+/// points handed to Seesaw so it mirrors the cosine's decay staircase.
+///
+/// Solves `cos(π·τ/2) = α⁻ᵏ` → `τ_k = (2/π)·arccos(α⁻ᵏ)` mapped back to
+/// absolute tokens after warmup. Cuts beyond `max_cuts` or past the end of
+/// the budget are dropped (the cosine has infinitely many crossings as
+/// η→0; batch growth is bounded by the remaining tokens anyway).
+pub fn cosine_cut_tokens(
+    warmup_tokens: u64,
+    total_tokens: u64,
+    alpha: f64,
+    max_cuts: usize,
+) -> Vec<u64> {
+    assert!(alpha > 1.0, "step factor must exceed 1");
+    let span = (total_tokens - warmup_tokens) as f64;
+    let mut cuts = Vec::new();
+    for k in 1..=max_cuts {
+        let level = alpha.powi(-(k as i32));
+        let tau = (2.0 / PI) * level.acos();
+        let tok = warmup_tokens + (tau * span).round() as u64;
+        if tok >= total_tokens {
+            break;
+        }
+        cuts.push(tok);
+    }
+    cuts
+}
+
+/// The theoretical serial-step reduction of Lemma 1: a cosine baseline of
+/// `T` steps becomes `(2/π)·T` under the most aggressive stable ramp, i.e.
+/// a `1 - 2/π ≈ 36.3%` reduction.
+pub fn lemma1_speedup() -> f64 {
+    1.0 - 2.0 / PI
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base(kind: ScheduleKind) -> JointSchedule {
+        JointSchedule::new(0.01, 1_000, 10_000, 100_000, kind)
+    }
+
+    #[test]
+    fn warmup_is_linear_and_reaches_peak() {
+        let s = base(ScheduleKind::Constant);
+        assert!(s.at(0).lr > 0.0);
+        assert!(s.at(0).lr < 0.01 * 0.01);
+        let half = s.at(5_000).lr;
+        assert!((half - 0.005).abs() < 1e-4, "{half}");
+        assert_eq!(s.at(10_000).lr, 0.01);
+        assert_eq!(s.at(99_999).lr, 0.01);
+    }
+
+    #[test]
+    fn cosine_decays_to_zero() {
+        let s = base(ScheduleKind::CosineContinuous);
+        assert_eq!(s.at(10_000).lr, 0.01);
+        let mid = s.at(55_000).lr; // τ=0.5 → cos(π/4)=0.7071
+        assert!((mid - 0.01 * (PI / 4.0).cos()).abs() < 1e-5);
+        assert!(s.at(100_000).lr < 1e-9);
+        assert_eq!(s.at(50_000).batch_tokens, 1_000);
+    }
+
+    #[test]
+    fn step_decay_matches_cut_count() {
+        let s = base(ScheduleKind::StepDecay { alpha: 2.0, cuts: vec![30_000, 60_000, 90_000] });
+        assert_eq!(s.at(29_999).lr, 0.01);
+        assert!((s.at(30_000).lr - 0.005).abs() < 1e-12);
+        assert!((s.at(60_000).lr - 0.0025).abs() < 1e-12);
+        assert_eq!(s.at(95_000).phase, 3);
+        assert_eq!(s.at(95_000).batch_tokens, 1_000);
+    }
+
+    #[test]
+    fn seesaw_ramp_cuts_sqrt_and_doubles_batch() {
+        // underlying factor a=2 → Seesaw: lr /= √2, B *= 2 at each cut.
+        let s = base(ScheduleKind::BatchRamp {
+            alpha: 2f64.sqrt(),
+            beta: 2.0,
+            cuts: vec![30_000, 60_000],
+        });
+        let p = s.at(30_000);
+        assert!((p.lr - 0.01 / 2f64.sqrt()).abs() < 1e-12);
+        assert_eq!(p.batch_tokens, 2_000);
+        let p2 = s.at(60_000);
+        assert!((p2.lr - 0.005).abs() < 1e-12);
+        assert_eq!(p2.batch_tokens, 4_000);
+    }
+
+    #[test]
+    fn batch_clamp_respected() {
+        let s = base(ScheduleKind::BatchRamp { alpha: 1.0, beta: 4.0, cuts: vec![20_000, 40_000] })
+            .max_batch(5_000);
+        assert_eq!(s.at(50_000).batch_tokens, 5_000);
+    }
+
+    #[test]
+    fn cosine_cuts_monotone_and_match_levels() {
+        let cuts = cosine_cut_tokens(10_000, 100_000, 2.0, 8);
+        assert!(!cuts.is_empty());
+        assert!(cuts.windows(2).all(|w| w[0] < w[1]));
+        // at the k-th cut the cosine equals 2^-k
+        let s = base(ScheduleKind::CosineContinuous);
+        for (k, &c) in cuts.iter().enumerate() {
+            let want = 0.01 * 2f64.powi(-(k as i32 + 1));
+            assert!((s.at(c).lr - want).abs() / want < 0.01, "cut {k} at {c}");
+        }
+    }
+
+    #[test]
+    fn continuous_seesaw_hits_lemma1_step_count() {
+        // No warmup so the whole run is the decay interval.
+        let s = JointSchedule::new(0.01, 1_000, 0, 10_000_000, ScheduleKind::ContinuousSeesaw);
+        let baseline = JointSchedule::new(0.01, 1_000, 0, 10_000_000, ScheduleKind::CosineContinuous);
+        let t = baseline.serial_steps() as f64;
+        let got = s.serial_steps() as f64;
+        let want = 2.0 / PI;
+        assert!(
+            (got / t - want).abs() < 0.01,
+            "steps ratio {} vs 2/π={}",
+            got / t,
+            want
+        );
+    }
+
+    #[test]
+    fn serial_steps_counts_batches() {
+        let s = JointSchedule::new(0.01, 100, 0, 1_000, ScheduleKind::Constant);
+        assert_eq!(s.serial_steps(), 10);
+        assert_eq!(s.consumed_tokens(), 1_000);
+    }
+}

@@ -1,0 +1,102 @@
+//! Micro-benchmark harness (criterion substitute): warmup, repeated
+//! timed batches, median/mean/p10/p90 over per-iteration times.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:40} {:>12} median  {:>12} mean  [{:>10} .. {:>10}]  ({} iters)",
+            self.name,
+            fmt(self.median),
+            fmt(self.mean),
+            fmt(self.p10),
+            fmt(self.p90),
+            self.iters
+        );
+    }
+
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+fn fmt(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: a warmup phase, then timed samples until
+/// `target_time` elapses (minimum `min_samples`). Returns stats over
+/// per-call durations.
+pub fn bench(name: &str, target_time: Duration, mut f: impl FnMut()) -> BenchResult {
+    // warmup: ~10% of budget
+    let warm_until = Instant::now() + target_time / 10;
+    while Instant::now() < warm_until {
+        f();
+    }
+    let mut samples = Vec::new();
+    let end = Instant::now() + target_time;
+    let min_samples = 10;
+    while Instant::now() < end || samples.len() < min_samples {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let n = samples.len();
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: n as u64,
+        mean,
+        median: samples[n / 2],
+        p10: samples[n / 10],
+        p90: samples[9 * n / 10],
+    };
+    result.report();
+    result
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept for call-site clarity).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_quantiles() {
+        let r = bench("noop-ish", Duration::from_millis(30), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 10);
+        assert!(r.p10 <= r.median && r.median <= r.p90);
+        assert!(r.mean.as_nanos() > 0);
+    }
+}

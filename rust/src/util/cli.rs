@@ -1,0 +1,138 @@
+//! Tiny CLI flag parser: `prog <subcommand> [--flag value] [--switch]`.
+//! Unknown flags are errors; values parse on demand with typed accessors.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping the program name).
+    /// `switches` lists boolean flags that never consume a value token.
+    pub fn from_env(switches: &[&str]) -> Result<Self> {
+        Self::parse(std::env::args().skip(1), switches)
+    }
+
+    pub fn parse(items: impl IntoIterator<Item = String>, switches: &[&str]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(item) = it.next() {
+            if let Some(name) = item.strip_prefix("--") {
+                let (key, inline) = match name.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (name.to_string(), None),
+                };
+                if key.is_empty() {
+                    bail!("empty flag name");
+                }
+                let value = match inline {
+                    Some(v) => Some(v),
+                    None if switches.contains(&key.as_str()) => None,
+                    None => match it.peek() {
+                        Some(next) if !next.starts_with("--") => Some(it.next().unwrap()),
+                        _ => None,
+                    },
+                };
+                out.flags.entry(key).or_default().push(value.unwrap_or_else(|| "true".into()));
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(item);
+            } else {
+                out.positional.push(item);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_opt(&self, key: &str) -> Result<Option<f64>> {
+        self.str_opt(key)
+            .map(|s| s.parse::<f64>().map_err(|e| anyhow!("--{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        Ok(self.f64_opt(key)?.unwrap_or(default))
+    }
+
+    pub fn u64_opt(&self, key: &str) -> Result<Option<u64>> {
+        self.str_opt(key)
+            .map(|s| s.parse::<u64>().map_err(|e| anyhow!("--{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        Ok(self.u64_opt(key)?.unwrap_or(default))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_opt(key)?.map(|x| x as usize).unwrap_or(default))
+    }
+
+    /// Bool switch: present (no value) or explicit true/false.
+    pub fn switch(&self, key: &str) -> bool {
+        matches!(self.str_opt(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["full"]).unwrap()
+    }
+
+    #[test]
+    fn subcommand_flags_and_positionals() {
+        let a = parse("train --model s --alpha 1.1 --full extra1 extra2");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str_or("model", "x"), "s");
+        assert_eq!(a.f64_or("alpha", 0.0).unwrap(), 1.1);
+        assert!(a.switch("full"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn equals_syntax_and_defaults() {
+        let a = parse("exp --id=figure1 --alpha=2.0");
+        assert_eq!(a.str_or("id", ""), "figure1");
+        assert_eq!(a.f64_or("alpha", 0.0).unwrap(), 2.0);
+        assert_eq!(a.u64_or("missing", 9).unwrap(), 9);
+        assert!(!a.switch("absent"));
+    }
+
+    #[test]
+    fn repeated_flag_keeps_last() {
+        let a = parse("x --lr 1 --lr 2");
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("x --lr abc");
+        assert!(a.f64_or("lr", 0.0).is_err());
+    }
+
+    #[test]
+    fn switch_followed_by_flag() {
+        let a = parse("x --full --model m");
+        assert!(a.switch("full"));
+        assert_eq!(a.str_or("model", ""), "m");
+    }
+}

@@ -1,0 +1,61 @@
+//! From-scratch utility substrates.
+//!
+//! The build is fully offline against the image's vendored crate set
+//! (only the `xla` closure + `anyhow`), so the facilities a framework
+//! normally pulls from crates.io are implemented here:
+//!
+//! * [`rng`] — splittable xoshiro256** PRNG + normal/uniform sampling,
+//! * [`json`] — minimal JSON parser/printer (manifest + config files),
+//! * [`cli`] — flag parser for the launcher,
+//! * [`bench`] — timing harness backing `cargo bench`,
+//! * [`prop`] — property-based test driver (seeded generators + failure
+//!   reporting), substituting for proptest on coordinator invariants.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// A unique temporary directory removed on drop (test support).
+pub struct TempDir {
+    path: std::path::PathBuf,
+}
+
+impl TempDir {
+    pub fn new(tag: &str) -> std::io::Result<Self> {
+        use std::time::{SystemTime, UNIX_EPOCH};
+        let nanos = SystemTime::now().duration_since(UNIX_EPOCH).unwrap().as_nanos();
+        let pid = std::process::id();
+        let path = std::env::temp_dir().join(format!("seesaw-{tag}-{pid}-{nanos}"));
+        std::fs::create_dir_all(&path)?;
+        Ok(Self { path })
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tempdir_creates_and_cleans() {
+        let p;
+        {
+            let t = TempDir::new("x").unwrap();
+            p = t.path().to_path_buf();
+            assert!(p.exists());
+            std::fs::write(p.join("f"), b"hi").unwrap();
+        }
+        assert!(!p.exists());
+    }
+}

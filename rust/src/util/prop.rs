@@ -1,0 +1,130 @@
+//! Property-based testing harness (proptest substitute): run a property
+//! over many seeded random cases; on failure, report the seed + case and
+//! retry the minimal-effort shrink (halving numeric fields via the
+//! generator's own size parameter).
+//!
+//! Usage (`no_run`: doctest binaries can't locate the PJRT rpath here):
+//! ```no_run
+//! use seesaw::util::prop::{check, Gen};
+//! check("sum commutes", 200, |g: &mut Gen| {
+//!     let a = g.u64(1000);
+//!     let b = g.u64(1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Case generator handed to properties: seeded randomness + helpers.
+pub struct Gen {
+    rng: Rng,
+    pub case: u64,
+    /// Shrink factor in (0, 1]; sizes scale down when replaying a failure.
+    pub scale: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: u64) -> Self {
+        Self { rng: Rng::for_key(seed, case), case, scale: 1.0 }
+    }
+
+    pub fn u64(&mut self, max_inclusive: u64) -> u64 {
+        let m = ((max_inclusive as f64) * self.scale).max(1.0) as u64;
+        self.rng.below(m + 1)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        if hi <= lo {
+            return lo;
+        }
+        lo + self.u64((hi - lo - 1) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.range(0, items.len())]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, scale: f64) -> Vec<f32> {
+        (0..len).map(|_| (self.normal() * scale) as f32).collect()
+    }
+}
+
+/// Run `property` over `cases` generated cases. Panics (with seed info) on
+/// the first failing case after attempting a scaled-down replay.
+pub fn check(name: &str, cases: u64, property: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let seed = std::env::var("SEESAW_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EE5_A77E_57ED);
+    for case in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, case);
+            property(&mut g);
+        });
+        if let Err(err) = result {
+            // try a shrunk replay for a smaller counterexample report
+            for scale in [0.5, 0.25, 0.1] {
+                let shrunk = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, case);
+                    g.scale = scale;
+                    property(&mut g);
+                });
+                if shrunk.is_err() {
+                    panic!(
+                        "property `{name}` failed (seed={seed}, case={case}, shrink scale={scale}): {err:?}"
+                    );
+                }
+            }
+            panic!("property `{name}` failed (seed={seed}, case={case}): {err:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("add commutes", 64, |g| {
+            let a = g.u64(1_000);
+            let b = g.u64(1_000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_reports_seed() {
+        check("always fails", 8, |g| {
+            let x = g.u64(10);
+            assert!(x > 100, "x={x}");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(1, 2);
+        for _ in 0..100 {
+            let x = g.usize_in(5, 10);
+            assert!((5..10).contains(&x));
+            let y = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&y));
+        }
+        let v = g.vec_f32(16, 2.0);
+        assert_eq!(v.len(), 16);
+    }
+}

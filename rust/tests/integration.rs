@@ -1,0 +1,315 @@
+//! Integration tests over the full three-layer stack: rust coordinator →
+//! PJRT runtime → AOT JAX/Pallas artifacts.
+//!
+//! These need `make artifacts` to have run (the Makefile's `test` target
+//! guarantees it); if artifacts are missing the tests fail with a clear
+//! message rather than silently passing.
+
+use seesaw::config::{OptimizerKind, ScheduleSpec, TrainConfig};
+use seesaw::coordinator::Trainer;
+use seesaw::runtime::ModelRuntime;
+use seesaw::util::TempDir;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    // tests run from the crate root
+    std::path::PathBuf::from("artifacts")
+}
+
+fn require_artifacts(sub: &str) -> std::path::PathBuf {
+    let dir = artifacts_dir().join(sub);
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts/{sub} missing — run `make artifacts` first"
+    );
+    dir
+}
+
+fn base_config() -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.model = "test".into();
+    c.artifacts_dir = artifacts_dir();
+    c.total_tokens = 16_384; // 32 steps at 512-token microbatch granularity
+    c.base_batch_tokens = 512;
+    c.base_lr = 3e-3;
+    c.corpus_tokens = 120_000;
+    c.eval_every = 8;
+    c.eval_batches = 2;
+    c
+}
+
+#[test]
+fn runtime_init_grad_eval_roundtrip() {
+    let rt = ModelRuntime::load(require_artifacts("test")).unwrap();
+    assert_eq!(rt.manifest.params.len(), 10);
+    let params = rt.init(0).unwrap();
+    assert_eq!(params.len(), 10);
+    // deterministic init
+    let params2 = rt.init(0).unwrap();
+    let a = rt.to_host(&params).unwrap();
+    let b = rt.to_host(&params2).unwrap();
+    assert_eq!(a, b, "same seed must give identical params");
+    let c = rt.to_host(&rt.init(1).unwrap()).unwrap();
+    assert_ne!(a, c, "different seed must differ");
+
+    let b_tokens = rt.microbatch() * rt.seq_len();
+    let tokens: Vec<i32> = (0..b_tokens).map(|i| (i % 256) as i32).collect();
+    let targets: Vec<i32> = (0..b_tokens).map(|i| ((i + 1) % 256) as i32).collect();
+    let out = rt.grad_step(&params, &tokens, &targets, 0.0).unwrap();
+    // fresh model ≈ uniform predictor
+    assert!((out.ce - (256f32).ln()).abs() < 1.0, "initial CE {}", out.ce);
+    assert!(out.gnorm_sq.is_finite() && out.gnorm_sq > 0.0);
+    assert_eq!(out.grads.len(), 10);
+    let total: usize = out.grads.iter().map(|g| g.len()).sum();
+    assert_eq!(total, rt.manifest.total_elements());
+    assert!(out.grads.iter().flatten().all(|x| x.is_finite()));
+
+    // eval agrees with grad_step's loss on the same batch (no-grad path)
+    let (ce, _) = rt.eval_step(&params, &tokens, &targets).unwrap();
+    assert!((ce - out.ce).abs() < 1e-4, "eval {ce} vs grad {}", out.ce);
+}
+
+#[test]
+fn pallas_variant_matches_ref_variant() {
+    let rt_ref = ModelRuntime::load(require_artifacts("test")).unwrap();
+    let rt_pal = ModelRuntime::load(require_artifacts("test_pallas")).unwrap();
+    let params = rt_ref.init(3).unwrap();
+    let params_host = rt_ref.to_host(&params).unwrap();
+    let params_pal = rt_pal.from_host(&params_host).unwrap();
+
+    let b_tokens = rt_ref.microbatch() * rt_ref.seq_len();
+    let tokens: Vec<i32> = (0..b_tokens).map(|i| ((i * 7 + 3) % 256) as i32).collect();
+    let targets: Vec<i32> = (0..b_tokens).map(|i| ((i * 5 + 11) % 256) as i32).collect();
+
+    let o1 = rt_ref.grad_step(&params, &tokens, &targets, 1e-4).unwrap();
+    let o2 = rt_pal.grad_step(&params_pal, &tokens, &targets, 1e-4).unwrap();
+    assert!((o1.ce - o2.ce).abs() < 2e-3, "CE parity: {} vs {}", o1.ce, o2.ce);
+    assert!((o1.zsq - o2.zsq).abs() / o1.zsq.abs().max(1.0) < 2e-3, "z parity");
+    // gradient parity leaf by leaf (flash-attention + fused CE + AdamW path)
+    for (leaf, (g1, g2)) in o1.grads.iter().zip(&o2.grads).enumerate() {
+        for (i, (a, b)) in g1.iter().zip(g2).enumerate() {
+            assert!(
+                (a - b).abs() < 5e-3 + 5e-2 * a.abs().max(b.abs()),
+                "grad leaf {leaf} idx {i}: {a} vs {b}"
+            );
+        }
+    }
+
+    // optimizer parity: one AdamW step on both variants
+    let grads_ref = rt_ref.grads_to_literals(&o1.grads).unwrap();
+    let grads_pal = rt_pal.grads_to_literals(&o1.grads).unwrap();
+    let zeros_r = rt_ref.zeros_like_params().unwrap();
+    let zeros_p = rt_pal.zeros_like_params().unwrap();
+    let (p1, m1, v1) = rt_ref
+        .adamw_step(&params, &grads_ref, &zeros_r, &rt_ref.zeros_like_params().unwrap(), 1e-3, 0.1, 10.0, 20.0)
+        .unwrap();
+    let (p2, m2, v2) = rt_pal
+        .adamw_step(&params_pal, &grads_pal, &zeros_p, &rt_pal.zeros_like_params().unwrap(), 1e-3, 0.1, 10.0, 20.0)
+        .unwrap();
+    for (a, b) in [(&p1, &p2), (&m1, &m2), (&v1, &v2)] {
+        let ha = rt_ref.to_host(a).unwrap();
+        let hb = rt_pal.to_host(b).unwrap();
+        for (la, lb) in ha.iter().zip(&hb) {
+            for (x, y) in la.iter().zip(lb) {
+                assert!((x - y).abs() < 1e-5 + 1e-4 * x.abs(), "adamw parity {x} vs {y}");
+            }
+        }
+    }
+}
+
+#[test]
+fn trainer_loss_decreases_and_logs_are_consistent() {
+    let mut cfg = base_config();
+    let dir = TempDir::new("trainer").unwrap();
+    cfg.out_csv = Some(dir.path().join("run.csv"));
+    let mut t = Trainer::new(cfg).unwrap();
+    let log = t.run().unwrap();
+    assert!(log.total_steps() >= 30, "steps {}", log.total_steps());
+    let first = log.records.first().unwrap();
+    let last = log.records.last().unwrap();
+    assert!((first.ce - (256f64).ln()).abs() < 1.0);
+    assert!(last.ce < first.ce - 0.3, "loss must fall: {} → {}", first.ce, last.ce);
+    assert!(log.final_val_ce().is_some(), "final step must be evaluated");
+    // token/flop accounting is cumulative and consistent
+    let mut tokens = 0u64;
+    for r in &log.records {
+        assert_eq!(r.tokens, tokens);
+        tokens += r.batch_tokens;
+        assert!(r.flops > 0.0 && r.serial_time > 0.0);
+    }
+    assert!(tokens >= t.total_tokens);
+    // csv written with one line per record + header
+    let text = std::fs::read_to_string(dir.path().join("run.csv")).unwrap();
+    assert_eq!(text.lines().count(), log.records.len() + 1);
+}
+
+#[test]
+fn world_size_does_not_change_semantics() {
+    let run = |world: usize| {
+        let mut cfg = base_config();
+        cfg.total_tokens = 8_192;
+        cfg.base_batch_tokens = 2_048; // 4 microbatches per step
+        cfg.world_size = world;
+        cfg.eval_every = 0;
+        let mut t = Trainer::new(cfg).unwrap();
+        t.run().unwrap()
+    };
+    let a = run(1);
+    let b = run(4);
+    assert_eq!(a.total_steps(), b.total_steps());
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert!((ra.ce - rb.ce).abs() < 1e-5, "step {}: {} vs {}", ra.step, ra.ce, rb.ce);
+        // grad averaging order differs (allreduce); allow tiny fp drift
+        assert!(
+            (ra.gnorm_sq - rb.gnorm_sq).abs() < 1e-6 + 1e-3 * ra.gnorm_sq,
+            "gnorm {} vs {}",
+            ra.gnorm_sq,
+            rb.gnorm_sq
+        );
+    }
+}
+
+#[test]
+fn seesaw_run_ramps_batch_and_saves_serial_steps() {
+    let run = |spec: ScheduleSpec| {
+        let mut cfg = base_config();
+        cfg.total_tokens = 32_768;
+        cfg.schedule = spec;
+        cfg.max_cuts = 8;
+        cfg.eval_every = 0;
+        let mut t = Trainer::new(cfg).unwrap();
+        t.run().unwrap()
+    };
+    let cosine = run(ScheduleSpec::Cosine);
+    let seesaw = run(ScheduleSpec::Seesaw { alpha: 2.0 });
+    // equal data within one final batch
+    assert!(seesaw.total_tokens() >= 32_768);
+    assert!(cosine.total_tokens() >= 32_768);
+    // the ramp actually happened
+    let max_batch = seesaw.records.iter().map(|r| r.batch_tokens).max().unwrap();
+    assert!(max_batch >= 2 * 512, "batch never ramped: {max_batch}");
+    assert!(
+        seesaw.total_steps() < cosine.total_steps(),
+        "seesaw {} steps vs cosine {}",
+        seesaw.total_steps(),
+        cosine.total_steps()
+    );
+    assert!(seesaw.total_serial_time() < cosine.total_serial_time());
+    // and the lr staircase fell by √2 per cut (after the warmup climb)
+    let warmup = 32_768 / 10;
+    let lrs: Vec<f64> =
+        seesaw.records.iter().filter(|r| r.tokens >= warmup).map(|r| r.lr).collect();
+    assert!(lrs.windows(2).all(|w| w[1] <= w[0] + 1e-12), "lr must be non-increasing after warmup");
+}
+
+#[test]
+fn checkpoint_resume_is_bit_continuous() {
+    let dir = TempDir::new("resume").unwrap();
+    // uninterrupted reference run
+    let mut cfg = base_config();
+    cfg.total_tokens = 8_192;
+    cfg.eval_every = 0;
+    let reference = Trainer::new(cfg.clone()).unwrap().run().unwrap();
+
+    // interrupted: same schedule, stop + checkpoint halfway through…
+    let mut cfg1 = cfg.clone();
+    cfg1.checkpoint_dir = Some(dir.path().to_path_buf());
+    let mut t1 = Trainer::new(cfg1).unwrap();
+    let mut state = t1.init_state().unwrap();
+    let mut first_half = Vec::new();
+    while state.tokens < 4_096 {
+        first_half.push(t1.train_step(&mut state).unwrap().ce);
+    }
+    t1.save_checkpoint(&state).unwrap();
+    drop(t1);
+    assert!(dir.path().join("latest.ckpt").exists());
+
+    // …then resume to the full budget (same schedule horizon)
+    let mut cfg2 = cfg.clone();
+    cfg2.checkpoint_dir = Some(dir.path().to_path_buf());
+    let second = Trainer::new(cfg2).unwrap().run().unwrap();
+
+    let full: Vec<f64> = reference.records.iter().map(|r| r.ce).collect();
+    let stitched: Vec<f64> =
+        first_half.iter().copied().chain(second.records.iter().map(|r| r.ce)).collect();
+    assert_eq!(full.len(), stitched.len());
+    for (i, (a, b)) in full.iter().zip(&stitched).enumerate() {
+        assert!((a - b).abs() < 1e-6, "step {i}: {a} vs {b} — resume broke continuity");
+    }
+}
+
+#[test]
+fn nsgd_and_sgd_optimizers_train() {
+    for opt in [OptimizerKind::Nsgd { ema: 0.9 }, OptimizerKind::Sgd] {
+        let mut cfg = base_config();
+        cfg.optimizer = opt;
+        cfg.base_lr = match opt {
+            // NSGD lr is in normalized units (η̃ = η/√E‖g‖²)
+            OptimizerKind::Nsgd { .. } => 3e-3,
+            _ => 0.05,
+        };
+        cfg.total_tokens = 16_384;
+        cfg.eval_every = 0;
+        let mut t = Trainer::new(cfg).unwrap();
+        let log = t.run().unwrap();
+        let first = log.records.first().unwrap().ce;
+        let last = log.records.last().unwrap().ce;
+        assert!(last.is_finite() && last < first, "{opt:?}: {first} → {last}");
+    }
+}
+
+#[test]
+fn zloss_changes_optimization_but_not_wildly() {
+    let run = |z: f64| {
+        let mut cfg = base_config();
+        cfg.zcoef = z;
+        cfg.total_tokens = 8_192;
+        cfg.eval_every = 0;
+        Trainer::new(cfg).unwrap().run().unwrap()
+    };
+    let off = run(0.0);
+    let on = run(1e-4);
+    let a = off.records.last().unwrap().ce;
+    let b = on.records.last().unwrap().ce;
+    assert!((a - b).abs() < 0.2, "z-loss at 1e-4 should barely shift CE: {a} vs {b}");
+    assert!(on.records.iter().all(|r| r.zloss.is_finite() && r.zloss >= 0.0));
+}
+
+#[test]
+fn coordinator_invariants_hold_under_random_configs() {
+    // property test over the microbatch planner + schedule interaction
+    seesaw::util::prop::check("batch plan covers schedule", 64, |g| {
+        let micro_tokens = 512u64;
+        let base = [512u64, 1024, 2048, 4096][g.usize_in(0, 4)];
+        let alpha = [1.1, 1.5, 2.0][g.usize_in(0, 3)];
+        let total = 20_000 + g.u64(80_000);
+        let cfg = {
+            let mut c = TrainConfig::default();
+            c.base_batch_tokens = base;
+            c.schedule = ScheduleSpec::Seesaw { alpha };
+            c.total_tokens = total;
+            c
+        };
+        let sched = cfg.build_schedule(total);
+        let mut tokens = 0u64;
+        let mut steps = 0u64;
+        while tokens < total {
+            let p = sched.at(tokens);
+            // the planner's rounding: whole microbatches, at least one
+            let n_micro = (p.batch_tokens as f64 / micro_tokens as f64).round().max(1.0) as u64;
+            let actual = n_micro * micro_tokens;
+            // rounding error bounded by half a microbatch (or the ≥1 floor)
+            assert!(
+                (actual as f64 - p.batch_tokens as f64).abs() <= micro_tokens as f64 / 2.0
+                    || actual == micro_tokens,
+                "batch {} rounded to {actual}",
+                p.batch_tokens
+            );
+            tokens += actual;
+            steps += 1;
+            assert!(steps < 10_000, "runaway");
+        }
+        // overshoot bounded by the final batch
+        let final_batch = sched.at(total - 1).batch_tokens.max(micro_tokens);
+        assert!(tokens - total < final_batch + micro_tokens);
+    });
+}

@@ -1,0 +1,217 @@
+//! Property-based tests (from-scratch harness, DESIGN.md §4) over the
+//! pure substrates: schedules, collectives, dataloader, theory recursion,
+//! checkpoint format, JSON. No PJRT dependency — these run everywhere.
+
+use seesaw::collective::{mean_reference, parallel_allreduce_mean, ring_allreduce_mean};
+use seesaw::coordinator::Checkpoint;
+use seesaw::data::{Corpus, Loader};
+use seesaw::linreg::recursion::Problem;
+use seesaw::linreg::spectrum::Spectrum;
+use seesaw::schedule::{cosine_cut_tokens, JointSchedule, ScheduleKind, SeesawBuilder};
+use seesaw::util::json::Value;
+use seesaw::util::prop::check;
+use seesaw::util::TempDir;
+
+#[test]
+fn prop_schedule_lr_positive_and_batch_bounded() {
+    check("schedule sanity", 128, |g| {
+        let total = 100_000 + g.u64(1_000_000);
+        let base_b = 512 * (1 + g.u64(16));
+        let alpha = 1.05 + g.f64_in(0.0, 1.5);
+        let b = SeesawBuilder::new(3e-3, base_b, total, alpha).max_cuts(48);
+        for sched in [b.cosine(), b.step_decay(), b.seesaw()] {
+            for _ in 0..32 {
+                let tok = g.u64(total);
+                let p = sched.at(tok);
+                assert!(p.lr > 0.0 && p.lr <= 3e-3 + 1e-12, "lr {}", p.lr);
+                assert!(p.batch_tokens >= 1);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_seesaw_effective_lr_invariant() {
+    // along Algorithm 1's staircase, lr·√batch stays within one warmup
+    // factor of constant after warmup — the Corollary 1 invariant.
+    check("seesaw α√β invariant", 64, |g| {
+        let total = 200_000 + g.u64(800_000);
+        let alpha = [1.1, 1.5, 2.0][g.usize_in(0, 3)];
+        let sched = SeesawBuilder::new(1e-2, 4096, total, alpha).max_cuts(32).seesaw();
+        let warm = sched.warmup_tokens;
+        let base = {
+            let p = sched.at(warm);
+            p.lr * (p.batch_tokens as f64).sqrt()
+        };
+        for _ in 0..32 {
+            let tok = warm + g.u64(total - warm - 1);
+            let p = sched.at(tok);
+            let inv = p.lr * (p.batch_tokens as f64).sqrt();
+            let ratio = inv / base;
+            assert!(
+                (0.99..1.01).contains(&ratio),
+                "lr·√B must be constant under Seesaw: {ratio} at {tok}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_cosine_cuts_match_levels() {
+    check("cosine cut levels", 64, |g| {
+        let total = 150_000 + g.u64(2_000_000);
+        let warm = total / 10;
+        let alpha = 1.05 + g.f64_in(0.0, 2.0);
+        let cuts = cosine_cut_tokens(warm, total, alpha, 40);
+        let sched = JointSchedule::new(1.0, 1024, warm, total, ScheduleKind::CosineContinuous);
+        for (k, &c) in cuts.iter().enumerate() {
+            let want = alpha.powi(-(k as i32 + 1));
+            let got = sched.at(c).lr;
+            // rounding to whole tokens moves the cosine by at most
+            // (π/2)/span per token — deep-tail cuts are quantization
+            // limited, so allow that absolute slack on top of 2% relative.
+            let span = (total - warm) as f64;
+            let quant = 2.0 * std::f64::consts::FRAC_PI_2 / span;
+            assert!(
+                (got - want).abs() < 0.02 * want + quant,
+                "cut {k}: cosine at {c} is {got}, want {want}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_ring_allreduce_equals_mean() {
+    check("ring allreduce = mean", 48, |g| {
+        let w = g.usize_in(1, 9);
+        let n = g.usize_in(1, 4000);
+        let shards: Vec<Vec<f32>> = (0..w).map(|_| g.vec_f32(n, 3.0)).collect();
+        let want = mean_reference(&shards);
+        let mut ring = shards.clone();
+        ring_allreduce_mean(&mut ring);
+        for r in &ring {
+            for (a, b) in r.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4 + 1e-4 * b.abs(), "{a} vs {b}");
+            }
+        }
+        let (par, _) = parallel_allreduce_mean(&shards);
+        for (a, b) in par.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4 + 1e-4 * b.abs());
+        }
+    });
+}
+
+#[test]
+fn prop_loader_stream_invariant_under_partitioning() {
+    check("loader partition invariance", 24, |g| {
+        let corpus = Corpus::synthetic(50_000, g.u64(1000));
+        let seq = [16, 32, 64][g.usize_in(0, 3)];
+        let seed = g.u64(1_000_000);
+        let total = 1 + g.usize_in(1, 16);
+        // random partition of `total` sequences
+        let mut sizes = Vec::new();
+        let mut left = total;
+        while left > 0 {
+            let take = 1 + g.usize_in(0, left);
+            sizes.push(take.min(left));
+            left -= take.min(left);
+        }
+        let collect = |szs: &[usize]| {
+            let mut l = Loader::new(corpus.clone(), seq, seed);
+            let mut out = Vec::new();
+            for &b in szs {
+                out.extend(l.next_batch(b).0);
+            }
+            out
+        };
+        assert_eq!(collect(&sizes), collect(&[total]), "partition {sizes:?}");
+    });
+}
+
+#[test]
+fn prop_risk_recursion_stays_positive_and_contracts_under_gate() {
+    check("recursion positivity", 48, |g| {
+        let dim = 4 + g.usize_in(0, 60);
+        let spec = if g.bool() {
+            Spectrum::Isotropic { dim }
+        } else {
+            Spectrum::PowerLaw { dim, exponent: 0.5 + g.f64_in(0.0, 1.5) }
+        };
+        let p = Problem::new(spec, g.f64_in(0.01, 2.0), g.f64_in(0.1, 4.0));
+        let eta = p.eta_max() * g.f64_in(0.1, 1.0);
+        let b = 1 + g.u64(64);
+        let mut it = p.iter();
+        let r0 = it.risk();
+        for _ in 0..500 {
+            it.step(eta, b);
+            let r = it.risk();
+            assert!(r.is_finite() && r >= 0.0, "risk must stay non-negative: {r}");
+            // under the Theorem-1 gate the risk never explodes
+            assert!(r <= r0 * 2.0 + 10.0 * p.sigma2, "risk blow-up: {r} from {r0}");
+        }
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_any_shapes() {
+    check("checkpoint roundtrip", 24, |g| {
+        let dir = TempDir::new("prop-ckpt").unwrap();
+        let leaves = 1 + g.usize_in(0, 6);
+        let mk = |g: &mut seesaw::util::prop::Gen| -> Vec<Vec<f32>> {
+            (0..leaves).map(|_| {
+                let n = g.usize_in(0, 300);
+                g.vec_f32(n, 10.0)
+            }).collect()
+        };
+        let ck = Checkpoint {
+            step: g.u64(1_000_000),
+            tokens: g.u64(u32::MAX as u64),
+            gnorm_ema: g.f64_in(0.0, 1e6),
+            flops: g.f64_in(0.0, 1e18),
+            serial_time: g.f64_in(0.0, 1e6),
+            data_cursor: g.u64(1_000_000),
+            params: mk(g),
+            m: mk(g),
+            v: mk(g),
+        };
+        let path = dir.path().join("x.ckpt");
+        ck.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_numbers_and_strings() {
+    check("json roundtrip", 64, |g| {
+        use seesaw::util::json::{arr, num, obj, s};
+        let v = obj(vec![
+            ("a", num((g.u64(1 << 40) as f64) - (1u64 << 39) as f64)),
+            ("b", num(g.f64_in(-1e9, 1e9))),
+            ("s", s(format!("x{}_\"q\"\n", g.u64(999)))),
+            ("l", arr((0..g.usize_in(0, 6)).map(|i| num(i as f64)).collect())),
+        ]);
+        let text = if g.bool() { v.to_string_pretty() } else { v.to_string_compact() };
+        let back = Value::parse(&text).unwrap();
+        // compare numerically (floats through text must round-trip via {})
+        let a = back.req("b").unwrap().as_f64().unwrap();
+        let b = v.req("b").unwrap().as_f64().unwrap();
+        assert!((a - b).abs() <= 1e-9 * b.abs().max(1.0), "{a} vs {b}");
+        assert_eq!(back.req("s").unwrap().as_str().unwrap(), v.req("s").unwrap().as_str().unwrap());
+        assert_eq!(back.req("l").unwrap().as_arr().unwrap().len(), v.req("l").unwrap().as_arr().unwrap().len());
+    });
+}
+
+#[test]
+fn prop_wallclock_monotone_in_batch() {
+    check("wallclock monotone", 48, |g| {
+        let m = seesaw::metrics::WallClockModel {
+            devices: 1 + g.u64(128),
+            tokens_per_device: 128 * (1 + g.u64(64)),
+            step_latency: g.f64_in(0.01, 5.0),
+        };
+        let a = 1 + g.u64(1 << 20);
+        let b = a + g.u64(1 << 20);
+        assert!(m.step_time(a) <= m.step_time(b) + 1e-12);
+        assert!(m.step_time(a) >= m.step_latency);
+    });
+}
