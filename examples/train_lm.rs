@@ -10,10 +10,12 @@
 //! make artifacts
 //! cargo run --release --example train_lm -- [--model m] [--alpha 1.1]
 //!     [--lr 3e-3] [--batch-tokens 4096] [--total-tokens 0(=Chinchilla)]
-//!     [--world-size 1] [--variant ref|pallas] [--zcoef 0]
+//!     [--world-size 1] [--worker-threads 1] [--collective ring|parallel]
+//!     [--variant ref|pallas] [--zcoef 0]
 //! ```
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+use seesaw::collective::CollectiveKind;
 use seesaw::config::{ScheduleSpec, TrainConfig};
 use seesaw::coordinator::Trainer;
 use seesaw::metrics::print_table;
@@ -27,6 +29,10 @@ fn main() -> Result<()> {
     let batch = args.u64_or("batch-tokens", 4096)?;
     let total = args.u64_or("total-tokens", 0)?;
     let world = args.usize_or("world-size", 1)?;
+    let threads = args.usize_or("worker-threads", 1)?;
+    let collective = args.str_or("collective", "ring");
+    let collective = CollectiveKind::parse(&collective)
+        .ok_or_else(|| anyhow!("unknown collective `{collective}` (ring|parallel)"))?;
     let variant = args.str_or("variant", "ref");
     let zcoef = args.f64_or("zcoef", 0.0)?;
 
@@ -39,6 +45,8 @@ fn main() -> Result<()> {
         cfg.base_batch_tokens = batch;
         cfg.total_tokens = total;
         cfg.world_size = world;
+        cfg.exec.worker_threads = threads;
+        cfg.exec.collective = collective;
         cfg.zcoef = zcoef;
         cfg.eval_every = 25;
         cfg.corpus_tokens = 4_000_000;

@@ -2,31 +2,118 @@
 //! the building blocks of one optimizer step, timed individually so the
 //! §Perf pass can attribute step time:
 //!
+//! * **step-engine worker scaling** — the accumulate+allreduce path at
+//!   1/2/4/8 worker threads (pure CPU, runs without artifacts)
 //! * `grad_step` — PJRT execute of fwd+bwd on one microbatch
 //! * `adamw_step` / `sgd_step` — optimizer executables
 //! * `eval_step` — forward only
 //! * literal construction + host readback (the runtime's copy overhead)
 //! * gradient accumulation, ring allreduce, scheduler math, dataloader
 //!
-//! Run: `cargo bench --bench hotpath` (after `make artifacts`).
+//! Run: `cargo bench --bench hotpath` (the engine-scaling section runs
+//! everywhere; the runtime sections need `make artifacts`).
 
-use seesaw::collective::ring_allreduce_mean;
+use seesaw::collective::{ring_allreduce_mean, CollectiveKind};
+use seesaw::config::ExecSpec;
+use seesaw::coordinator::{GradSource, Microbatch, MicroStats, StepEngine};
 use seesaw::data::{Corpus, Loader};
 use seesaw::runtime::{lit_f32, ModelRuntime};
 use seesaw::schedule::SeesawBuilder;
 use seesaw::util::bench::{bench, black_box, BenchResult};
 use std::time::Duration;
 
-fn main() {
-    let dir = std::path::Path::new("artifacts/test");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts/test missing — run `make artifacts` first");
-        std::process::exit(1);
+/// Synthetic gradient source: arithmetic-heavy per-element accumulate
+/// standing in for fwd+bwd + host readback, so the engine's threading is
+/// exercised with real work to split.
+struct SynthGrad {
+    elems: usize,
+}
+
+impl GradSource for SynthGrad {
+    fn grad_elements(&self) -> usize {
+        self.elems
     }
+
+    fn accumulate(
+        &self,
+        tokens: &[i32],
+        _targets: &[i32],
+        sink: &mut [f32],
+    ) -> anyhow::Result<MicroStats> {
+        let seed = tokens.first().copied().unwrap_or(0) as f32;
+        for (k, x) in sink.iter_mut().enumerate() {
+            let mut v = seed + k as f32;
+            v = v * 1.000_1 + 0.5;
+            v = v * v * 1e-6 + v * 0.25;
+            *x += v;
+        }
+        Ok(MicroStats { ce: seed * 1e-3, zsq: 0.0 })
+    }
+}
+
+/// Worker-scaling harness: one engine step (8 workers × 115k-element
+/// gradients, 16 microbatches) at increasing thread counts. The result
+/// trajectory is bit-identical at every thread count (the engine's
+/// contract); only the wall time changes.
+fn worker_scaling(results: &mut Vec<BenchResult>) {
+    const ELEMS: usize = 115_008;
+    const WORLD: usize = 8;
+    const MICRO: u64 = 16;
+    let src = SynthGrad { elems: ELEMS };
+    let micro: Vec<Microbatch> = (0..MICRO)
+        .map(|i| Microbatch { index: i, tokens: vec![i as i32; 8], targets: vec![0; 8] })
+        .collect();
+    println!("-- step-engine worker scaling ({WORLD} workers × {ELEMS} grads, {MICRO} microbatches, accumulate+allreduce) --");
+    let mut medians = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        let mut engine = StepEngine::new(ExecSpec {
+            worker_threads: threads,
+            collective: CollectiveKind::Ring,
+            pin_order: true,
+        });
+        let r = bench(&format!("engine step ({threads} threads)"), Duration::from_secs(1), || {
+            black_box(engine.execute(&src, WORLD, micro.clone()).unwrap());
+        });
+        medians.push((threads, r.median_secs()));
+        results.push(r);
+    }
+    let t1 = medians[0].1;
+    for (threads, t) in &medians[1..] {
+        println!("  speedup at {threads} threads: {:.2}× (vs sequential engine)", t1 / t);
+    }
+}
+
+fn main() {
     let t = Duration::from_secs(2);
     let mut results: Vec<BenchResult> = Vec::new();
 
-    // --- runtime executables ------------------------------------------
+    // --- step engine (pure CPU — runs without artifacts) ----------------
+    worker_scaling(&mut results);
+
+    // --- coordinator pieces that need no runtime -------------------------
+    let shards: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 115_008]).collect();
+    results.push(bench("ring allreduce (4 workers × 115k)", t, || {
+        let mut s = shards.clone();
+        ring_allreduce_mean(&mut s);
+        black_box(&s);
+    }));
+
+    let sched = SeesawBuilder::new(3e-3, 4096, 10_000_000, 1.1).seesaw();
+    results.push(bench("schedule.at()", Duration::from_millis(300), || {
+        black_box(sched.at(black_box(5_000_000)));
+    }));
+
+    let mut loader = Loader::new(Corpus::synthetic(500_000, 0), 64, 0);
+    results.push(bench("dataloader next_batch(8×64)", Duration::from_millis(500), || {
+        black_box(loader.next_batch(8));
+    }));
+
+    // --- runtime executables (need `make artifacts`) ---------------------
+    let dir = std::path::Path::new("artifacts/test");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/test missing — skipping runtime benches (run `make artifacts` for the full set)");
+        return;
+    }
     let rt = ModelRuntime::load(dir).expect("load runtime");
     let params = rt.init(0).unwrap();
     let n_tok = rt.microbatch() * rt.seq_len();
@@ -35,6 +122,10 @@ fn main() {
 
     results.push(bench("grad_step (fwd+bwd, 8×64 microbatch)", t, || {
         black_box(rt.grad_step(&params, &tokens, &targets, 0.0).unwrap());
+    }));
+    let mut sink = vec![0f32; rt.manifest.total_elements()];
+    results.push(bench("grad_step_into (zero-copy accumulate)", t, || {
+        black_box(rt.grad_step_into(&params, &tokens, &targets, 0.0, &mut sink).unwrap());
     }));
     results.push(bench("eval_step (fwd only)", t, || {
         black_box(rt.eval_step(&params, &tokens, &targets).unwrap());
@@ -65,7 +156,6 @@ fn main() {
         black_box(rt.to_host(&params).unwrap());
     }));
 
-    // --- coordinator pieces ----------------------------------------------
     let mut acc = vec![0f32; rt.manifest.total_elements()];
     results.push(bench("grad accumulate (115k axpy)", t, || {
         let mut off = 0;
@@ -77,28 +167,12 @@ fn main() {
         }
         black_box(&acc);
     }));
-    let shards: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 115_008]).collect();
-    results.push(bench("ring allreduce (4 workers × 115k)", t, || {
-        let mut s = shards.clone();
-        ring_allreduce_mean(&mut s);
-        black_box(&s);
-    }));
-
-    let sched = SeesawBuilder::new(3e-3, 4096, 10_000_000, 1.1).seesaw();
-    results.push(bench("schedule.at()", Duration::from_millis(300), || {
-        black_box(sched.at(black_box(5_000_000)));
-    }));
-
-    let mut loader = Loader::new(Corpus::synthetic(500_000, 0), 64, 0);
-    results.push(bench("dataloader next_batch(8×64)", Duration::from_millis(500), || {
-        black_box(loader.next_batch(8));
-    }));
 
     // --- summary: where does one optimizer step go? ----------------------
     let get = |name: &str| {
         results.iter().find(|r| r.name.starts_with(name)).map(|r| r.median_secs()).unwrap_or(0.0)
     };
-    let grad = get("grad_step");
+    let grad = get("grad_step (");
     let opt = get("adamw_step");
     let overhead = get("literal build") + get("grad accumulate") + get("dataloader");
     println!("\n-- step budget (1 microbatch/step) --");

@@ -1,11 +1,21 @@
-//! Simulated data-parallel collectives (the cluster substitute, DESIGN §3).
+//! Simulated data-parallel collectives (the cluster substitute, DESIGN.md §3).
 //!
 //! The coordinator shards each global batch across `world_size` simulated
-//! workers; their gradients are combined with a chunked **ring allreduce**
-//! — the same 2·(W−1)-phase schedule real clusters run — implemented over
-//! in-memory shards, with a scoped-thread parallel variant. Byte counters
-//! let the wall-clock model charge communication; unit + property tests
-//! pin the semantics (mean of all shards, bit-exact reproducibility, any
+//! workers; their gradients are combined by a [`Collective`] — one trait,
+//! two implementations selected by config ([`CollectiveKind`]):
+//!
+//! * [`RingCollective`] — a chunked **ring allreduce**, the same
+//!   2·(W−1)-phase schedule real clusters run, implemented over in-memory
+//!   shards. Bit-exact reference; the default.
+//! * [`ParallelCollective`] — a scoped-thread tree reduction that chunks
+//!   the vector across threads. Same mean (fixed per-chunk worker order),
+//!   faster at large gradient sizes.
+//!
+//! Every call returns [`CollectiveStats`] — both implementations account
+//! the canonical ring payload of `2·(W−1)·n·4` bytes over `2·(W−1)` phases,
+//! so the wall-clock model can charge communication identically whichever
+//! implementation ran. Unit + property tests pin the semantics (mean of
+//! all shards, bit-exact reproducibility, byte-accounting parity, any
 //! W ≥ 1).
 
 /// Statistics from one collective call.
@@ -15,6 +25,142 @@ pub struct CollectiveStats {
     pub bytes_moved: u64,
     /// Communication phases executed (2·(W−1) for a ring).
     pub phases: u32,
+}
+
+/// Which allreduce implementation combines worker gradients.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CollectiveKind {
+    /// Sequential chunked ring allreduce (bit-exact reference).
+    #[default]
+    Ring,
+    /// Scoped-thread chunked reduction.
+    Parallel,
+}
+
+impl CollectiveKind {
+    /// Parse the config/CLI spelling (`ring` | `parallel`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "ring" => Some(Self::Ring),
+            "parallel" => Some(Self::Parallel),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Ring => "ring",
+            Self::Parallel => "parallel",
+        }
+    }
+
+    /// Instantiate the implementation behind the trait object the step
+    /// engine holds.
+    pub fn build(self) -> Box<dyn Collective> {
+        match self {
+            Self::Ring => Box::new(RingCollective),
+            Self::Parallel => Box::new(ParallelCollective::default()),
+        }
+    }
+}
+
+/// A mean-allreduce over equal-length worker gradient shards.
+///
+/// Contract: on return, shard 0 holds the element-wise mean over all
+/// shards (implementations may update the other shards too, as a real
+/// allreduce would); the result is deterministic for fixed inputs — the
+/// step engine's bit-exactness guarantee rests on it.
+pub trait Collective: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Reduce `shards` to their mean in place; returns byte/phase stats.
+    fn allreduce_mean(&self, shards: &mut [Vec<f32>]) -> CollectiveStats;
+}
+
+/// Ring-allreduce implementation of [`Collective`].
+pub struct RingCollective;
+
+impl Collective for RingCollective {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn allreduce_mean(&self, shards: &mut [Vec<f32>]) -> CollectiveStats {
+        ring_allreduce_mean(shards)
+    }
+}
+
+/// Thread-parallel implementation of [`Collective`].
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelCollective {
+    /// Cap on reduction threads (chunks of ≥64k elements each).
+    pub max_threads: usize,
+}
+
+impl Default for ParallelCollective {
+    fn default() -> Self {
+        Self { max_threads: 8 }
+    }
+}
+
+impl Collective for ParallelCollective {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    /// In-place variant of [`parallel_allreduce_mean`]: shard 0 doubles
+    /// as the accumulator (no per-step result vector, no copy-back).
+    /// Bit-identical to the free function — `0 + s₀` is exact in fp, so
+    /// starting the per-chunk ordered sum from shard 0's values instead
+    /// of a zeroed buffer changes nothing.
+    fn allreduce_mean(&self, shards: &mut [Vec<f32>]) -> CollectiveStats {
+        let w = shards.len();
+        assert!(w > 0, "need at least one worker");
+        if w == 1 {
+            return CollectiveStats::default();
+        }
+        let n = shards[0].len();
+        assert!(shards.iter().all(|s| s.len() == n), "shards must be congruent");
+        let (first, rest) = shards.split_first_mut().expect("w > 1");
+        let rest: &[Vec<f32>] = rest;
+        // at least 64k elements per chunk to amortize thread spawn
+        // (chunk floor of 1 keeps chunks_mut happy on empty gradients)
+        let threads = (n / 65_536).clamp(1, self.max_threads.max(1));
+        let chunk = n.div_ceil(threads).max(1);
+        std::thread::scope(|scope| {
+            for (ci, out_chunk) in first.chunks_mut(chunk).enumerate() {
+                let lo = ci * chunk;
+                scope.spawn(move || {
+                    let hi = lo + out_chunk.len();
+                    for s in rest {
+                        for (o, x) in out_chunk.iter_mut().zip(&s[lo..hi]) {
+                            *o += *x;
+                        }
+                    }
+                    let inv = 1.0 / w as f32;
+                    for o in out_chunk.iter_mut() {
+                        *o *= inv;
+                    }
+                });
+            }
+            // scope joins all reduction threads here (panics propagate)
+        });
+        CollectiveStats { bytes_moved: (2 * (w - 1) * n * 4) as u64, phases: 2 * (w as u32 - 1) }
+    }
+}
+
+/// Disjoint `(&mut rows[a], &mut rows[b])` views of two distinct rows,
+/// built from `split_at_mut` (no raw-pointer aliasing).
+fn two_rows_mut(rows: &mut [Vec<f32>], a: usize, b: usize) -> (&mut Vec<f32>, &mut Vec<f32>) {
+    debug_assert_ne!(a, b, "rows must be distinct");
+    if a < b {
+        let (lo, hi) = rows.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = rows.split_at_mut(a);
+        let (row_b, row_a) = (&mut lo[b], &mut hi[0]);
+        (row_a, row_b)
+    }
 }
 
 /// Average `world` gradient shards of equal length into one vector,
@@ -51,13 +197,9 @@ pub fn ring_allreduce_mean(shards: &mut [Vec<f32>]) -> CollectiveStats {
                 continue;
             }
             let (lo, hi) = chunk_bounds(c);
-            let (a, b): (&mut Vec<f32>, &Vec<f32>) = unsafe {
-                // disjoint indices: c != src
-                let ptr = shards.as_mut_ptr();
-                (&mut *ptr.add(c), &*ptr.add(src))
-            };
+            let (acc, sender) = two_rows_mut(shards, c, src);
             for i in lo..hi {
-                a[i] += b[i];
+                acc[i] += sender[i];
             }
             stats.bytes_moved += ((hi - lo) * 4) as u64;
         }
@@ -78,10 +220,7 @@ pub fn ring_allreduce_mean(shards: &mut [Vec<f32>]) -> CollectiveStats {
                 continue;
             }
             let (lo, hi) = chunk_bounds(c);
-            let (owner, target): (&Vec<f32>, &mut Vec<f32>) = unsafe {
-                let ptr = shards.as_mut_ptr();
-                (&*ptr.add(c), &mut *ptr.add(dst))
-            };
+            let (owner, target) = two_rows_mut(shards, c, dst);
             target[lo..hi].copy_from_slice(&owner[lo..hi]);
             stats.bytes_moved += ((hi - lo) * 4) as u64;
         }
@@ -102,8 +241,9 @@ pub fn parallel_allreduce_mean(shards: &[Vec<f32>]) -> (Vec<f32>, CollectiveStat
         return (shards[0].clone(), CollectiveStats::default());
     }
     // at least 64k elements per chunk to amortize thread spawn
+    // (chunk floor of 1 keeps chunks_mut happy on empty gradients)
     let threads = (n / 65_536).clamp(1, 8);
-    let chunk = n.div_ceil(threads);
+    let chunk = n.div_ceil(threads).max(1);
     let mut result = vec![0f32; n];
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
@@ -126,8 +266,11 @@ pub fn parallel_allreduce_mean(shards: &[Vec<f32>]) -> (Vec<f32>, CollectiveStat
             h.join().expect("allreduce thread panicked");
         }
     });
+    // account the canonical ring schedule the implementation substitutes
+    // for: 2·(W−1) phases, each moving the n-element vector once — the
+    // same bytes the ring implementation counts chunk by chunk.
     let stats = CollectiveStats {
-        bytes_moved: (2 * (w - 1) * n * 4 / w.max(1)) as u64 * w as u64,
+        bytes_moved: (2 * (w - 1) * n * 4) as u64,
         phases: 2 * (w as u32 - 1),
     };
     (result, stats)
@@ -184,8 +327,24 @@ mod tests {
         let mut s = shards(4, 128);
         let stats = ring_allreduce_mean(&mut s);
         assert_eq!(stats.phases, 2 * 3);
-        // each of the 2(W−1) phases moves ~n/W elements per chunk × W chunks
-        assert!(stats.bytes_moved > 0);
+        // each of the 2(W−1) phases moves the whole n-element vector once
+        // (the chunks partition it), so the total is exactly 2(W−1)·n·4.
+        assert_eq!(stats.bytes_moved, 2 * 3 * 128 * 4);
+    }
+
+    #[test]
+    fn ring_and_parallel_byte_accounting_agree() {
+        // includes n not divisible by w — the old parallel formula
+        // (2(w−1)n·4/w)·w lost the remainder on exactly these cases.
+        for &(w, n) in &[(2usize, 64usize), (3, 100), (4, 128), (5, 8191), (7, 1000)] {
+            let s = shards(w, n);
+            let mut ring = s.clone();
+            let rs = ring_allreduce_mean(&mut ring);
+            let (_, ps) = parallel_allreduce_mean(&s);
+            assert_eq!(rs.bytes_moved, ps.bytes_moved, "bytes parity w={w} n={n}");
+            assert_eq!(rs.phases, ps.phases, "phase parity w={w} n={n}");
+            assert_eq!(rs.bytes_moved, (2 * (w - 1) * n * 4) as u64);
+        }
     }
 
     #[test]
@@ -207,5 +366,31 @@ mod tests {
                 assert!((got[i] - want[i]).abs() < 1e-5);
             }
         }
+    }
+
+    #[test]
+    fn trait_dispatch_leaves_mean_in_shard_zero() {
+        for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
+            let coll = kind.build();
+            assert_eq!(coll.name(), kind.name());
+            let mut s = shards(4, 1000);
+            let want = mean_reference(&s);
+            let stats = coll.allreduce_mean(&mut s);
+            for (a, b) in s[0].iter().zip(&want) {
+                assert!((a - b).abs() < 1e-5, "{kind:?}: {a} vs {b}");
+            }
+            assert_eq!(stats.bytes_moved, 2 * 3 * 1000 * 4, "{kind:?}");
+            // single shard: no communication
+            let mut one = shards(1, 10);
+            assert_eq!(coll.allreduce_mean(&mut one), CollectiveStats::default());
+        }
+    }
+
+    #[test]
+    fn kind_parses_config_spellings() {
+        assert_eq!(CollectiveKind::parse("ring"), Some(CollectiveKind::Ring));
+        assert_eq!(CollectiveKind::parse("parallel"), Some(CollectiveKind::Parallel));
+        assert_eq!(CollectiveKind::parse("bogus"), None);
+        assert_eq!(CollectiveKind::default(), CollectiveKind::Ring);
     }
 }

@@ -7,11 +7,35 @@
 //! config set alone. (Parsing uses the from-scratch [`crate::util::json`]
 //! module; the build has no serde.)
 
+use crate::collective::CollectiveKind;
 use crate::metrics::WallClockModel;
 use crate::schedule::{JointSchedule, ScheduleKind, SeesawBuilder};
 use crate::util::json::Value;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
+
+/// How the step engine executes one optimizer step (DESIGN.md §2): the
+/// thread/collective knobs, orthogonal to the *semantic* `world_size`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExecSpec {
+    /// OS threads driving the workers' shards. `1` is the sequential
+    /// engine; `>1` runs workers on scoped threads. Any value produces a
+    /// bit-identical trajectory (see `coordinator::worker`).
+    pub worker_threads: usize,
+    /// Which allreduce implementation combines worker gradient sums.
+    pub collective: CollectiveKind,
+    /// Reduce per-microbatch scalar stats in global microbatch order
+    /// (bit-exact parity with the historical sequential coordinator).
+    /// `false` reduces worker-major — still deterministic, one sort
+    /// cheaper, different fp rounding.
+    pub pin_order: bool,
+}
+
+impl Default for ExecSpec {
+    fn default() -> Self {
+        Self { worker_threads: 1, collective: CollectiveKind::Ring, pin_order: true }
+    }
+}
 
 /// Which optimizer executable the coordinator drives.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -77,6 +101,8 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Simulated data-parallel workers sharing each global batch.
     pub world_size: usize,
+    /// Step-engine execution knobs (threads, collective, stat order).
+    pub exec: ExecSpec,
     pub eval_every: u64,
     pub eval_batches: u64,
     /// Synthetic-corpus length in tokens.
@@ -109,6 +135,7 @@ impl Default for TrainConfig {
             zcoef: 0.0,
             seed: 0,
             world_size: 1,
+            exec: ExecSpec::default(),
             eval_every: 50,
             eval_batches: 8,
             corpus_tokens: 2_000_000,
@@ -145,6 +172,9 @@ impl TrainConfig {
         c.zcoef = v.f64_or("zcoef", c.zcoef)?;
         c.seed = v.u64_or("seed", c.seed)?;
         c.world_size = v.u64_or("world_size", c.world_size as u64)? as usize;
+        if let Some(e) = v.get("exec") {
+            c.exec = parse_exec(e)?;
+        }
         c.eval_every = v.u64_or("eval_every", c.eval_every)?;
         c.eval_batches = v.u64_or("eval_batches", c.eval_batches)?;
         c.corpus_tokens = v.u64_or("corpus_tokens", c.corpus_tokens as u64)? as usize;
@@ -165,10 +195,12 @@ impl TrainConfig {
             c.optimizer = parse_optimizer(o)?;
         }
         if let Some(w) = v.get("wallclock") {
+            let d = WallClockModel::default();
             c.wallclock = Some(WallClockModel {
-                devices: w.u64_or("devices", 64)?,
-                tokens_per_device: w.u64_or("tokens_per_device", 4096)?,
-                step_latency: w.f64_or("step_latency", 1.0)?,
+                devices: w.u64_or("devices", d.devices)?,
+                tokens_per_device: w.u64_or("tokens_per_device", d.tokens_per_device)?,
+                step_latency: w.f64_or("step_latency", d.step_latency)?,
+                comm_bytes_per_sec: w.f64_or("comm_bytes_per_sec", d.comm_bytes_per_sec)?,
             });
         }
         Ok(c)
@@ -230,6 +262,27 @@ impl TrainConfig {
             ),
         }
     }
+}
+
+fn parse_exec(v: &Value) -> Result<ExecSpec> {
+    let d = ExecSpec::default();
+    let collective = match v.get("collective") {
+        Some(k) => {
+            let s = k.as_str()?;
+            CollectiveKind::parse(s)
+                .ok_or_else(|| anyhow!("unknown collective `{s}` (ring|parallel)"))?
+        }
+        None => d.collective,
+    };
+    let pin_order = match v.get("pin_order") {
+        Some(p) => p.as_bool()?,
+        None => d.pin_order,
+    };
+    Ok(ExecSpec {
+        worker_threads: v.u64_or("worker_threads", d.worker_threads as u64)? as usize,
+        collective,
+        pin_order,
+    })
 }
 
 fn parse_schedule(v: &Value) -> Result<ScheduleSpec> {
@@ -303,6 +356,24 @@ mod tests {
     fn unknown_kind_is_error() {
         assert!(TrainConfig::from_json(r#"{"schedule": {"kind": "bogus"}}"#).is_err());
         assert!(TrainConfig::from_json(r#"{"optimizer": {"kind": "bogus"}}"#).is_err());
+        assert!(TrainConfig::from_json(r#"{"exec": {"collective": "bogus"}}"#).is_err());
+    }
+
+    #[test]
+    fn exec_spec_parses_and_defaults() {
+        let c = TrainConfig::from_json(
+            r#"{"exec": {"worker_threads": 4, "collective": "parallel", "pin_order": false}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            c.exec,
+            ExecSpec { worker_threads: 4, collective: CollectiveKind::Parallel, pin_order: false }
+        );
+        let d = TrainConfig::from_json("{}").unwrap();
+        assert_eq!(d.exec, ExecSpec::default());
+        assert_eq!(d.exec.worker_threads, 1);
+        assert_eq!(d.exec.collective, CollectiveKind::Ring);
+        assert!(d.exec.pin_order);
     }
 
     #[test]

@@ -5,20 +5,33 @@
 //!
 //! Per optimizer step:
 //! 1. query the [`JointSchedule`] at the current token count → `(lr, B)`;
-//! 2. plan `B / micro_tokens` microbatches and shard them across
-//!    `world_size` simulated workers;
-//! 3. each worker accumulates fwd+bwd gradients over its microbatches
-//!    (`grad_step` executable);
-//! 4. ring-allreduce the worker sums, average to the global gradient;
+//! 2. plan `B / micro_tokens` microbatches on this thread (the loader
+//!    order is the determinism contract) and hand them to the
+//!    [`StepEngine`], which shards them round-robin across `world_size`
+//!    workers;
+//! 3. each [`worker::Worker`] accumulates fwd+bwd gradients over its
+//!    shard directly into its preallocated flat buffer
+//!    ([`ModelRuntime::grad_step_into`]) — on scoped threads when
+//!    [`crate::config::ExecSpec::worker_threads`] > 1;
+//! 4. the configured [`crate::collective::Collective`] allreduces the
+//!    worker sums; buffer 0 is scaled to the global mean gradient in
+//!    place;
 //! 5. apply the optimizer executable (`adamw_step` / `sgd_step` — NSGD is
 //!    sgd with `lr/√(EMA‖ḡ‖²)`, eq. 7);
-//! 6. log metrics (loss, z-loss, grad norm, FLOPs, modeled serial time).
+//! 6. log metrics (loss, z-loss, grad norm, FLOPs, modeled serial time —
+//!    which now charges the collective's payload bytes against the
+//!    wall-clock model's interconnect bandwidth).
+//!
+//! The engine's trajectory is bit-identical for any `worker_threads`
+//! (see `worker` module docs); `worker_threads = 1` is the sequential
+//! engine and reproduces the historical single-thread coordinator.
 
 mod checkpoint;
+pub mod worker;
 
 pub use checkpoint::Checkpoint;
+pub use worker::{GradSource, Microbatch, MicroStats, StepEngine, StepOutput, Worker};
 
-use crate::collective::ring_allreduce_mean;
 use crate::config::{OptimizerKind, TrainConfig};
 use crate::data::{Corpus, Loader};
 use crate::metrics::{RunLog, StepRecord, WallClockModel};
@@ -39,6 +52,43 @@ pub struct TrainState {
     pub serial_time: f64,
 }
 
+/// Borrowed per-step execution context handed to the step engine's
+/// worker threads: the runtime plus the current parameters.
+struct StepCtx<'a> {
+    rt: &'a ModelRuntime,
+    params: &'a [xla::Literal],
+    zcoef: f32,
+}
+
+// SAFETY: `StepCtx` only exposes `&self` access. The PJRT CPU client is
+// thread-safe for concurrent `Execute` calls (PJRT C API contract:
+// clients, loaded executables and buffers may be used from multiple
+// threads), and the parameter `xla::Literal`s are strictly read-only
+// while the engine runs — every `grad_step_into` call builds its own
+// input literals and output buffers.
+//
+// CAVEAT: this impl additionally assumes the vendored `xla` crate's
+// *wrapper* internals are thread-compatible (no non-atomic refcounts or
+// interior mutability shared across handles). That holds for plain
+// raw-pointer wrappers over the PJRT C API; if the vendored crate ever
+// routes handles through `Rc`-style shared state, this must be revisited
+// before enabling `worker_threads > 1` (the default, 1, never crosses a
+// thread boundary — the scoped-thread path is only entered on explicit
+// opt-in, and the trajectory is bit-identical either way).
+unsafe impl Send for StepCtx<'_> {}
+unsafe impl Sync for StepCtx<'_> {}
+
+impl GradSource for StepCtx<'_> {
+    fn grad_elements(&self) -> usize {
+        self.rt.manifest.total_elements()
+    }
+
+    fn accumulate(&self, tokens: &[i32], targets: &[i32], sink: &mut [f32]) -> Result<MicroStats> {
+        let s = self.rt.grad_step_into(self.params, tokens, targets, self.zcoef, sink)?;
+        Ok(MicroStats { ce: s.ce, zsq: s.zsq })
+    }
+}
+
 /// The training coordinator.
 pub struct Trainer {
     pub rt: ModelRuntime,
@@ -47,6 +97,9 @@ pub struct Trainer {
     pub loader: Loader,
     pub wall: WallClockModel,
     pub total_tokens: u64,
+    /// The step engine: workers, gradient buffers, collective — reused
+    /// across steps (configured by `cfg.exec`).
+    pub engine: StepEngine,
 }
 
 impl Trainer {
@@ -61,7 +114,8 @@ impl Trainer {
         };
         let loader = Loader::new(corpus, rt.seq_len(), cfg.seed.wrapping_add(1));
         let wall = cfg.wallclock.unwrap_or_default();
-        Ok(Self { rt, cfg, schedule, loader, wall, total_tokens: total })
+        let engine = StepEngine::new(cfg.exec);
+        Ok(Self { rt, cfg, schedule, loader, wall, total_tokens: total, engine })
     }
 
     /// Fresh state (params from the `init` executable).
@@ -90,45 +144,25 @@ impl Trainer {
         let batch_tokens = n_micro * self.rt.micro_tokens();
         let world = self.cfg.world_size.max(1).min(n_micro as usize);
         let b = self.rt.microbatch();
-        let leaf_elems = self.rt.manifest.total_elements();
 
-        // --- accumulate gradients, sharded over simulated workers -------
-        let mut worker_sums: Vec<Vec<f32>> = vec![vec![0f32; leaf_elems]; world];
-        let mut micro_per_worker = vec![0u64; world];
-        let mut ce_sum = 0f64;
-        let mut zsq_sum = 0f64;
+        // --- plan: the loader stays on this thread, so the token stream
+        // is the same function of (seed, cursor) under every engine
+        // configuration — microbatch i always carries the same data ------
+        let mut micro = Vec::with_capacity(n_micro as usize);
         for i in 0..n_micro {
-            let w = (i as usize) % world;
             let (tokens, targets) = self.loader.next_batch(b);
-            let out = self.rt.grad_step(&state.params, &tokens, &targets, self.cfg.zcoef as f32)?;
-            ce_sum += out.ce as f64;
-            zsq_sum += out.zsq as f64;
-            let sink = &mut worker_sums[w];
-            let mut off = 0usize;
-            for g in &out.grads {
-                for (dst, src) in sink[off..off + g.len()].iter_mut().zip(g) {
-                    *dst += *src;
-                }
-                off += g.len();
-            }
-            micro_per_worker[w] += 1;
+            micro.push(Microbatch { index: i, tokens, targets });
         }
 
-        // --- combine: ring allreduce of worker sums, then divide --------
-        let mean_grad: Vec<f32> = if world > 1 {
-            ring_allreduce_mean(&mut worker_sums);
-            // allreduce averaged the *sums* over workers; rescale to the
-            // mean over microbatches: mean_g = (Σ_w sum_w)/n = avg_w·W/n.
-            let scale = world as f32 / n_micro as f32;
-            worker_sums[0].iter().map(|x| x * scale).collect()
-        } else {
-            let inv = 1.0 / n_micro as f32;
-            worker_sums.pop().unwrap().into_iter().map(|x| x * inv).collect()
-        };
+        // --- execute: workers accumulate shards into preallocated flat
+        // buffers, the configured collective combines the sums -----------
+        let ctx = StepCtx { rt: &self.rt, params: &state.params, zcoef: self.cfg.zcoef as f32 };
+        let out = self.engine.execute(&ctx, world, micro)?;
+        let mean_grad = self.engine.mean_grad();
         let gnorm_sq: f64 = mean_grad.iter().map(|&x| (x as f64) * (x as f64)).sum();
 
         // --- optimizer update -------------------------------------------
-        let grads = self.split_leaves(&mean_grad)?;
+        let grads = self.split_leaves(mean_grad)?;
         let grad_lits = self.rt.grads_to_literals(&grads)?;
         state.step += 1;
         match self.cfg.optimizer {
@@ -170,17 +204,18 @@ impl Trainer {
         let tokens_before = state.tokens;
         state.tokens += batch_tokens;
         state.flops += self.rt.manifest.flops_per_token as f64 * batch_tokens as f64;
-        state.serial_time += self.wall.step_time(batch_tokens);
+        state.serial_time += self.wall.step_time_comm(batch_tokens, out.comm.bytes_moved);
         Ok(StepRecord {
             step: state.step,
             tokens: tokens_before,
             lr: point.lr,
             batch_tokens,
-            ce: ce_sum / n_micro as f64,
-            zloss: zsq_sum / n_micro as f64,
+            ce: out.ce_sum / n_micro as f64,
+            zloss: out.zsq_sum / n_micro as f64,
             gnorm_sq,
             flops: state.flops,
             serial_time: state.serial_time,
+            comm_bytes: out.comm.bytes_moved,
             val_ce: None,
         })
     }

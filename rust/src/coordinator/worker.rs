@@ -1,0 +1,346 @@
+//! The parallel step engine (DESIGN.md §2): [`Worker`]s run microbatch
+//! shards against preallocated flat gradient buffers — on the calling
+//! thread (`worker_threads = 1`, the sequential engine) or on scoped
+//! threads — then a pluggable [`Collective`] combines the per-worker sums
+//! and buffer 0 is scaled to the mean gradient in place (zero-copy: no
+//! `Vec<Vec<f32>>` per microbatch, no result vector per step).
+//!
+//! Bit-exactness contract: the microbatch→worker assignment is the fixed
+//! round-robin `index % world`, each worker accumulates its shard in
+//! global microbatch order, the collective is deterministic, and (with
+//! [`ExecSpec::pin_order`]) scalar stats reduce in global microbatch
+//! order — so the engine's `(ce, gnorm_sq, params)` trajectory is
+//! bit-identical for any `worker_threads`, and `worker_threads = 1`
+//! reproduces the historical sequential coordinator exactly.
+//!
+//! The engine is decoupled from PJRT through [`GradSource`], so the
+//! threading/reduction machinery is property-tested and benchmarked
+//! without compiled artifacts; production wires [`crate::runtime::ModelRuntime`]
+//! in via the coordinator's step context.
+
+use crate::collective::{Collective, CollectiveStats};
+use crate::config::ExecSpec;
+use anyhow::{anyhow, ensure, Result};
+
+/// Scalar statistics from one microbatch fwd+bwd.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MicroStats {
+    /// Mean cross-entropy of the microbatch.
+    pub ce: f32,
+    /// Unscaled z-loss term mean(lse²).
+    pub zsq: f32,
+}
+
+/// Gradient provider the engine drives: [`crate::runtime::ModelRuntime`]
+/// behind a per-step context in production, a pure function in tests and
+/// benches. `Sync` because worker threads share one source.
+pub trait GradSource: Sync {
+    /// Length of the flat gradient (all parameter leaves concatenated).
+    fn grad_elements(&self) -> usize;
+
+    /// fwd+bwd one microbatch, **accumulating** the flat gradient into
+    /// `sink` (which has `grad_elements()` slots). Must be a deterministic
+    /// function of `(tokens, targets, sink)`.
+    fn accumulate(&self, tokens: &[i32], targets: &[i32], sink: &mut [f32]) -> Result<MicroStats>;
+}
+
+/// One planned microbatch: global step-local index + token data. The
+/// planner (the coordinator's loader loop) produces these in increasing
+/// `index` order — the engine's assignment and ordering key.
+#[derive(Debug, Clone)]
+pub struct Microbatch {
+    /// Global microbatch index within the step.
+    pub index: u64,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+}
+
+/// A simulated data-parallel worker: the shard of microbatches assigned
+/// to it this step plus the per-microbatch stats it produced. Its
+/// gradient buffer lives in the engine (`StepEngine::bufs`), parallel to
+/// the worker list, so the collective sees all buffers as one slice
+/// without copies.
+#[derive(Debug, Default)]
+pub struct Worker {
+    pub id: usize,
+    shard: Vec<Microbatch>,
+    stats: Vec<(u64, MicroStats)>,
+}
+
+impl Worker {
+    fn begin(&mut self) {
+        self.shard.clear();
+        self.stats.clear();
+    }
+
+    /// Run this worker's shard in assignment (global-index) order,
+    /// accumulating gradients into `buf`.
+    fn run_shard<S: GradSource>(&mut self, src: &S, buf: &mut [f32]) -> Result<()> {
+        for m in &self.shard {
+            let s = src.accumulate(&m.tokens, &m.targets, buf)?;
+            self.stats.push((m.index, s));
+        }
+        Ok(())
+    }
+}
+
+/// Reduced scalar output of one engine step. The mean gradient is read
+/// through [`StepEngine::mean_grad`] — it stays in worker buffer 0.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepOutput {
+    pub n_micro: u64,
+    /// Σ ce over microbatches (reduction order per [`ExecSpec::pin_order`]).
+    pub ce_sum: f64,
+    /// Σ mean(lse²) over microbatches.
+    pub zsq_sum: f64,
+    /// Stats of the gradient collective (zero when `world == 1`).
+    pub comm: CollectiveStats,
+}
+
+/// The step engine: owns workers, their preallocated gradient buffers and
+/// the configured collective; reused across steps so the hot path does no
+/// per-step buffer allocation beyond the microbatch plan itself.
+pub struct StepEngine {
+    pub exec: ExecSpec,
+    collective: Box<dyn Collective>,
+    workers: Vec<Worker>,
+    /// Flat per-worker gradient buffers, parallel to `workers`.
+    bufs: Vec<Vec<f32>>,
+}
+
+impl StepEngine {
+    pub fn new(exec: ExecSpec) -> Self {
+        Self { collective: exec.collective.build(), exec, workers: Vec::new(), bufs: Vec::new() }
+    }
+
+    pub fn collective_name(&self) -> &'static str {
+        self.collective.name()
+    }
+
+    /// Execute one optimizer step: shard `micro` round-robin over `world`
+    /// workers, run every shard (on scoped threads when
+    /// `exec.worker_threads > 1`), allreduce the worker sums, and scale
+    /// buffer 0 to the mean gradient over microbatches in place.
+    ///
+    /// `micro` must be in increasing `index` order (the loader order).
+    pub fn execute<S: GradSource>(
+        &mut self,
+        src: &S,
+        world: usize,
+        micro: Vec<Microbatch>,
+    ) -> Result<StepOutput> {
+        ensure!(world >= 1, "need at least one worker");
+        let n_micro = micro.len() as u64;
+        ensure!(n_micro >= 1, "need at least one microbatch");
+        let world = world.min(n_micro as usize);
+        let elems = src.grad_elements();
+
+        while self.workers.len() < world {
+            self.workers.push(Worker { id: self.workers.len(), ..Worker::default() });
+        }
+        while self.bufs.len() < world {
+            self.bufs.push(Vec::new());
+        }
+        for w in &mut self.workers[..world] {
+            w.begin();
+        }
+        for buf in &mut self.bufs[..world] {
+            buf.clear();
+            buf.resize(elems, 0f32);
+        }
+        for m in micro {
+            let w = (m.index as usize) % world;
+            self.workers[w].shard.push(m);
+        }
+
+        let threads = self.exec.worker_threads.max(1).min(world);
+        let active = &mut self.workers[..world];
+        let bufs = &mut self.bufs[..world];
+        if threads == 1 {
+            for (w, buf) in active.iter_mut().zip(bufs.iter_mut()) {
+                w.run_shard(src, buf)?;
+            }
+        } else {
+            // contiguous worker→thread chunks; each thread runs its
+            // workers in id order, so per-worker work (and therefore each
+            // buffer's accumulation order) is identical to threads == 1.
+            let per = world.div_ceil(threads);
+            std::thread::scope(|scope| -> Result<()> {
+                let mut handles = Vec::new();
+                for (wchunk, bchunk) in active.chunks_mut(per).zip(bufs.chunks_mut(per)) {
+                    handles.push(scope.spawn(move || -> Result<()> {
+                        for (w, buf) in wchunk.iter_mut().zip(bchunk.iter_mut()) {
+                            w.run_shard(src, buf)?;
+                        }
+                        Ok(())
+                    }));
+                }
+                for h in handles {
+                    h.join().map_err(|_| anyhow!("worker thread panicked"))??;
+                }
+                Ok(())
+            })?;
+        }
+
+        let (ce_sum, zsq_sum) = if self.exec.pin_order {
+            // canonical reduction in global microbatch order — bit-exact
+            // parity with the sequential engine's running sum.
+            let mut slots: Vec<(u64, MicroStats)> =
+                active.iter().flat_map(|w| w.stats.iter().copied()).collect();
+            slots.sort_by_key(|&(i, _)| i);
+            let mut ce = 0f64;
+            let mut zsq = 0f64;
+            for (_, s) in slots {
+                ce += s.ce as f64;
+                zsq += s.zsq as f64;
+            }
+            (ce, zsq)
+        } else {
+            // worker-major reduction: still deterministic for a fixed
+            // assignment, but a different fp rounding order.
+            let mut ce = 0f64;
+            let mut zsq = 0f64;
+            for w in active.iter() {
+                for (_, s) in &w.stats {
+                    ce += s.ce as f64;
+                    zsq += s.zsq as f64;
+                }
+            }
+            (ce, zsq)
+        };
+
+        let comm = if world > 1 {
+            let stats = self.collective.allreduce_mean(bufs);
+            // the collective averaged the worker *sums*; rescale buffer 0
+            // to the mean over microbatches: mean_g = (Σ_w sum_w)/n = avg_w·W/n.
+            let scale = world as f32 / n_micro as f32;
+            for x in &mut bufs[0] {
+                *x *= scale;
+            }
+            stats
+        } else {
+            let inv = 1.0 / n_micro as f32;
+            for x in &mut bufs[0] {
+                *x *= inv;
+            }
+            CollectiveStats::default()
+        };
+
+        Ok(StepOutput { n_micro, ce_sum, zsq_sum, comm })
+    }
+
+    /// Flat mean gradient (manifest leaf order) left by the last
+    /// [`StepEngine::execute`] call; empty before the first step.
+    pub fn mean_grad(&self) -> &[f32] {
+        self.bufs.first().map(|b| b.as_slice()).unwrap_or(&[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::CollectiveKind;
+
+    /// Deterministic pure-function gradient source (no PJRT).
+    struct FakeSource {
+        elems: usize,
+    }
+
+    impl GradSource for FakeSource {
+        fn grad_elements(&self) -> usize {
+            self.elems
+        }
+
+        fn accumulate(
+            &self,
+            tokens: &[i32],
+            _targets: &[i32],
+            sink: &mut [f32],
+        ) -> Result<MicroStats> {
+            let t0 = tokens.first().copied().unwrap_or(0) as f32;
+            for (k, x) in sink.iter_mut().enumerate() {
+                *x += (t0 + k as f32 * 0.5).sin();
+            }
+            Ok(MicroStats { ce: (t0 * 0.01).cos(), zsq: t0.abs() * 0.1 })
+        }
+    }
+
+    fn micros(n: u64) -> Vec<Microbatch> {
+        (0..n)
+            .map(|i| Microbatch {
+                index: i,
+                tokens: vec![i as i32 * 3 + 1; 4],
+                targets: vec![0; 4],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_engine_is_bit_identical_to_sequential() {
+        for world in [1usize, 2, 4] {
+            for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
+                let run = |threads: usize| {
+                    let mut e = StepEngine::new(ExecSpec {
+                        worker_threads: threads,
+                        collective: kind,
+                        pin_order: true,
+                    });
+                    let src = FakeSource { elems: 257 };
+                    let out = e.execute(&src, world, micros(8)).unwrap();
+                    (out, e.mean_grad().to_vec())
+                };
+                let (o1, g1) = run(1);
+                for threads in [2usize, 4, 8] {
+                    let (ot, gt) = run(threads);
+                    assert_eq!(o1, ot, "world {world} {kind:?} threads {threads}");
+                    assert_eq!(g1, gt, "world {world} {kind:?} threads {threads} mean grad");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_mean_matches_direct_average() {
+        let src = FakeSource { elems: 64 };
+        let mut e = StepEngine::new(ExecSpec::default());
+        let n = 5u64;
+        let out = e.execute(&src, 1, micros(n)).unwrap();
+        assert_eq!(out.n_micro, n);
+        assert_eq!(out.comm, CollectiveStats::default());
+        // oracle: accumulate all microbatches into one buffer, divide by n
+        let mut want = vec![0f32; 64];
+        for m in micros(n) {
+            src.accumulate(&m.tokens, &m.targets, &mut want).unwrap();
+        }
+        for x in &mut want {
+            *x /= n as f32;
+        }
+        assert_eq!(e.mean_grad(), &want[..]);
+    }
+
+    #[test]
+    fn multi_worker_mean_stays_close_to_oracle_and_charges_comm() {
+        let src = FakeSource { elems: 300 };
+        let mut e = StepEngine::new(ExecSpec { worker_threads: 4, ..ExecSpec::default() });
+        let out = e.execute(&src, 4, micros(8)).unwrap();
+        assert!(out.comm.bytes_moved > 0, "world > 1 must charge communication");
+        assert_eq!(out.comm.phases, 2 * 3);
+        let mut want = vec![0f32; 300];
+        for m in micros(8) {
+            src.accumulate(&m.tokens, &m.targets, &mut want).unwrap();
+        }
+        for (got, w) in e.mean_grad().iter().zip(&want) {
+            let w = w / 8.0;
+            assert!((got - w).abs() < 1e-5 + 1e-5 * w.abs(), "{got} vs {w}");
+        }
+    }
+
+    #[test]
+    fn world_larger_than_microbatches_is_clamped() {
+        let src = FakeSource { elems: 16 };
+        let mut e = StepEngine::new(ExecSpec { worker_threads: 8, ..ExecSpec::default() });
+        let out = e.execute(&src, 8, micros(3)).unwrap();
+        assert_eq!(out.n_micro, 3);
+        assert!(e.mean_grad().iter().all(|x| x.is_finite()));
+    }
+}

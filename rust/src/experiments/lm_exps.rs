@@ -8,7 +8,7 @@
 //! batch sizes are swept around the testbed CBS.
 
 use super::{results_dir, Scale};
-use crate::config::{OptimizerKind, ScheduleSpec, TrainConfig};
+use crate::config::{ExecSpec, OptimizerKind, ScheduleSpec, TrainConfig};
 use crate::coordinator::Trainer;
 use crate::metrics::{print_table, write_runs_csv, RunLog};
 use anyhow::Result;
@@ -24,6 +24,11 @@ pub struct LmRun {
     pub weight_decay: f64,
     pub zcoef: f64,
     pub seed: u64,
+    /// Simulated data-parallel workers sharing each global batch.
+    pub world_size: usize,
+    /// Step-engine execution knobs (threads, collective, stat order) —
+    /// never changes the trajectory, only how it is computed.
+    pub exec: ExecSpec,
     pub name: String,
 }
 
@@ -38,6 +43,8 @@ impl LmRun {
             weight_decay: 0.0,
             zcoef: 0.0,
             seed: 0,
+            world_size: 1,
+            exec: ExecSpec::default(),
             name: name.into(),
         }
     }
@@ -52,6 +59,8 @@ impl LmRun {
         c.optimizer = OptimizerKind::AdamW { weight_decay: self.weight_decay };
         c.zcoef = self.zcoef;
         c.seed = self.seed;
+        c.world_size = self.world_size;
+        c.exec = self.exec;
         c.eval_every = 50;
         c.eval_batches = 8;
         c

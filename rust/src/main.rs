@@ -3,7 +3,8 @@
 //! ```text
 //! seesaw train [--config run.json] [--model s] [--schedule seesaw] [--alpha 1.1]
 //!              [--lr 3e-3] [--batch-tokens 4096] [--total-tokens N]
-//!              [--world-size W] [--variant ref|pallas] [--out-csv path]
+//!              [--world-size W] [--worker-threads T] [--collective ring|parallel]
+//!              [--pin-order true|false] [--variant ref|pallas] [--out-csv path]
 //! seesaw exp <figure1|table1|figure2|figure3|figure4|figure5|figure6|
 //!             figure7|theorem1|corollary1|lemma1|lemma4|assumption2|
 //!             all-theory> [--full] [--alpha 1.1]
@@ -11,7 +12,8 @@
 //! seesaw info [--model s] [--artifacts-dir artifacts]
 //! ```
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
+use seesaw::collective::CollectiveKind;
 use seesaw::config::{ScheduleSpec, TrainConfig};
 use seesaw::coordinator::Trainer;
 use seesaw::experiments::{linreg_exps, lm_exps, Scale};
@@ -73,6 +75,14 @@ fn train(args: &Args) -> Result<()> {
     if let Some(x) = args.u64_opt("world-size")? {
         cfg.world_size = x as usize;
     }
+    if let Some(x) = args.u64_opt("worker-threads")? {
+        cfg.exec.worker_threads = x as usize;
+    }
+    if let Some(s) = args.str_opt("collective") {
+        cfg.exec.collective = CollectiveKind::parse(s)
+            .ok_or_else(|| anyhow!("unknown collective `{s}` (ring|parallel)"))?;
+    }
+    cfg.exec.pin_order = args.bool_or("pin-order", cfg.exec.pin_order)?;
     if let Some(p) = args.str_opt("out-csv") {
         cfg.out_csv = Some(p.into());
     }
@@ -81,12 +91,14 @@ fn train(args: &Args) -> Result<()> {
     }
     let mut t = Trainer::new(cfg)?;
     println!(
-        "model={} params={} budget={} tokens, schedule={:?}, world={}",
+        "model={} params={} budget={} tokens, schedule={:?}, world={}, threads={}, collective={}",
         t.rt.manifest.model.name,
         t.rt.manifest.param_count,
         t.total_tokens,
         t.cfg.schedule,
-        t.cfg.world_size
+        t.cfg.world_size,
+        t.cfg.exec.worker_threads,
+        t.engine.collective_name()
     );
     let log = t.run()?;
     println!(

@@ -24,8 +24,12 @@ pub struct StepRecord {
     pub gnorm_sq: f64,
     /// Cumulative training FLOPs after this step.
     pub flops: f64,
-    /// Modeled serial wall-clock seconds after this step.
+    /// Modeled serial wall-clock seconds after this step (compute waves
+    /// plus the allreduce payload over the modeled interconnect).
     pub serial_time: f64,
+    /// Allreduce payload bytes this step's collective moved (0 when
+    /// `world_size == 1`).
+    pub comm_bytes: u64,
     /// Validation CE if evaluated at this step.
     pub val_ce: Option<f64>,
 }
@@ -72,11 +76,14 @@ impl RunLog {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        writeln!(f, "run,step,tokens,lr,batch_tokens,ce,zloss,gnorm_sq,flops,serial_time,val_ce")?;
+        writeln!(
+            f,
+            "run,step,tokens,lr,batch_tokens,ce,zloss,gnorm_sq,flops,serial_time,comm_bytes,val_ce"
+        )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{},{},{:.6e},{},{:.6},{:.6},{:.6e},{:.6e},{:.6},{}",
+                "{},{},{},{:.6e},{},{:.6},{:.6},{:.6e},{:.6e},{:.6},{},{}",
                 self.name,
                 r.step,
                 r.tokens,
@@ -87,6 +94,7 @@ impl RunLog {
                 r.gnorm_sq,
                 r.flops,
                 r.serial_time,
+                r.comm_bytes,
                 r.val_ce.map(|v| format!("{v:.6}")).unwrap_or_default()
             )?;
         }
@@ -100,12 +108,15 @@ pub fn write_runs_csv(runs: &[RunLog], path: impl AsRef<Path>) -> std::io::Resul
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
-    writeln!(f, "run,step,tokens,lr,batch_tokens,ce,zloss,gnorm_sq,flops,serial_time,val_ce")?;
+    writeln!(
+        f,
+        "run,step,tokens,lr,batch_tokens,ce,zloss,gnorm_sq,flops,serial_time,comm_bytes,val_ce"
+    )?;
     for run in runs {
         for r in &run.records {
             writeln!(
                 f,
-                "{},{},{},{:.6e},{},{:.6},{:.6},{:.6e},{:.6e},{:.6},{}",
+                "{},{},{},{:.6e},{},{:.6},{:.6},{:.6e},{:.6e},{:.6},{},{}",
                 run.name,
                 r.step,
                 r.tokens,
@@ -116,6 +127,7 @@ pub fn write_runs_csv(runs: &[RunLog], path: impl AsRef<Path>) -> std::io::Resul
                 r.gnorm_sq,
                 r.flops,
                 r.serial_time,
+                r.comm_bytes,
                 r.val_ce.map(|v| format!("{v:.6}")).unwrap_or_default()
             )?;
         }
@@ -160,6 +172,7 @@ mod tests {
             gnorm_sq: 0.5,
             flops: 1e9,
             serial_time: step as f64,
+            comm_bytes: 4096,
             val_ce: val,
         }
     }

@@ -15,25 +15,36 @@ pub struct WallClockModel {
     pub devices: u64,
     /// Microbatch capacity of one device per step, in tokens.
     pub tokens_per_device: u64,
-    /// Latency of one data-parallel step (compute + allreduce), seconds.
+    /// Latency of one data-parallel step's compute, seconds.
     pub step_latency: f64,
+    /// Modeled interconnect bandwidth for the gradient allreduce, in
+    /// bytes/second — [`WallClockModel::step_time_comm`] charges the
+    /// collective's measured payload against it.
+    pub comm_bytes_per_sec: f64,
 }
 
 impl Default for WallClockModel {
     fn default() -> Self {
         // Capacity chosen so every batch the testbed sweeps (≤64k tokens)
         // fits in one wave — matching the paper's "assuming enough
-        // devices are available" premise (§4.1).
-        Self { devices: 64, tokens_per_device: 4096, step_latency: 1.0 }
+        // devices are available" premise (§4.1). Bandwidth is a round
+        // 100 GB/s — datacenter-interconnect order of magnitude.
+        Self { devices: 64, tokens_per_device: 4096, step_latency: 1.0, comm_bytes_per_sec: 100e9 }
     }
 }
 
 impl WallClockModel {
-    /// Seconds of serial time one optimizer step of `batch_tokens` costs.
+    /// Seconds of compute one optimizer step of `batch_tokens` costs.
     pub fn step_time(&self, batch_tokens: u64) -> f64 {
         let capacity = self.devices * self.tokens_per_device;
         let waves = batch_tokens.div_ceil(capacity).max(1);
         waves as f64 * self.step_latency
+    }
+
+    /// Seconds for one step including its allreduce: compute waves plus
+    /// the collective's payload over the modeled interconnect.
+    pub fn step_time_comm(&self, batch_tokens: u64, comm_bytes: u64) -> f64 {
+        self.step_time(batch_tokens) + comm_bytes as f64 / self.comm_bytes_per_sec
     }
 
     /// Total serial seconds of a whole `(batch_tokens per step)` history.
@@ -48,22 +59,47 @@ mod tests {
 
     #[test]
     fn below_capacity_time_is_flat_in_batch() {
-        let m = WallClockModel { devices: 8, tokens_per_device: 1024, step_latency: 2.0 };
+        let m = WallClockModel {
+            devices: 8,
+            tokens_per_device: 1024,
+            step_latency: 2.0,
+            ..WallClockModel::default()
+        };
         assert_eq!(m.step_time(512), 2.0);
         assert_eq!(m.step_time(8 * 1024), 2.0);
     }
 
     #[test]
     fn beyond_capacity_serializes_into_waves() {
-        let m = WallClockModel { devices: 8, tokens_per_device: 1024, step_latency: 2.0 };
+        let m = WallClockModel {
+            devices: 8,
+            tokens_per_device: 1024,
+            step_latency: 2.0,
+            ..WallClockModel::default()
+        };
         assert_eq!(m.step_time(8 * 1024 + 1), 4.0);
         assert_eq!(m.step_time(3 * 8 * 1024), 6.0);
     }
 
     #[test]
+    fn comm_bytes_add_bandwidth_bound_time() {
+        let m = WallClockModel {
+            devices: 8,
+            tokens_per_device: 1024,
+            step_latency: 2.0,
+            comm_bytes_per_sec: 1e9,
+        };
+        assert_eq!(m.step_time_comm(512, 0), m.step_time(512));
+        // 2 GB over 1 GB/s adds exactly 2 seconds on top of one wave.
+        assert_eq!(m.step_time_comm(512, 2_000_000_000), 2.0 + 2.0);
+        // monotone in payload
+        assert!(m.step_time_comm(512, 1 << 30) > m.step_time_comm(512, 1 << 20));
+    }
+
+    #[test]
     fn seesaw_total_time_beats_constant_batch_at_equal_tokens() {
         // same 80k tokens: 20 steps of 4k vs ramp 4k→8k→16k (fewer steps).
-        let m = WallClockModel { devices: 64, tokens_per_device: 4096, step_latency: 1.0 };
+        let m = WallClockModel::default();
         let constant = m.total_time(std::iter::repeat(4096).take(20));
         let ramp: Vec<u64> = vec![4096; 8].into_iter().chain(vec![8192; 4]).chain(vec![16384; 1]).collect();
         assert_eq!(ramp.iter().sum::<u64>(), 4096 * 20);

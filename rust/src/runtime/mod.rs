@@ -9,7 +9,11 @@
 //!   `artifacts/<model>[_pallas]/` directory (one-time cost),
 //! * [`ModelRuntime::init`] / [`ModelRuntime::grad_step`] /
 //!   [`ModelRuntime::adamw_step`] / [`ModelRuntime::sgd_step`] /
-//!   [`ModelRuntime::eval_step`] — the train-path calls.
+//!   [`ModelRuntime::eval_step`] — the train-path calls,
+//! * [`ModelRuntime::grad_step_into`] — the step engine's zero-copy
+//!   variant of `grad_step`: leaf gradients accumulate straight into a
+//!   caller-owned flat buffer (a worker's preallocated sink, DESIGN.md
+//!   §2) instead of materializing a `Vec<Vec<f32>>` per microbatch.
 //!
 //! Parameters and optimizer state live as host [`xla::Literal`]s between
 //! steps (the CPU PJRT client copies host↔device per call; §Perf in
@@ -29,6 +33,15 @@ pub struct GradOut {
     pub gnorm_sq: f32,
     /// One flat f32 vector per parameter leaf (manifest order).
     pub grads: Vec<Vec<f32>>,
+}
+
+/// Scalar statistics from one microbatch fwd+bwd (the gradient itself
+/// went into the caller's sink — see [`ModelRuntime::grad_step_into`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GradStats {
+    pub ce: f32,
+    pub zsq: f32,
+    pub gnorm_sq: f32,
 }
 
 /// A compiled model: PJRT client + the five train-path executables.
@@ -106,15 +119,15 @@ impl ModelRuntime {
             .collect()
     }
 
-    /// fwd+bwd on one microbatch; `tokens`/`targets` are row-major
-    /// `microbatch × seq_len` i32.
-    pub fn grad_step(
+    /// Run the `grad_step` executable; returns its raw output literals
+    /// `(ce, zsq, gnorm_sq, grads…)` after count validation.
+    fn run_grad(
         &self,
         params: &[xla::Literal],
         tokens: &[i32],
         targets: &[i32],
         zcoef: f32,
-    ) -> Result<GradOut> {
+    ) -> Result<Vec<xla::Literal>> {
         let (b, l) = (self.manifest.microbatch, self.manifest.seq_len);
         ensure!(tokens.len() == b * l, "tokens len {} != {}", tokens.len(), b * l);
         ensure!(targets.len() == b * l, "targets len mismatch");
@@ -132,6 +145,19 @@ impl ModelRuntime {
             out.len(),
             3 + self.manifest.params.len()
         );
+        Ok(out)
+    }
+
+    /// fwd+bwd on one microbatch; `tokens`/`targets` are row-major
+    /// `microbatch × seq_len` i32.
+    pub fn grad_step(
+        &self,
+        params: &[xla::Literal],
+        tokens: &[i32],
+        targets: &[i32],
+        zcoef: f32,
+    ) -> Result<GradOut> {
+        let out = self.run_grad(params, tokens, targets, zcoef)?;
         let mut it = out.into_iter();
         let ce = scalar_f32(&it.next().unwrap())?;
         let zsq = scalar_f32(&it.next().unwrap())?;
@@ -140,6 +166,42 @@ impl ModelRuntime {
             .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("grad to_vec: {e:?}")))
             .collect::<Result<Vec<_>>>()?;
         Ok(GradOut { ce, zsq, gnorm_sq, grads })
+    }
+
+    /// fwd+bwd on one microbatch, **accumulating** the flat gradient
+    /// directly into `sink` (all leaves concatenated in manifest order) —
+    /// the step engine's per-worker path: no `Vec<Vec<f32>>` of retained
+    /// leaves per microbatch, one preallocated buffer per worker instead.
+    pub fn grad_step_into(
+        &self,
+        params: &[xla::Literal],
+        tokens: &[i32],
+        targets: &[i32],
+        zcoef: f32,
+        sink: &mut [f32],
+    ) -> Result<GradStats> {
+        ensure!(
+            sink.len() == self.manifest.total_elements(),
+            "sink len {} != total elements {}",
+            sink.len(),
+            self.manifest.total_elements()
+        );
+        let out = self.run_grad(params, tokens, targets, zcoef)?;
+        let mut it = out.into_iter();
+        let ce = scalar_f32(&it.next().unwrap())?;
+        let zsq = scalar_f32(&it.next().unwrap())?;
+        let gnorm_sq = scalar_f32(&it.next().unwrap())?;
+        let mut off = 0usize;
+        for lit in it {
+            let g = lit.to_vec::<f32>().map_err(|e| anyhow!("grad to_vec: {e:?}"))?;
+            ensure!(off + g.len() <= sink.len(), "grad leaves overflow sink");
+            for (d, s) in sink[off..off + g.len()].iter_mut().zip(&g) {
+                *d += *s;
+            }
+            off += g.len();
+        }
+        ensure!(off == sink.len(), "grad leaves covered {off} of {}", sink.len());
+        Ok(GradStats { ce, zsq, gnorm_sq })
     }
 
     /// One AdamW update; returns `(params', m', v')` literals.

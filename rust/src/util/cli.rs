@@ -88,6 +88,18 @@ impl Args {
     pub fn switch(&self, key: &str) -> bool {
         matches!(self.str_opt(key), Some("true") | Some("1") | Some("yes"))
     }
+
+    /// Explicit boolean flag: `--key` (→ true), `--key true|false|1|0|yes|no`,
+    /// or `default` when absent. Unlike [`Args::switch`], a malformed value
+    /// is an error rather than silently false.
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(other) => bail!("--{key}: expected bool, got `{other}`"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -134,5 +146,16 @@ mod tests {
         let a = parse("x --full --model m");
         assert!(a.switch("full"));
         assert_eq!(a.str_or("model", ""), "m");
+    }
+
+    #[test]
+    fn bool_or_accepts_spellings_and_rejects_garbage() {
+        assert!(parse("x --pin-order").bool_or("pin-order", false).unwrap());
+        assert!(parse("x --pin-order true").bool_or("pin-order", false).unwrap());
+        assert!(!parse("x --pin-order false").bool_or("pin-order", true).unwrap());
+        assert!(!parse("x --pin-order no").bool_or("pin-order", true).unwrap());
+        assert!(parse("x").bool_or("pin-order", true).unwrap());
+        assert!(!parse("x").bool_or("pin-order", false).unwrap());
+        assert!(parse("x --pin-order maybe").bool_or("pin-order", true).is_err());
     }
 }

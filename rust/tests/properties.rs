@@ -2,8 +2,11 @@
 //! pure substrates: schedules, collectives, dataloader, theory recursion,
 //! checkpoint format, JSON. No PJRT dependency — these run everywhere.
 
-use seesaw::collective::{mean_reference, parallel_allreduce_mean, ring_allreduce_mean};
-use seesaw::coordinator::Checkpoint;
+use seesaw::collective::{
+    mean_reference, parallel_allreduce_mean, ring_allreduce_mean, CollectiveKind,
+};
+use seesaw::config::ExecSpec;
+use seesaw::coordinator::{Checkpoint, GradSource, Microbatch, MicroStats, StepEngine};
 use seesaw::data::{Corpus, Loader};
 use seesaw::linreg::recursion::Problem;
 use seesaw::linreg::spectrum::Spectrum;
@@ -97,6 +100,90 @@ fn prop_ring_allreduce_equals_mean() {
         let (par, _) = parallel_allreduce_mean(&shards);
         for (a, b) in par.iter().zip(&want) {
             assert!((a - b).abs() < 1e-4 + 1e-4 * b.abs());
+        }
+    });
+}
+
+#[test]
+fn prop_ring_and_parallel_report_identical_bytes() {
+    check("collective byte-accounting parity", 48, |g| {
+        let w = g.usize_in(2, 9);
+        let n = 1 + g.usize_in(0, 5000);
+        let shards: Vec<Vec<f32>> = (0..w).map(|_| g.vec_f32(n, 1.0)).collect();
+        let mut ring = shards.clone();
+        let rs = ring_allreduce_mean(&mut ring);
+        let (_, ps) = parallel_allreduce_mean(&shards);
+        assert_eq!(rs.bytes_moved, ps.bytes_moved, "w={w} n={n}");
+        assert_eq!(rs.phases, ps.phases, "w={w} n={n}");
+        assert_eq!(rs.bytes_moved, (2 * (w - 1) * n * 4) as u64);
+    });
+}
+
+/// Deterministic pure-function gradient source: lets the step engine's
+/// threading + reduction machinery be property-tested without PJRT.
+struct SyntheticGrad {
+    elems: usize,
+}
+
+impl GradSource for SyntheticGrad {
+    fn grad_elements(&self) -> usize {
+        self.elems
+    }
+
+    fn accumulate(
+        &self,
+        tokens: &[i32],
+        targets: &[i32],
+        sink: &mut [f32],
+    ) -> anyhow::Result<MicroStats> {
+        let a = tokens.first().copied().unwrap_or(1) as f32;
+        let b = targets.first().copied().unwrap_or(2) as f32;
+        for (k, x) in sink.iter_mut().enumerate() {
+            *x += (a * 0.37 + b * 0.11 + k as f32 * 0.53).sin();
+        }
+        Ok(MicroStats { ce: (a - b) * 0.01, zsq: (a + b).abs() * 0.01 })
+    }
+}
+
+#[test]
+fn prop_step_engine_trajectory_invariant_under_threads() {
+    // the tentpole bit-exactness contract, over random shapes: any
+    // worker_threads count produces the identical (stats, mean grad).
+    check("step engine thread invariance", 32, |g| {
+        let elems = 1 + g.usize_in(0, 2000);
+        let n_micro = 1 + g.u64(12);
+        let world = *g.pick(&[1usize, 2, 4]);
+        let kind = if g.bool() { CollectiveKind::Ring } else { CollectiveKind::Parallel };
+        let pin = g.bool();
+        let micro = |seed: u64| -> Vec<Microbatch> {
+            (0..n_micro)
+                .map(|i| Microbatch {
+                    index: i,
+                    tokens: vec![(seed.wrapping_mul(31) as i32).wrapping_add(i as i32 * 7); 3],
+                    targets: vec![(i as i32).wrapping_mul(5) - 2; 3],
+                })
+                .collect()
+        };
+        let seed = g.u64(1 << 30);
+        let src = SyntheticGrad { elems };
+        let run = |threads: usize| {
+            let mut e = StepEngine::new(ExecSpec {
+                worker_threads: threads,
+                collective: kind,
+                pin_order: pin,
+            });
+            let out = e.execute(&src, world, micro(seed)).unwrap();
+            (out, e.mean_grad().to_vec())
+        };
+        let (o1, g1) = run(1);
+        assert_eq!(o1.n_micro, n_micro);
+        for threads in [2usize, 3, 8] {
+            let (ot, gt) = run(threads);
+            assert_eq!(o1, ot, "threads {threads} world {world} {kind:?} pin {pin}");
+            assert!(
+                g1.iter().zip(&gt).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "mean grad must be bit-identical (threads {threads} world {world} {kind:?})"
+            );
         }
     });
 }
@@ -202,16 +289,22 @@ fn prop_json_roundtrip_numbers_and_strings() {
 }
 
 #[test]
-fn prop_wallclock_monotone_in_batch() {
+fn prop_wallclock_monotone_in_batch_and_comm() {
     check("wallclock monotone", 48, |g| {
         let m = seesaw::metrics::WallClockModel {
             devices: 1 + g.u64(128),
             tokens_per_device: 128 * (1 + g.u64(64)),
             step_latency: g.f64_in(0.01, 5.0),
+            comm_bytes_per_sec: g.f64_in(1e9, 1e12),
         };
         let a = 1 + g.u64(1 << 20);
         let b = a + g.u64(1 << 20);
         assert!(m.step_time(a) <= m.step_time(b) + 1e-12);
         assert!(m.step_time(a) >= m.step_latency);
+        // comm charging is additive and monotone in payload
+        let bytes = g.u64(1 << 32);
+        assert!(m.step_time_comm(a, 0) == m.step_time(a));
+        assert!(m.step_time_comm(a, bytes) >= m.step_time(a));
+        assert!(m.step_time_comm(a, bytes) <= m.step_time_comm(a, bytes + (1 << 20)) + 1e-12);
     });
 }
