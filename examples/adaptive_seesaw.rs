@@ -1,0 +1,76 @@
+//! Adaptive Seesaw ablation: fixed precomputed staircase vs the GNS-driven
+//! cut controller at equal token budget — **no artifacts needed** (the
+//! exact NSGD risk recursion stands in for the LM; its Appendix-B
+//! gradient-norm decomposition yields the gradient-noise scale exactly).
+//!
+//! ```sh
+//! cargo run --release --example adaptive_seesaw [-- --alpha 2.0 --lm]
+//! ```
+//! Prints:
+//! 1. the fixed-vs-adaptive comparison table (final CE proxy, serial
+//!    time, serial steps, cut count);
+//! 2. the degradation check — under the constant-noise oracle the
+//!    adaptive controller must retrace `SeesawBuilder`'s staircase
+//!    bit-for-bit;
+//! 3. with `--lm` (after `python python/compile/aot.py` has built the
+//!    artifacts), the same ablation through the full three-layer LM stack
+//!    at `world_size = 2`.
+
+use anyhow::Result;
+use seesaw::experiments::adaptive_exps::{ablation, staircase_equivalence, AblationRow};
+use seesaw::experiments::{lm_exps, Scale};
+use seesaw::metrics::print_table;
+use seesaw::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["lm"])?;
+    let a = args.f64_or("alpha", 2.0)?;
+    let total = args.u64_or("total-tokens", 400_000)?;
+    let hysteresis = args.u64_or("hysteresis", 4_000)?;
+
+    println!("Adaptive Seesaw on the exact NSGD recursion (a={a}, {total} tokens)");
+    println!("===================================================================");
+    let rows = ablation(a, total, 16, hysteresis);
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r: &AblationRow| {
+            vec![
+                r.name.clone(),
+                format!("{:.6}", r.final_risk),
+                format!("{:.0}", r.serial_time),
+                r.steps.to_string(),
+                r.cuts.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "fixed vs adaptive at equal token budget",
+        &["schedule", "final CE (risk)", "serial time", "serial steps", "cuts"],
+        &table,
+    );
+
+    // Degradation contract: constant-noise oracle ⇒ the fixed staircase.
+    let (fixed, adaptive) = staircase_equivalence(a, total, 16, total / 10);
+    let exact = fixed.trajectory.len() == adaptive.trajectory.len()
+        && fixed
+            .trajectory
+            .iter()
+            .zip(&adaptive.trajectory)
+            .all(|(f, ad)| f.0.to_bits() == ad.0.to_bits() && f.1 == ad.1);
+    println!(
+        "\nconstant-noise oracle check: adaptive trajectory {} the fixed staircase \
+         ({} steps, {} cuts each)",
+        if exact { "EXACTLY matches" } else { "DIVERGES from" },
+        fixed.trajectory.len(),
+        fixed.cuts
+    );
+    anyhow::ensure!(exact, "oracle-driven controller must reproduce Algorithm 1");
+
+    if args.switch("lm") {
+        println!("\nSame ablation through the live LM stack (world_size = 2):");
+        lm_exps::adaptive(Scale::Quick, a)?;
+    } else {
+        println!("(pass --lm with artifacts built to run the ablation on the LM stack)");
+    }
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Bench harness for the adaptive-scheduling subsystem: fixed staircase
+//! vs GNS-driven controller across step factors, on the exact NSGD risk
+//! recursion (no artifacts needed), plus the wall-cost of the controller
+//! itself (schedule queries + GNS feedback per step — must be noise
+//! next to a real fwd+bwd).
+//!
+//! ```sh
+//! cargo bench --bench adaptive_vs_fixed
+//! ```
+
+use seesaw::experiments::adaptive_exps::{ablation, staircase_equivalence};
+use seesaw::metrics::print_table;
+use seesaw::schedule::{AdaptiveSeesaw, Schedule};
+use seesaw::util::bench::{bench, black_box};
+use std::time::Duration;
+
+fn main() {
+    let total = 400_000u64;
+    let mut table = Vec::new();
+    for a in [1.5f64, 2.0, 4.0] {
+        let rows = ablation(a, total, 16, 4_000);
+        let fixed = &rows[0];
+        let adaptive = &rows[1];
+        table.push(vec![
+            format!("{a}"),
+            format!("{:.6}", fixed.final_risk),
+            format!("{:.6}", adaptive.final_risk),
+            format!("{}", fixed.steps),
+            format!("{}", adaptive.steps),
+            format!("{:.1}%", (1.0 - adaptive.serial_time / fixed.serial_time) * 100.0),
+            format!("{}/{}", adaptive.cuts, fixed.cuts),
+        ]);
+    }
+    print_table(
+        "adaptive vs fixed Seesaw — exact recursion, equal tokens",
+        &["a", "fixed CE", "adaptive CE", "fixed steps", "adaptive steps", "time saved", "cuts (a/f)"],
+        &table,
+    );
+
+    // equivalence sanity before timing anything
+    let (f, ad) = staircase_equivalence(2.0, total, 16, total / 10);
+    assert_eq!(f.trajectory, ad.trajectory, "oracle equivalence violated");
+    println!("oracle equivalence: OK ({} steps bit-identical)", f.trajectory.len());
+
+    // controller hot-path cost: query + observe per simulated step — must
+    // be nanoseconds next to a ~second-scale fwd+bwd.
+    let mut ctrl = AdaptiveSeesaw::new(3e-3, 4096, 0, u64::MAX, 2.0).max_cuts(48);
+    let mut tokens = 0u64;
+    bench("adaptive controller query+observe", Duration::from_millis(200), || {
+        let p = ctrl.query(tokens);
+        tokens = tokens.wrapping_add(p.batch_tokens);
+        ctrl.observe_gns(tokens, 4096.0 + (tokens % 1_000_000) as f64);
+        black_box(p.batch_tokens);
+    });
+}

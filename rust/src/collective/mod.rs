@@ -71,10 +71,36 @@ impl CollectiveKind {
 /// allreduce would); the result is deterministic for fixed inputs — the
 /// step engine's bit-exactness guarantee rests on it.
 pub trait Collective: Send + Sync {
+    /// Config/CLI spelling of this implementation (`ring` | `parallel`).
     fn name(&self) -> &'static str;
 
     /// Reduce `shards` to their mean in place; returns byte/phase stats.
     fn allreduce_mean(&self, shards: &mut [Vec<f32>]) -> CollectiveStats;
+
+    /// [`Collective::allreduce_mean`] that additionally reads each shard's
+    /// squared L2 norm **before** the reduction destroys the per-worker
+    /// sums — the free small-batch signal the gradient-noise-scale
+    /// estimator ([`crate::metrics::GnsEstimator`]) consumes. `sqnorms` is
+    /// cleared and refilled (one `f64` per shard); a caller-owned buffer
+    /// so the hot path allocates nothing per step.
+    ///
+    /// The reads are pure, so the reduction result — and the engine's
+    /// bit-exactness contract — is untouched.
+    fn allreduce_mean_with_sqnorms(
+        &self,
+        shards: &mut [Vec<f32>],
+        sqnorms: &mut Vec<f64>,
+    ) -> CollectiveStats {
+        sqnorms.clear();
+        sqnorms.extend(shards.iter().map(|s| shard_sqnorm(s)));
+        self.allreduce_mean(shards)
+    }
+}
+
+/// Squared L2 norm of one gradient shard, accumulated in f64 (the same
+/// precision the coordinator uses for `gnorm_sq`).
+pub fn shard_sqnorm(shard: &[f32]) -> f64 {
+    shard.iter().map(|&x| (x as f64) * (x as f64)).sum()
 }
 
 /// Ring-allreduce implementation of [`Collective`].
@@ -383,6 +409,28 @@ mod tests {
             // single shard: no communication
             let mut one = shards(1, 10);
             assert_eq!(coll.allreduce_mean(&mut one), CollectiveStats::default());
+        }
+    }
+
+    #[test]
+    fn sqnorms_read_pre_reduce_and_leave_result_unchanged() {
+        for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
+            let coll = kind.build();
+            let s = shards(4, 777);
+            // oracle: norms of the original shards, reduce result via the
+            // plain path
+            let want_norms: Vec<f64> = s.iter().map(|v| shard_sqnorm(v)).collect();
+            let mut plain = s.clone();
+            coll.allreduce_mean(&mut plain);
+            let mut with = s.clone();
+            let mut norms = vec![0.0; 99]; // stale buffer must be replaced
+            let stats = coll.allreduce_mean_with_sqnorms(&mut with, &mut norms);
+            assert_eq!(norms.len(), 4, "{kind:?}");
+            for (a, b) in norms.iter().zip(&want_norms) {
+                assert!((a - b).abs() < 1e-9 * b.abs().max(1.0), "{kind:?}: {a} vs {b}");
+            }
+            assert_eq!(with[0], plain[0], "{kind:?}: norm reads must not perturb the reduce");
+            assert_eq!(stats.bytes_moved, 2 * 3 * 777 * 4, "{kind:?}");
         }
     }
 

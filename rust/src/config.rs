@@ -9,7 +9,7 @@
 
 use crate::collective::CollectiveKind;
 use crate::metrics::WallClockModel;
-use crate::schedule::{JointSchedule, ScheduleKind, SeesawBuilder};
+use crate::schedule::{AdaptiveSeesaw, JointSchedule, Schedule, ScheduleKind, SeesawBuilder};
 use crate::util::json::Value;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
@@ -54,10 +54,13 @@ impl Default for OptimizerKind {
     }
 }
 
-/// Declarative schedule description (maps onto [`ScheduleKind`]).
+/// Declarative schedule description (maps onto [`ScheduleKind`] for the
+/// fixed kinds, [`AdaptiveSeesaw`] for the adaptive controller).
 #[derive(Debug, Clone, PartialEq)]
 pub enum ScheduleSpec {
+    /// Fixed lr and batch.
     Constant,
+    /// The cosine baseline.
     Cosine,
     /// Step-decay approximation of cosine with factor `alpha`.
     StepDecay { alpha: f64 },
@@ -67,6 +70,33 @@ pub enum ScheduleSpec {
     Family { cut_alpha: f64, alpha: f64, beta: f64 },
     /// Lemma-1 continuous limit.
     ContinuousSeesaw,
+    /// GNS-driven adaptive Seesaw: cuts `(η/√a, B·a)` fire when the
+    /// measured gradient-noise scale crosses the next batch size instead
+    /// of at precomputed token counts. `ema` smooths the GNS estimate;
+    /// `hysteresis` is the minimum tokens between cuts (0 disables).
+    /// Requires `world_size ≥ 2` (the estimator reads per-worker shards).
+    Adaptive { alpha: f64, ema: f64, hysteresis: u64 },
+}
+
+impl ScheduleSpec {
+    /// Compact, comma-free label for run names and CSV identity columns
+    /// (the `Debug` form of multi-field variants contains commas, which
+    /// would corrupt comma-separated outputs).
+    pub fn label(&self) -> String {
+        match self {
+            ScheduleSpec::Constant => "constant".into(),
+            ScheduleSpec::Cosine => "cosine".into(),
+            ScheduleSpec::StepDecay { alpha } => format!("step-a{alpha}"),
+            ScheduleSpec::Seesaw { alpha } => format!("seesaw-a{alpha}"),
+            ScheduleSpec::Family { cut_alpha, alpha, beta } => {
+                format!("family-c{cut_alpha}-a{alpha}-b{beta}")
+            }
+            ScheduleSpec::ContinuousSeesaw => "continuous-seesaw".into(),
+            ScheduleSpec::Adaptive { alpha, ema, hysteresis } => {
+                format!("adaptive-a{alpha}-ema{ema}-h{hysteresis}")
+            }
+        }
+    }
 }
 
 impl Default for ScheduleSpec {
@@ -225,7 +255,39 @@ impl TrainConfig {
         }
     }
 
-    /// Build the joint schedule over `total` tokens.
+    /// Build the schedule the coordinator drives, behind the [`Schedule`]
+    /// trait: fixed specs produce their [`JointSchedule`] lookup table,
+    /// [`ScheduleSpec::Adaptive`] the stateful [`AdaptiveSeesaw`]
+    /// controller.
+    pub fn build_dyn_schedule(&self, total: u64) -> Box<dyn Schedule> {
+        match &self.schedule {
+            ScheduleSpec::Adaptive { alpha, ema: _, hysteresis } => {
+                let warmup = (total as f64 * self.warmup_frac) as u64;
+                Box::new(
+                    AdaptiveSeesaw::new(self.base_lr, self.base_batch_tokens, warmup, total, *alpha)
+                        .hysteresis(*hysteresis)
+                        .max_cuts(self.max_cuts),
+                )
+            }
+            _ => Box::new(self.build_schedule(total)),
+        }
+    }
+
+    /// EMA retention for the gradient-noise-scale estimator: the adaptive
+    /// spec's `ema`, or a 0.9 default for fixed schedules (whose runs
+    /// still log `gns`/`b_crit` as diagnostics).
+    pub fn gns_ema(&self) -> f64 {
+        match &self.schedule {
+            ScheduleSpec::Adaptive { ema, .. } => *ema,
+            _ => 0.9,
+        }
+    }
+
+    /// Build the *fixed* joint schedule over `total` tokens.
+    /// [`ScheduleSpec::Adaptive`] maps to its fixed-staircase shadow —
+    /// the Seesaw staircase at the same underlying factor `a`, which is
+    /// exactly the trajectory the controller reproduces under the
+    /// constant-noise oracle (the ablation baseline).
     pub fn build_schedule(&self, total: u64) -> JointSchedule {
         let warmup = (total as f64 * self.warmup_frac) as u64;
         let builder = |alpha: f64| {
@@ -249,7 +311,9 @@ impl TrainConfig {
                 ScheduleKind::CosineContinuous,
             ),
             ScheduleSpec::StepDecay { alpha } => builder(*alpha).step_decay(),
-            ScheduleSpec::Seesaw { alpha } => builder(*alpha).seesaw(),
+            ScheduleSpec::Seesaw { alpha } | ScheduleSpec::Adaptive { alpha, .. } => {
+                builder(*alpha).seesaw()
+            }
             ScheduleSpec::Family { cut_alpha, alpha, beta } => {
                 builder(*cut_alpha).family(*alpha, *beta)
             }
@@ -292,6 +356,17 @@ fn parse_schedule(v: &Value) -> Result<ScheduleSpec> {
         "cosine" => ScheduleSpec::Cosine,
         "step_decay" => ScheduleSpec::StepDecay { alpha: v.f64_or("alpha", 2.0)? },
         "seesaw" => ScheduleSpec::Seesaw { alpha: v.f64_or("alpha", 1.1)? },
+        "adaptive" => {
+            let alpha = v.f64_or("alpha", 1.1)?;
+            let ema = v.f64_or("ema", 0.9)?;
+            if alpha <= 1.0 {
+                bail!("adaptive schedule: step factor alpha must exceed 1 (got {alpha})");
+            }
+            if !(0.0..1.0).contains(&ema) {
+                bail!("adaptive schedule: ema must be in [0, 1) (got {ema})");
+            }
+            ScheduleSpec::Adaptive { alpha, ema, hysteresis: v.u64_or("hysteresis", 0)? }
+        }
         "family" => ScheduleSpec::Family {
             cut_alpha: v.f64_or("cut_alpha", 2.0)?,
             alpha: v.f64_or("alpha", 2.0)?,
@@ -357,6 +432,9 @@ mod tests {
         assert!(TrainConfig::from_json(r#"{"schedule": {"kind": "bogus"}}"#).is_err());
         assert!(TrainConfig::from_json(r#"{"optimizer": {"kind": "bogus"}}"#).is_err());
         assert!(TrainConfig::from_json(r#"{"exec": {"collective": "bogus"}}"#).is_err());
+        // adaptive parameter validation
+        assert!(TrainConfig::from_json(r#"{"schedule": {"kind": "adaptive", "alpha": 1.0}}"#).is_err());
+        assert!(TrainConfig::from_json(r#"{"schedule": {"kind": "adaptive", "ema": 1.5}}"#).is_err());
     }
 
     #[test]
@@ -374,6 +452,72 @@ mod tests {
         assert_eq!(d.exec.worker_threads, 1);
         assert_eq!(d.exec.collective, CollectiveKind::Ring);
         assert!(d.exec.pin_order);
+    }
+
+    #[test]
+    fn adaptive_spec_parses_and_builds_controller() {
+        let c = TrainConfig::from_json(
+            r#"{"schedule": {"kind": "adaptive", "alpha": 2.0, "ema": 0.95, "hysteresis": 50000}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            c.schedule,
+            ScheduleSpec::Adaptive { alpha: 2.0, ema: 0.95, hysteresis: 50_000 }
+        );
+        assert_eq!(c.gns_ema(), 0.95);
+        let mut dyn_sched = c.build_dyn_schedule(1_000_000);
+        assert_eq!(dyn_sched.total_tokens(), 1_000_000);
+        assert!(!dyn_sched.supports_resume(), "adaptive state is not checkpointed");
+        // no GNS observed yet → stays in phase 0 at any token count
+        assert_eq!(dyn_sched.query(900_000).phase, 0);
+        // defaults when fields are omitted
+        let d = TrainConfig::from_json(r#"{"schedule": {"kind": "adaptive"}}"#).unwrap();
+        assert_eq!(d.schedule, ScheduleSpec::Adaptive { alpha: 1.1, ema: 0.9, hysteresis: 0 });
+        // fixed specs use the diagnostic default EMA
+        assert_eq!(TrainConfig::from_json("{}").unwrap().gns_ema(), 0.9);
+    }
+
+    #[test]
+    fn schedule_labels_are_compact_and_csv_safe() {
+        let specs = [
+            ScheduleSpec::Constant,
+            ScheduleSpec::Cosine,
+            ScheduleSpec::StepDecay { alpha: 2.0 },
+            ScheduleSpec::Seesaw { alpha: 1.1 },
+            ScheduleSpec::Family { cut_alpha: 2.0, alpha: 1.0, beta: 4.0 },
+            ScheduleSpec::ContinuousSeesaw,
+            ScheduleSpec::Adaptive { alpha: 2.0, ema: 0.9, hysteresis: 50_000 },
+        ];
+        for s in &specs {
+            let l = s.label();
+            assert!(!l.contains(',') && !l.contains(' '), "label `{l}` must be CSV-safe");
+        }
+        assert_eq!(
+            ScheduleSpec::Adaptive { alpha: 2.0, ema: 0.9, hysteresis: 0 }.label(),
+            "adaptive-a2-ema0.9-h0"
+        );
+        assert_eq!(ScheduleSpec::Seesaw { alpha: 1.1 }.label(), "seesaw-a1.1");
+    }
+
+    #[test]
+    fn adaptive_fixed_shadow_is_the_seesaw_staircase() {
+        let mut c = TrainConfig::default();
+        c.schedule = ScheduleSpec::Adaptive { alpha: 2.0, ema: 0.9, hysteresis: 0 };
+        let shadow = c.build_schedule(1_000_000);
+        c.schedule = ScheduleSpec::Seesaw { alpha: 2.0 };
+        assert_eq!(shadow, c.build_schedule(1_000_000));
+    }
+
+    #[test]
+    fn fixed_specs_build_the_same_dyn_schedule() {
+        // the trait-object path must hand back the identical lookup table
+        // (the bit-exactness guarantee for existing fixed-schedule runs).
+        let c = TrainConfig::default();
+        let fixed = c.build_schedule(500_000);
+        let mut boxed = c.build_dyn_schedule(500_000);
+        for t in [0u64, 50_000, 250_000, 499_999] {
+            assert_eq!(fixed.at(t), boxed.query(t));
+        }
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! re-compiling (DESIGN.md §2).
 //!
 //! Per optimizer step:
-//! 1. query the [`JointSchedule`] at the current token count → `(lr, B)`;
+//! 1. query the [`Schedule`] at the current token count → `(lr, B)` —
+//!    a fixed [`crate::schedule::JointSchedule`] lookup, or the
+//!    GNS-driven [`crate::schedule::AdaptiveSeesaw`] controller;
 //! 2. plan `B / micro_tokens` microbatches on this thread (the loader
 //!    order is the determinism contract) and hand them to the
 //!    [`StepEngine`], which shards them round-robin across `world_size`
@@ -18,9 +20,14 @@
 //!    place;
 //! 5. apply the optimizer executable (`adamw_step` / `sgd_step` — NSGD is
 //!    sgd with `lr/√(EMA‖ḡ‖²)`, eq. 7);
-//! 6. log metrics (loss, z-loss, grad norm, FLOPs, modeled serial time —
-//!    which now charges the collective's payload bytes against the
-//!    wall-clock model's interconnect bandwidth).
+//! 6. fold the per-worker shard norms + the global gradient norm into the
+//!    online gradient-noise-scale estimator
+//!    ([`crate::metrics::GnsEstimator`]) and feed the smoothed GNS back
+//!    to the schedule (the adaptive controller's cut signal; fixed
+//!    schedules ignore it);
+//! 7. log metrics (loss, z-loss, grad norm, GNS/`b_crit`/cut events,
+//!    FLOPs, modeled serial time — which charges the collective's payload
+//!    bytes against the wall-clock model's interconnect bandwidth).
 //!
 //! The engine's trajectory is bit-identical for any `worker_threads`
 //! (see `worker` module docs); `worker_threads = 1` is the sequential
@@ -32,24 +39,33 @@ pub mod worker;
 pub use checkpoint::Checkpoint;
 pub use worker::{GradSource, Microbatch, MicroStats, StepEngine, StepOutput, Worker};
 
-use crate::config::{OptimizerKind, TrainConfig};
+use crate::config::{OptimizerKind, ScheduleSpec, TrainConfig};
 use crate::data::{Corpus, Loader};
-use crate::metrics::{RunLog, StepRecord, WallClockModel};
+use crate::metrics::{GnsEstimator, RunLog, StepRecord, WallClockModel};
 use crate::runtime::ModelRuntime;
-use crate::schedule::JointSchedule;
-use anyhow::{ensure, Result};
+use crate::schedule::Schedule;
+use anyhow::{bail, ensure, Result};
 
 /// Mutable training state: parameters + optimizer moments + clocks.
 pub struct TrainState {
+    /// Model parameters (device literals, manifest leaf order).
     pub params: Vec<xla::Literal>,
+    /// AdamW first moments.
     pub m: Vec<xla::Literal>,
+    /// AdamW second moments.
     pub v: Vec<xla::Literal>,
+    /// Optimizer steps taken.
     pub step: u64,
+    /// Tokens consumed.
     pub tokens: u64,
     /// EMA of ‖ḡ‖² — the NSGD denominator estimate (Assumption 2).
     pub gnorm_ema: f64,
+    /// Cumulative training FLOPs.
     pub flops: f64,
+    /// Cumulative modeled serial seconds.
     pub serial_time: f64,
+    /// Schedule phase of the previous step (cut-event edge detector).
+    pub phase: usize,
 }
 
 /// Borrowed per-step execution context handed to the step engine's
@@ -91,23 +107,56 @@ impl GradSource for StepCtx<'_> {
 
 /// The training coordinator.
 pub struct Trainer {
+    /// PJRT runtime executing the AOT artifacts.
     pub rt: ModelRuntime,
+    /// The run description this trainer was built from.
     pub cfg: TrainConfig,
-    pub schedule: JointSchedule,
+    /// The joint LR/batch schedule — a fixed lookup table or the adaptive
+    /// GNS-driven controller, behind the [`Schedule`] trait.
+    pub schedule: Box<dyn Schedule>,
+    /// Deterministic microbatch loader (the determinism contract).
     pub loader: Loader,
+    /// Serial wall-clock model.
     pub wall: WallClockModel,
+    /// Resolved token budget.
     pub total_tokens: u64,
     /// The step engine: workers, gradient buffers, collective — reused
     /// across steps (configured by `cfg.exec`).
     pub engine: StepEngine,
+    /// Online gradient-noise-scale estimator fed from the engine's
+    /// per-worker shard norms (active — i.e. producing estimates — only
+    /// when `world_size ≥ 2`).
+    pub gns: GnsEstimator,
 }
 
 impl Trainer {
     /// Load artifacts + corpus and resolve the schedule.
     pub fn new(cfg: TrainConfig) -> Result<Self> {
+        if matches!(cfg.schedule, ScheduleSpec::Adaptive { .. }) {
+            ensure!(
+                cfg.world_size >= 2,
+                "adaptive schedule needs world_size ≥ 2: the GNS estimator reads \
+                 per-worker gradient shards, and a single worker has no small-batch signal"
+            );
+        }
         let rt = ModelRuntime::load(cfg.model_dir())?;
+        if matches!(cfg.schedule, ScheduleSpec::Adaptive { .. }) {
+            // the planner clamps `world` to the microbatch count, so a
+            // base batch that plans to one microbatch would silently
+            // produce a single shard and no GNS signal — reject it here
+            // (batch only grows from the base under the adaptive ramp).
+            let base_micro =
+                (cfg.base_batch_tokens as f64 / rt.micro_tokens() as f64).round().max(1.0) as u64;
+            ensure!(
+                base_micro >= 2,
+                "adaptive schedule needs base_batch_tokens ≥ 2 microbatches ({} tokens each) \
+                 so the batch shards across workers; got {} tokens",
+                rt.micro_tokens(),
+                cfg.base_batch_tokens
+            );
+        }
         let total = cfg.resolve_total_tokens(rt.manifest.non_embedding_params);
-        let schedule = cfg.build_schedule(total);
+        let schedule = cfg.build_dyn_schedule(total);
         let corpus = match &cfg.corpus_path {
             Some(p) => Corpus::from_text(&std::fs::read_to_string(p)?),
             None => Corpus::synthetic(cfg.corpus_tokens, cfg.seed),
@@ -115,7 +164,8 @@ impl Trainer {
         let loader = Loader::new(corpus, rt.seq_len(), cfg.seed.wrapping_add(1));
         let wall = cfg.wallclock.unwrap_or_default();
         let engine = StepEngine::new(cfg.exec);
-        Ok(Self { rt, cfg, schedule, loader, wall, total_tokens: total, engine })
+        let gns = GnsEstimator::new(cfg.gns_ema());
+        Ok(Self { rt, cfg, schedule, loader, wall, total_tokens: total, engine, gns })
     }
 
     /// Fresh state (params from the `init` executable).
@@ -129,6 +179,7 @@ impl Trainer {
             gnorm_ema: 0.0,
             flops: 0.0,
             serial_time: 0.0,
+            phase: 0,
         })
     }
 
@@ -139,7 +190,9 @@ impl Trainer {
 
     /// One optimizer step. Returns the step's record.
     pub fn train_step(&mut self, state: &mut TrainState) -> Result<StepRecord> {
-        let point = self.schedule.at(state.tokens);
+        let point = self.schedule.query(state.tokens);
+        let cuts = point.phase.saturating_sub(state.phase) as u32;
+        state.phase = point.phase;
         let n_micro = self.plan_microbatches(point.batch_tokens);
         let batch_tokens = n_micro * self.rt.micro_tokens();
         let world = self.cfg.world_size.max(1).min(n_micro as usize);
@@ -200,11 +253,27 @@ impl Trainer {
             }
         }
 
+        // --- gradient-noise scale ----------------------------------------
+        // the shard norms were read off the engine's buffers pre-allreduce;
+        // folding them in costs W divisions — no extra gradient work.
+        let gns_raw = self.gns.observe(
+            &out.shard_sqnorms,
+            &out.shard_micro,
+            self.rt.micro_tokens(),
+            gnorm_sq,
+        );
+        let b_crit = self.gns.gns();
+
         // --- bookkeeping -------------------------------------------------
         let tokens_before = state.tokens;
         state.tokens += batch_tokens;
         state.flops += self.rt.manifest.flops_per_token as f64 * batch_tokens as f64;
         state.serial_time += self.wall.step_time_comm(batch_tokens, out.comm.bytes_moved);
+        // feed the smoothed GNS back at the *end-of-step* token count —
+        // the value the next `query` call will see.
+        if let Some(b) = b_crit {
+            self.schedule.observe_gns(state.tokens, b);
+        }
         Ok(StepRecord {
             step: state.step,
             tokens: tokens_before,
@@ -216,6 +285,9 @@ impl Trainer {
             flops: state.flops,
             serial_time: state.serial_time,
             comm_bytes: out.comm.bytes_moved,
+            gns: gns_raw,
+            b_crit,
+            cuts,
             val_ce: None,
         })
     }
@@ -239,7 +311,7 @@ impl Trainer {
             Some(s) => s,
             None => self.init_state()?,
         };
-        let mut log = RunLog::new(format!("{}-{:?}", self.cfg.model, self.cfg.schedule));
+        let mut log = RunLog::new(format!("{}-{}", self.cfg.model, self.cfg.schedule.label()));
         while state.tokens < self.total_tokens {
             let mut rec = self.train_step(&mut state)?;
             let is_last = state.tokens >= self.total_tokens;
@@ -296,8 +368,20 @@ impl Trainer {
         if !path.exists() {
             return Ok(None);
         }
+        if !self.schedule.supports_resume() {
+            bail!(
+                "schedule {:?} keeps controller state that is not checkpointed; \
+                 resuming from {:?} would silently restart the batch ramp — \
+                 delete the checkpoint or use a fixed schedule",
+                self.cfg.schedule,
+                path
+            );
+        }
         let ck = Checkpoint::load(&path)?;
         self.loader.cursor = ck.data_cursor;
+        // fixed schedules are pure in the token count, so the phase edge
+        // detector re-anchors from a query at the resume point.
+        let phase = self.schedule.query(ck.tokens).phase;
         Ok(Some(TrainState {
             params: self.rt.from_host(&ck.params)?,
             m: self.rt.from_host(&ck.m)?,
@@ -307,6 +391,7 @@ impl Trainer {
             gnorm_ema: ck.gnorm_ema,
             flops: ck.flops,
             serial_time: ck.serial_time,
+            phase,
         }))
     }
 }

@@ -86,8 +86,9 @@ impl Worker {
 
 /// Reduced scalar output of one engine step. The mean gradient is read
 /// through [`StepEngine::mean_grad`] — it stays in worker buffer 0.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StepOutput {
+    /// Microbatches this step reduced over.
     pub n_micro: u64,
     /// Σ ce over microbatches (reduction order per [`ExecSpec::pin_order`]).
     pub ce_sum: f64,
@@ -95,24 +96,48 @@ pub struct StepOutput {
     pub zsq_sum: f64,
     /// Stats of the gradient collective (zero when `world == 1`).
     pub comm: CollectiveStats,
+    /// `‖sum_w‖²` of each worker's accumulated (pre-allreduce) gradient,
+    /// read for free off the buffers the collective is about to reduce —
+    /// the small-batch half of the gradient-noise-scale estimator. Empty
+    /// when `world == 1` (no contrast to estimate from, so the pass is
+    /// skipped).
+    pub shard_sqnorms: Vec<f64>,
+    /// Microbatches each worker accumulated (round-robin counts), parallel
+    /// to `shard_sqnorms`.
+    pub shard_micro: Vec<u64>,
 }
 
 /// The step engine: owns workers, their preallocated gradient buffers and
 /// the configured collective; reused across steps so the hot path does no
-/// per-step buffer allocation beyond the microbatch plan itself.
+/// per-step allocation proportional to the gradient size (beyond the
+/// microbatch plan itself, only O(world) scalar metadata — the shard
+/// norms/counts in [`StepOutput`] — is allocated per step).
 pub struct StepEngine {
+    /// Execution knobs this engine was built with.
     pub exec: ExecSpec,
     collective: Box<dyn Collective>,
     workers: Vec<Worker>,
     /// Flat per-worker gradient buffers, parallel to `workers`.
     bufs: Vec<Vec<f32>>,
+    /// Reusable per-worker ‖sum‖² buffer (refilled each step, no per-step
+    /// allocation).
+    sqnorms: Vec<f64>,
 }
 
 impl StepEngine {
+    /// Engine with the given execution knobs; buffers grow lazily on the
+    /// first step.
     pub fn new(exec: ExecSpec) -> Self {
-        Self { collective: exec.collective.build(), exec, workers: Vec::new(), bufs: Vec::new() }
+        Self {
+            collective: exec.collective.build(),
+            exec,
+            workers: Vec::new(),
+            bufs: Vec::new(),
+            sqnorms: Vec::new(),
+        }
     }
 
+    /// Name of the configured collective implementation.
     pub fn collective_name(&self) -> &'static str {
         self.collective.name()
     }
@@ -210,23 +235,38 @@ impl StepEngine {
         };
 
         let comm = if world > 1 {
-            let stats = self.collective.allreduce_mean(bufs);
-            // the collective averaged the worker *sums*; rescale buffer 0
-            // to the mean over microbatches: mean_g = (Σ_w sum_w)/n = avg_w·W/n.
+            // the collective reads each worker's ‖sum‖² (the GNS
+            // estimator's small-batch signal) before the reduce destroys
+            // the per-worker sums, then averages them; buffer 0 is
+            // rescaled to the mean over microbatches:
+            // mean_g = (Σ_w sum_w)/n = avg_w·W/n.
+            let stats = self.collective.allreduce_mean_with_sqnorms(bufs, &mut self.sqnorms);
             let scale = world as f32 / n_micro as f32;
             for x in &mut bufs[0] {
                 *x *= scale;
             }
             stats
         } else {
+            // one worker ⇒ no small-batch/large-batch contrast, so the GNS
+            // estimator can't use a norm here — skip the O(n) pass entirely.
+            self.sqnorms.clear();
             let inv = 1.0 / n_micro as f32;
             for x in &mut bufs[0] {
                 *x *= inv;
             }
             CollectiveStats::default()
         };
+        let shard_micro: Vec<u64> =
+            self.workers[..world].iter().map(|w| w.shard.len() as u64).collect();
 
-        Ok(StepOutput { n_micro, ce_sum, zsq_sum, comm })
+        Ok(StepOutput {
+            n_micro,
+            ce_sum,
+            zsq_sum,
+            comm,
+            shard_sqnorms: self.sqnorms.clone(),
+            shard_micro,
+        })
     }
 
     /// Flat mean gradient (manifest leaf order) left by the last
@@ -333,6 +373,29 @@ mod tests {
             let w = w / 8.0;
             assert!((got - w).abs() < 1e-5 + 1e-5 * w.abs(), "{got} vs {w}");
         }
+    }
+
+    #[test]
+    fn shard_sqnorms_and_micro_counts_match_oracle() {
+        let src = FakeSource { elems: 128 };
+        let mut e = StepEngine::new(ExecSpec::default());
+        let out = e.execute(&src, 3, micros(8)).unwrap();
+        // round-robin `index % 3` over indices 0..8: 3 + 3 + 2
+        assert_eq!(out.shard_micro, vec![3, 3, 2]);
+        // oracle: re-accumulate each worker's shard and take ‖sum‖²
+        let mut want = vec![vec![0f32; 128]; 3];
+        for m in micros(8) {
+            let w = (m.index as usize) % 3;
+            src.accumulate(&m.tokens, &m.targets, &mut want[w]).unwrap();
+        }
+        for (got, shard) in out.shard_sqnorms.iter().zip(&want) {
+            let norm: f64 = shard.iter().map(|&x| (x as f64) * (x as f64)).sum();
+            assert!((got - norm).abs() < 1e-9 * norm.max(1.0), "{got} vs {norm}");
+        }
+        // single worker: no contrast to estimate from — no norms computed
+        let out1 = e.execute(&src, 1, micros(4)).unwrap();
+        assert!(out1.shard_sqnorms.is_empty());
+        assert_eq!(out1.shard_micro, vec![4]);
     }
 
     #[test]

@@ -1,0 +1,202 @@
+//! Fixed-vs-adaptive scheduling ablation on the exact NSGD risk recursion.
+//!
+//! The linreg substrate gives this ablation two things the LM stack
+//! cannot: it runs in milliseconds without compiled artifacts, and the
+//! gradient-noise scale is available **exactly** — the Appendix-B
+//! decomposition of `E‖g‖²` splits into a noise part (`∝ 1/B`) and a mean
+//! part, so `B_noise = tr(Σ)/‖G‖²` needs no estimator. That isolates the
+//! *controller* (does cutting at measured-GNS crossings beat / match the
+//! precomputed staircase?) from the *estimator* (tested separately in
+//! `metrics::gns`).
+//!
+//! Three drivers share one step loop ([`run_schedule`]):
+//! * fixed Seesaw staircase (the Algorithm 1 baseline);
+//! * [`AdaptiveSeesaw`] fed the recursion's exact GNS ("measured");
+//! * [`AdaptiveSeesaw`] fed the constant-noise oracle — which must
+//!   reproduce the fixed staircase **bit-exactly**
+//!   ([`staircase_equivalence`], also pinned as a property test).
+
+use crate::linreg::recursion::Problem;
+use crate::linreg::spectrum::Spectrum;
+use crate::metrics::WallClockModel;
+use crate::schedule::adaptive::constant_noise_oracle;
+use crate::schedule::{AdaptiveSeesaw, Schedule, SeesawBuilder};
+
+/// Outcome of one recursion-backed schedule run.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    /// Driver label (`fixed`, `adaptive-measured`, `adaptive-oracle`).
+    pub name: String,
+    /// Final excess risk (the CE stand-in on this substrate).
+    pub final_risk: f64,
+    /// Serial optimizer steps taken.
+    pub steps: u64,
+    /// Modeled serial seconds ([`WallClockModel`] waves).
+    pub serial_time: f64,
+    /// Schedule cuts fired.
+    pub cuts: u64,
+    /// `(lr, batch)` at every step — the trajectory, for equivalence
+    /// checks.
+    pub trajectory: Vec<(f64, u64)>,
+}
+
+/// How the controller hears about the gradient-noise scale.
+pub enum GnsFeed<'a> {
+    /// No feedback (fixed schedules).
+    None,
+    /// The recursion's exact `B_noise = tr(Σ)/‖G‖²` (samples ≡ tokens):
+    /// noise trace from the `1/B`-scaled terms, signal from the mean term.
+    Measured,
+    /// An external oracle `tokens → B_noise`.
+    Oracle(&'a dyn Fn(u64) -> f64),
+}
+
+/// Drive `sched` through the exact risk recursion to its token budget.
+///
+/// Samples are identified with tokens; the schedule's lr is used directly
+/// as the SGD step size, so pick `base_lr` under the Theorem 1 gate
+/// (`Problem::eta_max`).
+pub fn run_schedule(
+    sched: &mut dyn Schedule,
+    problem: &Problem,
+    feed: GnsFeed<'_>,
+    wall: &WallClockModel,
+    name: &str,
+) -> AblationRow {
+    let total = sched.total_tokens();
+    let mut it = problem.iter();
+    let mut tokens = 0u64;
+    let mut steps = 0u64;
+    let mut serial_time = 0.0;
+    let mut cuts = 0u64;
+    let mut last_phase = 0usize;
+    let mut trajectory = Vec::new();
+    if let GnsFeed::Oracle(o) = &feed {
+        sched.observe_gns(0, o(0));
+    }
+    while tokens < total {
+        let p = sched.query(tokens);
+        if p.phase > last_phase {
+            cuts += (p.phase - last_phase) as u64;
+            last_phase = p.phase;
+        }
+        trajectory.push((p.lr, p.batch_tokens));
+        it.step(p.lr, p.batch_tokens);
+        tokens += p.batch_tokens;
+        serial_time += wall.step_time(p.batch_tokens);
+        steps += 1;
+        match &feed {
+            GnsFeed::None => {}
+            GnsFeed::Oracle(o) => sched.observe_gns(tokens, o(tokens)),
+            GnsFeed::Measured => {
+                let b = p.batch_tokens;
+                let g = it.grad_norm_sq(b);
+                // noise terms scale as tr(Σ)/B; the mean term is
+                // (1−1/B)·‖G‖² — undo both factors to recover the ratio.
+                let noise_tr = (g.additive + g.iterate) * b as f64;
+                let signal = if b > 1 { g.mean / (1.0 - 1.0 / b as f64) } else { g.mean };
+                if signal > 0.0 {
+                    sched.observe_gns(tokens, noise_tr / signal);
+                }
+            }
+        }
+    }
+    AblationRow { name: name.into(), final_risk: it.risk(), steps, serial_time, cuts, trajectory }
+}
+
+/// Testbed problem for the ablation: a power-law spectrum, far-from-optimum
+/// init (large bias ⇒ large `‖G‖²` ⇒ GNS starts *below* the base batch) and
+/// moderate additive noise, so the measured `B_noise` grows through
+/// training and crosses the cut thresholds mid-run — the regime the
+/// controller is designed for. Late training is variance-dominated
+/// (Assumption 2), where ramping pays off.
+pub fn testbed() -> Problem {
+    Problem::new(Spectrum::PowerLaw { dim: 64, exponent: 1.0 }, 0.05, 4.0)
+}
+
+/// The fixed-vs-adaptive ablation at equal token budget. Returns rows for
+/// the fixed staircase, the measured-GNS controller and the oracle-driven
+/// controller (same `base_lr`, `base_batch`, budget and `max_cuts`
+/// everywhere).
+pub fn ablation(a: f64, total_tokens: u64, base_batch: u64, hysteresis: u64) -> Vec<AblationRow> {
+    let problem = testbed();
+    let lr = 0.5 * problem.eta_max();
+    let wall = WallClockModel { devices: 64, tokens_per_device: 64, ..WallClockModel::default() };
+    // no warmup (the recursion has no cold start); 8 cuts bound the ramp
+    // at 256× the base batch so the tail stays step-resolved.
+    const CUTS: usize = 8;
+    let builder = SeesawBuilder::new(lr, base_batch, total_tokens, a).warmup(0).max_cuts(CUTS);
+
+    let mut fixed = builder.seesaw();
+    let mut rows = vec![run_schedule(&mut fixed, &problem, GnsFeed::None, &wall, "fixed-seesaw")];
+
+    let mut measured = AdaptiveSeesaw::new(lr, base_batch, 0, total_tokens, a)
+        .max_cuts(CUTS)
+        .hysteresis(hysteresis);
+    rows.push(run_schedule(&mut measured, &problem, GnsFeed::Measured, &wall, "adaptive-measured"));
+
+    let oracle = constant_noise_oracle(base_batch, a, builder.cut_tokens());
+    let mut oracled = AdaptiveSeesaw::new(lr, base_batch, 0, total_tokens, a).max_cuts(CUTS);
+    rows.push(run_schedule(&mut oracled, &problem, GnsFeed::Oracle(&oracle), &wall, "adaptive-oracle"));
+    rows
+}
+
+/// The equivalence contract: under the constant-noise oracle with
+/// hysteresis disabled, the adaptive controller's `(lr, batch)` trajectory
+/// equals the fixed Seesaw staircase **bit-for-bit**. Returns the two
+/// trajectories for inspection; panics never — callers assert.
+pub fn staircase_equivalence(
+    a: f64,
+    total_tokens: u64,
+    base_batch: u64,
+    warmup: u64,
+) -> (AblationRow, AblationRow) {
+    let problem = testbed();
+    let lr = 0.5 * problem.eta_max();
+    let wall = WallClockModel::default();
+    let builder = SeesawBuilder::new(lr, base_batch, total_tokens, a).warmup(warmup).max_cuts(24);
+    let mut fixed = builder.seesaw();
+    let fixed_row = run_schedule(&mut fixed, &problem, GnsFeed::None, &wall, "fixed");
+    let oracle = constant_noise_oracle(base_batch, a, builder.cut_tokens());
+    let mut adaptive =
+        AdaptiveSeesaw::new(lr, base_batch, warmup, total_tokens, a).max_cuts(24);
+    let adaptive_row =
+        run_schedule(&mut adaptive, &problem, GnsFeed::Oracle(&oracle), &wall, "adaptive");
+    (fixed_row, adaptive_row)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_rows_are_sane_and_adaptive_ramps() {
+        let rows = ablation(2.0, 400_000, 16, 0);
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.final_risk.is_finite() && r.final_risk > 0.0, "{}: {}", r.name, r.final_risk);
+            assert!(r.steps > 0);
+        }
+        let fixed = &rows[0];
+        let measured = &rows[1];
+        assert!(measured.cuts > 0, "measured GNS must eventually cross and fire cuts");
+        // equal token budget, and ramping saves serial steps vs no ramp
+        let max_batch = measured.trajectory.iter().map(|&(_, b)| b).max().unwrap();
+        assert!(max_batch > 16, "adaptive batch never ramped");
+        // the oracle-driven run matches the fixed staircase exactly
+        let oracle = &rows[2];
+        assert_eq!(fixed.trajectory.len(), oracle.trajectory.len());
+        for (f, o) in fixed.trajectory.iter().zip(&oracle.trajectory) {
+            assert_eq!(f.0.to_bits(), o.0.to_bits(), "lr divergence");
+            assert_eq!(f.1, o.1, "batch divergence");
+        }
+        assert_eq!(fixed.final_risk.to_bits(), oracle.final_risk.to_bits());
+    }
+
+    #[test]
+    fn equivalence_holds_with_warmup() {
+        let (f, ad) = staircase_equivalence(1.5, 300_000, 32, 30_000);
+        assert_eq!(f.trajectory, ad.trajectory);
+        assert_eq!(f.cuts, ad.cuts);
+    }
+}

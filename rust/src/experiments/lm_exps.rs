@@ -346,6 +346,59 @@ pub fn figure7(scale: Scale) -> Result<(f64, f64)> {
     Ok((early, late))
 }
 
+/// Adaptive ablation on the live LM stack: fixed Seesaw staircase vs the
+/// GNS-driven controller at equal token budget. Both runs shard over
+/// `world_size = 2` (the estimator needs per-worker shards; for the fixed
+/// run the sharding is semantics-neutral, so the baseline trajectory is
+/// the usual one). Returns rows `(name, final val CE, serial time, cuts)`.
+pub fn adaptive(scale: Scale, alpha: f64) -> Result<Vec<(String, f64, f64, u64)>> {
+    let model = "s";
+    let mk = |spec: ScheduleSpec, name: &str| {
+        let mut r = LmRun::new(model, spec, name.to_string());
+        r.total_tokens = budget(scale, model);
+        r.world_size = 2;
+        r
+    };
+    let runs = [
+        mk(ScheduleSpec::Seesaw { alpha }, "fixed-seesaw"),
+        mk(
+            ScheduleSpec::Adaptive {
+                alpha,
+                ema: 0.9,
+                // ~2% of the budget between cuts (Chinchilla ≈ 2.9M for `s`)
+                hysteresis: match scale {
+                    Scale::Quick => 8_000,
+                    Scale::Full => 50_000,
+                },
+            },
+            "adaptive-seesaw",
+        ),
+    ];
+    let mut out = Vec::new();
+    let mut table = Vec::new();
+    let mut logs = Vec::new();
+    for r in runs {
+        let log = r.run()?;
+        let v = log.final_val_ce().unwrap_or(f64::INFINITY);
+        table.push(vec![
+            log.name.clone(),
+            format!("{v:.4}"),
+            format!("{:.1}", log.total_serial_time()),
+            log.total_steps().to_string(),
+            log.cut_count().to_string(),
+        ]);
+        out.push((log.name.clone(), v, log.total_serial_time(), log.cut_count()));
+        logs.push(log);
+    }
+    print_table(
+        &format!("Adaptive Seesaw — fixed staircase vs GNS-driven cuts (α={alpha}, equal tokens)"),
+        &["schedule", "final val CE", "serial time", "steps", "cuts"],
+        &table,
+    );
+    write_runs_csv(&logs, results_dir().join("adaptive_lm.csv"))?;
+    Ok(out)
+}
+
 /// CBS sweep: fixed token budget, growing batch — the largest batch whose
 /// final loss stays within `tol` of the best is the critical batch size.
 pub fn cbs_sweep(scale: Scale, model: &str) -> Result<u64> {

@@ -6,6 +6,7 @@
 //! the full three-layer stack through [`crate::coordinator::Trainer`].
 //! Every harness writes a CSV under `results/` and prints its table.
 
+pub mod adaptive_exps;
 pub mod linreg_exps;
 pub mod lm_exps;
 

@@ -5,7 +5,9 @@
 //! 2025) as a three-layer rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the training coordinator: joint LR/batch-size
-//!   schedules ([`schedule`], including the paper's Algorithm 1), a
+//!   schedules ([`schedule`], including the paper's Algorithm 1 and the
+//!   GNS-driven [`schedule::AdaptiveSeesaw`] controller fed by the online
+//!   gradient-noise-scale estimator [`metrics::GnsEstimator`]), a
 //!   data-parallel **step engine** ([`coordinator::StepEngine`]) whose
 //!   workers accumulate gradients into preallocated flat buffers on real
 //!   scoped threads and combine them through a pluggable
@@ -40,4 +42,4 @@ pub mod schedule;
 pub mod util;
 
 pub use config::{ExecSpec, TrainConfig};
-pub use schedule::{JointSchedule, ScheduleKind};
+pub use schedule::{AdaptiveSeesaw, JointSchedule, Schedule, ScheduleKind};

@@ -5,12 +5,17 @@
 //!              [--lr 3e-3] [--batch-tokens 4096] [--total-tokens N]
 //!              [--world-size W] [--worker-threads T] [--collective ring|parallel]
 //!              [--pin-order true|false] [--variant ref|pallas] [--out-csv path]
+//!              [--gns-ema 0.9] [--hysteresis TOKENS]   (with --schedule adaptive)
 //! seesaw exp <figure1|table1|figure2|figure3|figure4|figure5|figure6|
 //!             figure7|theorem1|corollary1|lemma1|lemma4|assumption2|
-//!             all-theory> [--full] [--alpha 1.1]
+//!             adaptive|all-theory> [--full] [--alpha 1.1]
 //! seesaw cbs [--model s] [--full]
 //! seesaw info [--model s] [--artifacts-dir artifacts]
 //! ```
+//!
+//! `--schedule adaptive` replaces the precomputed Seesaw staircase with
+//! the GNS-driven controller (needs `--world-size ≥ 2`); `seesaw exp
+//! adaptive` runs the fixed-vs-adaptive ablation on the live LM stack.
 
 use anyhow::{anyhow, bail, Result};
 use seesaw::collective::CollectiveKind;
@@ -57,6 +62,16 @@ fn train(args: &Args) -> Result<()> {
         cfg.schedule = match s {
             "cosine" => ScheduleSpec::Cosine,
             "seesaw" => ScheduleSpec::Seesaw { alpha },
+            "adaptive" => {
+                if alpha <= 1.0 {
+                    bail!("--schedule adaptive needs --alpha > 1 (got {alpha})");
+                }
+                let ema = args.f64_or("gns-ema", 0.9)?;
+                if !(0.0..1.0).contains(&ema) {
+                    bail!("--gns-ema must be in [0, 1) (got {ema})");
+                }
+                ScheduleSpec::Adaptive { alpha, ema, hysteresis: args.u64_or("hysteresis", 0)? }
+            }
             "step" => ScheduleSpec::StepDecay { alpha },
             "constant" => ScheduleSpec::Constant,
             "continuous" => ScheduleSpec::ContinuousSeesaw,
@@ -102,8 +117,9 @@ fn train(args: &Args) -> Result<()> {
     );
     let log = t.run()?;
     println!(
-        "done: {} steps, final train CE {:.4}, final val CE {}, serial time {:.1}s (modeled)",
+        "done: {} steps, {} cuts, final train CE {:.4}, final val CE {}, serial time {:.1}s (modeled)",
         log.total_steps(),
+        log.cut_count(),
         log.final_train_ce().unwrap_or(f64::NAN),
         log.final_val_ce().map(|v| format!("{v:.4}")).unwrap_or_else(|| "-".into()),
         log.total_serial_time()
@@ -144,6 +160,9 @@ fn exp(args: &Args) -> Result<()> {
         }
         "figure7" => {
             lm_exps::figure7(scale)?;
+        }
+        "adaptive" => {
+            lm_exps::adaptive(scale, alpha)?;
         }
         "theorem1" => {
             linreg_exps::theorem1();

@@ -1,0 +1,221 @@
+//! Online gradient-noise-scale estimation from the step engine's shards.
+//!
+//! The critical-batch proxy the paper trains at is the **gradient noise
+//! scale** `B_noise = tr(Σ)/‖G‖²` (per-token noise covariance trace over
+//! the squared true-gradient norm; McCandlish et al. 2018, App. A). The
+//! step engine already holds per-worker gradient *sums* right before the
+//! allreduce, so the two-point small-batch/large-batch estimator comes for
+//! free — no extra forward or backward passes, just W+1 squared norms the
+//! collective reads off buffers it is about to reduce anyway.
+//!
+//! Per worker `w` with `n_w` microbatches (`b_w = n_w·micro_tokens`
+//! tokens), the worker-mean gradient `g_w = sum_w/n_w` is a small-batch
+//! estimate and the allreduced global mean `G_B` (batch `B` tokens) the
+//! large-batch one. The unbiased pair (App. A, eq. A.2/A.3):
+//!
+//! ```text
+//! ‖G‖²_w = (B·‖G_B‖² − b_w·‖g_w‖²) / (B − b_w)
+//! S_w    = (‖g_w‖² − ‖G_B‖²) / (1/b_w − 1/B)
+//! ```
+//!
+//! averaged over workers and EMA-smoothed **separately** (the ratio of
+//! smoothed estimates is far more stable than smoothing the per-step
+//! ratio, whose numerator and denominator are both noisy and can go
+//! negative). The smoothed ratio `S̄/‖G‖²̄` is the `b_crit` column in the
+//! step CSV and the signal driving [`crate::schedule::AdaptiveSeesaw`].
+//!
+//! Estimation needs `world_size ≥ 2` (with one worker the small and large
+//! batch coincide and the two-point system is degenerate); with one
+//! worker [`GnsEstimator::observe`] is a no-op returning `None`.
+
+/// Online two-point GNS estimator with separate EMA smoothing of the
+/// noise (`tr Σ`) and signal (`‖G‖²`) components.
+#[derive(Debug, Clone)]
+pub struct GnsEstimator {
+    /// EMA retention θ in `[0, 1)`: `ema ← θ·ema + (1−θ)·x`. `0` disables
+    /// smoothing (the smoothed estimate is the last per-step estimate).
+    pub ema: f64,
+    /// Smoothed `tr(Σ)` estimate (per-token units).
+    ema_s: f64,
+    /// Smoothed `‖G‖²` estimate.
+    ema_g2: f64,
+    /// Observations folded into the EMAs.
+    observations: u64,
+}
+
+impl GnsEstimator {
+    /// New estimator with EMA retention `ema` (clamped into `[0, 1)`).
+    pub fn new(ema: f64) -> Self {
+        Self { ema: ema.clamp(0.0, 1.0 - 1e-9), ema_s: 0.0, ema_g2: 0.0, observations: 0 }
+    }
+
+    /// Fold in one optimizer step's evidence.
+    ///
+    /// * `shard_sum_sqnorms[w]` — `‖sum_w‖²` of worker `w`'s accumulated
+    ///   (un-averaged) gradient, read off the buffers pre-allreduce;
+    /// * `shard_micro[w]` — microbatches worker `w` accumulated;
+    /// * `micro_tokens` — tokens per microbatch;
+    /// * `global_sqnorm` — `‖G_B‖²` of the allreduced mean gradient.
+    ///
+    /// Returns the *raw* per-step `B_noise` estimate (tokens) when one is
+    /// defined — `None` with fewer than two workers or a non-positive
+    /// signal estimate (early training noise can swamp the unbiased
+    /// `‖G‖²` estimate). The smoothed estimate is [`GnsEstimator::gns`].
+    pub fn observe(
+        &mut self,
+        shard_sum_sqnorms: &[f64],
+        shard_micro: &[u64],
+        micro_tokens: u64,
+        global_sqnorm: f64,
+    ) -> Option<f64> {
+        if shard_sum_sqnorms.len() < 2 {
+            // one shard (the engine skips norms entirely at world == 1):
+            // small and large batch coincide, nothing to estimate.
+            return None;
+        }
+        debug_assert_eq!(shard_sum_sqnorms.len(), shard_micro.len());
+        let big = shard_micro.iter().sum::<u64>() * micro_tokens;
+        let mut s_sum = 0.0f64;
+        let mut g2_sum = 0.0f64;
+        let mut used = 0u32;
+        for (&sqnorm, &n_w) in shard_sum_sqnorms.iter().zip(shard_micro) {
+            let small = n_w * micro_tokens;
+            if n_w == 0 || small >= big {
+                continue; // degenerate: small batch must be a strict subset
+            }
+            let small_msq = sqnorm / (n_w as f64 * n_w as f64); // ‖g_w‖²
+            let (bf, sf) = (big as f64, small as f64);
+            g2_sum += (bf * global_sqnorm - sf * small_msq) / (bf - sf);
+            s_sum += (small_msq - global_sqnorm) / (1.0 / sf - 1.0 / bf);
+            used += 1;
+        }
+        if used == 0 {
+            return None;
+        }
+        let s = s_sum / used as f64;
+        let g2 = g2_sum / used as f64;
+        if self.observations == 0 {
+            self.ema_s = s;
+            self.ema_g2 = g2;
+        } else {
+            self.ema_s = self.ema * self.ema_s + (1.0 - self.ema) * s;
+            self.ema_g2 = self.ema * self.ema_g2 + (1.0 - self.ema) * g2;
+        }
+        self.observations += 1;
+        ratio(s, g2)
+    }
+
+    /// The smoothed `B_noise = tr(Σ)/‖G‖²` in tokens; `None` before the
+    /// first observation or while the smoothed signal estimate is
+    /// non-positive.
+    pub fn gns(&self) -> Option<f64> {
+        if self.observations == 0 {
+            None
+        } else {
+            ratio(self.ema_s, self.ema_g2)
+        }
+    }
+
+    /// Observations folded in so far.
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+}
+
+/// Positive finite ratio `s/g2`, else `None`.
+fn ratio(s: f64, g2: f64) -> Option<f64> {
+    let r = s / g2;
+    (g2 > 0.0 && s > 0.0 && r.is_finite()).then_some(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn two_scalar_workers_match_hand_computed_algebra() {
+        // workers with 1 microbatch of 1 token each, scalar "gradients"
+        // 1 and 3: sample variance (s1−s2)²/2 = 2, unbiased ‖G‖² =
+        // mean² − var/2 = 4 − 1 = 3, so B_noise = 2/3 exactly.
+        let mut e = GnsEstimator::new(0.9);
+        let global_mean_sq = 4.0; // ((1+3)/2)²
+        let raw = e.observe(&[1.0, 9.0], &[1, 1], 1, global_mean_sq).unwrap();
+        assert!((raw - 2.0 / 3.0).abs() < 1e-12, "{raw}");
+        assert!((e.gns().unwrap() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_worker_is_degenerate() {
+        let mut e = GnsEstimator::new(0.9);
+        assert_eq!(e.observe(&[5.0], &[4], 16, 1.0), None);
+        assert_eq!(e.gns(), None);
+        assert_eq!(e.observations(), 0);
+    }
+
+    #[test]
+    fn noiseless_gradients_give_zero_noise_scale() {
+        // identical shard gradients ⇒ worker means equal the global mean
+        // ⇒ S estimate is exactly 0 ⇒ no positive B_noise.
+        let mut e = GnsEstimator::new(0.5);
+        // 4 workers × 2 microbatches, each microbatch gradient = [3.0]:
+        // sum_w = 6 ⇒ ‖sum‖² = 36, global mean = 3 ⇒ ‖G‖² = 9.
+        let raw = e.observe(&[36.0; 4], &[2; 4], 8, 9.0);
+        assert_eq!(raw, None, "zero noise has no positive GNS");
+        assert_eq!(e.observations(), 1, "evidence still folds into the EMAs");
+    }
+
+    #[test]
+    fn converges_to_known_synthetic_noise_scale() {
+        // Synthetic distribution with known tr(Σ)/‖G‖²: microbatch
+        // gradients gᵢ = G + ξᵢ, ξ per-coordinate sd σ/√micro_tokens
+        // (i.e. per-token covariance σ²·I_d). Then tr(Σ) = d·σ² and
+        // B_noise = d·σ²/‖G‖².
+        let (d, sigma, micro_tokens) = (24usize, 0.7f64, 16u64);
+        let g_true: Vec<f64> = (0..d).map(|i| 0.05 + 0.01 * i as f64).collect();
+        let g2_true: f64 = g_true.iter().map(|x| x * x).sum();
+        let want = d as f64 * sigma * sigma / g2_true;
+
+        let mut rng = Rng::for_key(0xB0A7, 7);
+        let mut e = GnsEstimator::new(0.98);
+        let (world, per_worker) = (8usize, 4u64);
+        for _ in 0..600 {
+            let mut global = vec![0.0f64; d];
+            let mut sqnorms = Vec::with_capacity(world);
+            let micro = vec![per_worker; world];
+            for _ in 0..world {
+                let mut sum = vec![0.0f64; d];
+                for _ in 0..per_worker {
+                    for (k, s) in sum.iter_mut().enumerate() {
+                        *s += g_true[k] + rng.normal() * sigma / (micro_tokens as f64).sqrt();
+                    }
+                }
+                sqnorms.push(sum.iter().map(|x| x * x).sum::<f64>());
+                for (gl, s) in global.iter_mut().zip(&sum) {
+                    *gl += s;
+                }
+            }
+            let n_total = (world as u64 * per_worker) as f64;
+            let global_sqnorm =
+                global.iter().map(|x| (x / n_total) * (x / n_total)).sum::<f64>();
+            e.observe(&sqnorms, &micro, micro_tokens, global_sqnorm);
+        }
+        let got = e.gns().expect("estimator must converge to a positive GNS");
+        assert!(
+            (got / want - 1.0).abs() < 0.3,
+            "smoothed GNS {got:.4} should approach true {want:.4}"
+        );
+    }
+
+    #[test]
+    fn ema_zero_tracks_the_last_observation() {
+        let mut e = GnsEstimator::new(0.0);
+        e.observe(&[1.0, 9.0], &[1, 1], 1, 4.0);
+        let first = e.gns().unwrap();
+        e.observe(&[4.0, 16.0], &[1, 1], 1, 9.0); // grads 2 and 4
+        let second = e.gns().unwrap();
+        assert!((first - 2.0 / 3.0).abs() < 1e-12);
+        // grads 2,4: var = 2, ‖G‖² = 9 − 1 = 8 ⇒ 0.25
+        assert!((second - 0.25).abs() < 1e-12, "{second}");
+    }
+}

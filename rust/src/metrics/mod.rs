@@ -1,8 +1,11 @@
-//! Metrics: per-step training records, CSV/JSON sinks, FLOPs accounting
-//! and the wall-clock model that renders the paper's "serial runtime" axis.
+//! Metrics: per-step training records, CSV/JSON sinks, FLOPs accounting,
+//! the online gradient-noise-scale estimator ([`GnsEstimator`]) and the
+//! wall-clock model that renders the paper's "serial runtime" axis.
 
+mod gns;
 mod wallclock;
 
+pub use gns::GnsEstimator;
 pub use wallclock::WallClockModel;
 
 use std::io::Write;
@@ -11,10 +14,13 @@ use std::path::Path;
 /// One optimizer step's log line — the columns behind every figure.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StepRecord {
+    /// 1-based optimizer step index.
     pub step: u64,
     /// Tokens consumed *before* this step.
     pub tokens: u64,
+    /// Learning rate this step ran at.
     pub lr: f64,
+    /// Global batch size this step ran at, in tokens.
     pub batch_tokens: u64,
     /// Training cross-entropy (averaged over the step's microbatches).
     pub ce: f64,
@@ -30,6 +36,16 @@ pub struct StepRecord {
     /// Allreduce payload bytes this step's collective moved (0 when
     /// `world_size == 1`).
     pub comm_bytes: u64,
+    /// Raw per-step gradient-noise-scale estimate `tr(Σ)/‖G‖²` in tokens
+    /// (`None` when undefined — one worker, or noise swamping the signal).
+    pub gns: Option<f64>,
+    /// EMA-smoothed GNS — the critical-batch proxy the adaptive
+    /// controller compares against `batch_tokens`.
+    pub b_crit: Option<f64>,
+    /// Number of schedule cuts that fired entering this step (0 on most
+    /// steps; can exceed 1 when a zero-hysteresis adaptive controller
+    /// catches up several levels in one query).
+    pub cuts: u32,
     /// Validation CE if evaluated at this step.
     pub val_ce: Option<f64>,
 }
@@ -37,37 +53,51 @@ pub struct StepRecord {
 /// An entire run's log plus its identity (schedule, scale, lr …).
 #[derive(Debug, Clone, Default)]
 pub struct RunLog {
+    /// Run identity tag (first CSV column).
     pub name: String,
+    /// One record per optimizer step, in step order.
     pub records: Vec<StepRecord>,
 }
 
 impl RunLog {
+    /// Empty log tagged `name`.
     pub fn new(name: impl Into<String>) -> Self {
         Self { name: name.into(), records: Vec::new() }
     }
 
+    /// Append one step record.
     pub fn push(&mut self, r: StepRecord) {
         self.records.push(r);
     }
 
+    /// Last recorded validation CE, if any step was evaluated.
     pub fn final_val_ce(&self) -> Option<f64> {
         self.records.iter().rev().find_map(|r| r.val_ce)
     }
 
+    /// Training CE of the final step.
     pub fn final_train_ce(&self) -> Option<f64> {
         self.records.last().map(|r| r.ce)
     }
 
+    /// Number of serial optimizer steps.
     pub fn total_steps(&self) -> u64 {
         self.records.len() as u64
     }
 
+    /// Tokens consumed by the whole run.
     pub fn total_tokens(&self) -> u64 {
         self.records.last().map(|r| r.tokens + r.batch_tokens).unwrap_or(0)
     }
 
+    /// Modeled serial wall-clock of the whole run, seconds.
     pub fn total_serial_time(&self) -> f64 {
         self.records.last().map(|r| r.serial_time).unwrap_or(0.0)
+    }
+
+    /// Total schedule cuts that fired during the run.
+    pub fn cut_count(&self) -> u64 {
+        self.records.iter().map(|r| r.cuts as u64).sum()
     }
 
     /// Write the standard CSV the experiment harnesses consume.
@@ -76,30 +106,38 @@ impl RunLog {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        writeln!(
-            f,
-            "run,step,tokens,lr,batch_tokens,ce,zloss,gnorm_sq,flops,serial_time,comm_bytes,val_ce"
-        )?;
+        writeln!(f, "{CSV_HEADER}")?;
         for r in &self.records {
-            writeln!(
-                f,
-                "{},{},{},{:.6e},{},{:.6},{:.6},{:.6e},{:.6e},{:.6},{},{}",
-                self.name,
-                r.step,
-                r.tokens,
-                r.lr,
-                r.batch_tokens,
-                r.ce,
-                r.zloss,
-                r.gnorm_sq,
-                r.flops,
-                r.serial_time,
-                r.comm_bytes,
-                r.val_ce.map(|v| format!("{v:.6}")).unwrap_or_default()
-            )?;
+            write_csv_row(&mut f, &self.name, r)?;
         }
         f.flush()
     }
+}
+
+/// Column header of the per-step run CSV.
+pub const CSV_HEADER: &str =
+    "run,step,tokens,lr,batch_tokens,ce,zloss,gnorm_sq,flops,serial_time,comm_bytes,gns,b_crit,cuts,val_ce";
+
+fn write_csv_row(f: &mut impl Write, run: &str, r: &StepRecord) -> std::io::Result<()> {
+    writeln!(
+        f,
+        "{},{},{},{:.6e},{},{:.6},{:.6},{:.6e},{:.6e},{:.6},{},{},{},{},{}",
+        run,
+        r.step,
+        r.tokens,
+        r.lr,
+        r.batch_tokens,
+        r.ce,
+        r.zloss,
+        r.gnorm_sq,
+        r.flops,
+        r.serial_time,
+        r.comm_bytes,
+        r.gns.map(|v| format!("{v:.3}")).unwrap_or_default(),
+        r.b_crit.map(|v| format!("{v:.3}")).unwrap_or_default(),
+        if r.cuts > 0 { r.cuts.to_string() } else { String::new() },
+        r.val_ce.map(|v| format!("{v:.6}")).unwrap_or_default()
+    )
 }
 
 /// Append several runs into one long-format CSV (figure-friendly).
@@ -108,28 +146,10 @@ pub fn write_runs_csv(runs: &[RunLog], path: impl AsRef<Path>) -> std::io::Resul
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
-    writeln!(
-        f,
-        "run,step,tokens,lr,batch_tokens,ce,zloss,gnorm_sq,flops,serial_time,comm_bytes,val_ce"
-    )?;
+    writeln!(f, "{CSV_HEADER}")?;
     for run in runs {
         for r in &run.records {
-            writeln!(
-                f,
-                "{},{},{},{:.6e},{},{:.6},{:.6},{:.6e},{:.6e},{:.6},{},{}",
-                run.name,
-                r.step,
-                r.tokens,
-                r.lr,
-                r.batch_tokens,
-                r.ce,
-                r.zloss,
-                r.gnorm_sq,
-                r.flops,
-                r.serial_time,
-                r.comm_bytes,
-                r.val_ce.map(|v| format!("{v:.6}")).unwrap_or_default()
-            )?;
+            write_csv_row(&mut f, &run.name, r)?;
         }
     }
     f.flush()
@@ -173,6 +193,9 @@ mod tests {
             flops: 1e9,
             serial_time: step as f64,
             comm_bytes: 4096,
+            gns: (step % 2 == 1).then_some(1234.5),
+            b_crit: (step % 2 == 1).then_some(2345.6),
+            cuts: if step == 2 { 2 } else { 0 },
             val_ce: val,
         }
     }
@@ -187,6 +210,7 @@ mod tests {
         assert_eq!(log.total_steps(), 3);
         assert_eq!(log.total_tokens(), 300);
         assert_eq!(log.total_serial_time(), 2.0);
+        assert_eq!(log.cut_count(), 2, "multi-cut steps count every cut");
     }
 
     #[test]
@@ -200,7 +224,10 @@ mod tests {
         let lines: Vec<_> = text.lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("run,step,"));
+        assert!(lines[0].ends_with(",gns,b_crit,cuts,val_ce"));
         assert!(lines[1].starts_with("x,0,"));
         assert!(lines[1].ends_with("1.000000"));
+        // step 0: no GNS estimate, no cut — empty cells stay empty
+        assert!(lines[1].contains(",,,,"), "gns/b_crit/cut cells empty: {}", lines[1]);
     }
 }

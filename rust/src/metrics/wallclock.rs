@@ -9,6 +9,8 @@
 //! capacity serialize into multiple waves (the regime where ramping stops
 //! helping — the guard Figure 3 probes from the optimization side).
 
+/// The modeled cluster: device count/capacity, per-step latency and
+/// interconnect bandwidth (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct WallClockModel {
     /// Number of data-parallel devices in the modeled cluster.

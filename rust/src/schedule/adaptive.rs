@@ -1,0 +1,321 @@
+//! Adaptive Seesaw: the GNS-driven cut controller.
+//!
+//! The fixed Seesaw staircase (Algorithm 1) cuts at token counts
+//! precomputed from a cosine baseline. Its own premise — keep the batch at
+//! the *critical* batch size — says the cut points should instead follow
+//! the **measured** gradient-noise scale `B_noise = tr(Σ)/‖G‖²` (the
+//! largest batch that still yields near-linear speedup; McCandlish et al.
+//! 2018, and the adaptive-batch-size lines of Lau et al. 2024 / Zhou et
+//! al. 2025). [`AdaptiveSeesaw`] is that controller:
+//!
+//! * it receives the smoothed GNS through [`Schedule::observe_gns`]
+//!   (estimated for free from the step engine's per-worker gradient
+//!   shards, see [`crate::metrics::GnsEstimator`]);
+//! * whenever the smoothed GNS reaches the **next** batch size
+//!   `B₀·βᵏ⁺¹` it fires one Seesaw cut `(η ← η/α, B ← B·β)` — growing to
+//!   `B·β` only once the critical batch supports it keeps `B ≤ B_noise`
+//!   throughout, the "train at CBS" premise;
+//! * every cut stays on the Corollary 1 equivalence line (`α·√β` is
+//!   constant across phases by construction) and the constructor enforces
+//!   the Lemma 4 stability guard `α ≥ √β` — the controller cannot be
+//!   configured into the divergent region;
+//! * a `hysteresis_tokens` floor spaces consecutive cuts (a noisy GNS
+//!   estimate crossing the threshold repeatedly cannot ramp the batch
+//!   faster than one cut per hysteresis window). With hysteresis `0`, a
+//!   single query may fire several cuts back to back — exactly what makes
+//!   the controller reproduce a fixed staircase under an oracle whose GNS
+//!   jumps multiple levels between queries.
+//!
+//! **Equivalence contract** (pinned by property tests and
+//! `examples/adaptive_seesaw.rs`): driven by the constant-noise oracle
+//! [`constant_noise_oracle`] with hysteresis disabled, the controller's
+//! `(lr, batch)` trajectory is *bit-identical* to the fixed
+//! [`super::SeesawBuilder::seesaw`] staircase built from the same
+//! `(base_lr, base_batch, warmup, total, a, max_cuts)` — the adaptive
+//! subsystem strictly generalizes the paper's Algorithm 1.
+
+use super::{assemble_point, stability, warmup_factor, Schedule, SchedulePoint, StabilityVerdict};
+use anyhow::{ensure, Result};
+
+/// GNS-driven Seesaw controller. See the module docs for the control law.
+#[derive(Debug, Clone)]
+pub struct AdaptiveSeesaw {
+    /// Peak learning rate (reached at the end of warmup).
+    pub base_lr: f64,
+    /// Batch size before any cut, in tokens.
+    pub base_batch: u64,
+    /// Linear-warmup horizon in tokens; no cut fires during warmup.
+    pub warmup_tokens: u64,
+    /// Total training budget in tokens.
+    pub total_tokens: u64,
+    /// Minimum tokens between consecutive cuts (0 disables hysteresis).
+    pub hysteresis_tokens: u64,
+    /// Clamp for ramped batch sizes (device-memory guard), in tokens.
+    pub max_batch_tokens: u64,
+    /// Cap on the number of cuts.
+    pub max_cuts: usize,
+    /// Per-cut lr divisor `α` (Seesaw: `√a`). Guarded `α ≥ √β`.
+    alpha: f64,
+    /// Per-cut batch multiplier `β` (Seesaw: `a`).
+    beta: f64,
+    /// Cuts fired so far.
+    phase: usize,
+    /// Token count at which the last cut fired (`None` before the first).
+    last_cut_tokens: Option<u64>,
+    /// Latest smoothed GNS fed through `observe_gns`, in tokens.
+    latest_gns: Option<f64>,
+}
+
+impl AdaptiveSeesaw {
+    /// Seesaw controller on an underlying step factor `a > 1`:
+    /// `(α, β) = (√a, a)` — the critical point of the Lemma 4 guard.
+    pub fn new(base_lr: f64, base_batch: u64, warmup_tokens: u64, total_tokens: u64, a: f64) -> Self {
+        assert!(a > 1.0, "step factor must exceed 1");
+        Self::with_factors(base_lr, base_batch, warmup_tokens, total_tokens, a.sqrt(), a)
+            .expect("(√a, a) is always Lemma-4 stable")
+    }
+
+    /// General `(α, β)` member of the cut family. Returns an error when
+    /// the pair violates the Lemma 4 stability guard `α ≥ √β` (the NSGD
+    /// effective lr `η·(√β/α)ᵏ` would grow geometrically and diverge).
+    pub fn with_factors(
+        base_lr: f64,
+        base_batch: u64,
+        warmup_tokens: u64,
+        total_tokens: u64,
+        alpha: f64,
+        beta: f64,
+    ) -> Result<Self> {
+        ensure!(beta >= 1.0, "batch multiplier β must be ≥ 1 (got {beta})");
+        ensure!(alpha >= 1.0, "lr divisor α must be ≥ 1 (got {alpha})");
+        ensure!(
+            stability(alpha, beta) != StabilityVerdict::Divergent,
+            "Lemma 4 guard: α ≥ √β required for stability (got α={alpha}, β={beta}, √β={})",
+            beta.sqrt()
+        );
+        Ok(Self {
+            base_lr,
+            base_batch,
+            warmup_tokens,
+            total_tokens,
+            hysteresis_tokens: 0,
+            max_batch_tokens: u64::MAX,
+            max_cuts: 64,
+            alpha,
+            beta,
+            phase: 0,
+            last_cut_tokens: None,
+            latest_gns: None,
+        })
+    }
+
+    /// Set the minimum token distance between consecutive cuts.
+    pub fn hysteresis(mut self, tokens: u64) -> Self {
+        self.hysteresis_tokens = tokens;
+        self
+    }
+
+    /// Clamp ramped batch sizes to `tokens` (device-memory guard).
+    pub fn max_batch(mut self, tokens: u64) -> Self {
+        self.max_batch_tokens = tokens;
+        self
+    }
+
+    /// Cap the number of cuts.
+    pub fn max_cuts(mut self, n: usize) -> Self {
+        self.max_cuts = n;
+        self
+    }
+
+    /// Per-cut lr divisor `α`.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Per-cut batch multiplier `β`.
+    pub fn beta(&self) -> f64 {
+        self.beta
+    }
+
+    /// Cuts fired so far.
+    pub fn cuts_fired(&self) -> usize {
+        self.phase
+    }
+
+    /// The GNS threshold that arms the next cut: the *unrounded* post-cut
+    /// batch `B₀·βᵏ⁺¹` in tokens. Comparing against the unrounded ramp
+    /// (not the rounded `batch_tokens`) keeps the threshold ladder exactly
+    /// geometric, which is what makes the oracle-equivalence contract
+    /// bit-exact.
+    pub fn next_cut_threshold(&self) -> f64 {
+        self.base_batch as f64 * self.beta.powi((self.phase + 1) as i32)
+    }
+
+    /// Fire as many cuts as the latest smoothed GNS supports at `tokens`.
+    /// With hysteresis enabled at most one cut fires per call (the second
+    /// iteration sees a zero-token gap and stops).
+    fn try_cut(&mut self, tokens: u64) {
+        let Some(gns) = self.latest_gns else { return };
+        while self.phase < self.max_cuts && gns >= self.next_cut_threshold() {
+            if let Some(last) = self.last_cut_tokens {
+                if self.hysteresis_tokens > 0 && tokens.saturating_sub(last) < self.hysteresis_tokens
+                {
+                    break;
+                }
+            }
+            self.phase += 1;
+            self.last_cut_tokens = Some(tokens);
+        }
+    }
+}
+
+impl Schedule for AdaptiveSeesaw {
+    fn query(&mut self, tokens: u64) -> SchedulePoint {
+        if tokens >= self.warmup_tokens {
+            self.try_cut(tokens);
+        }
+        let warm = warmup_factor(self.warmup_tokens, tokens);
+        let k = self.phase;
+        // identical arithmetic to JointSchedule's BatchRamp arm — the
+        // bit-exactness half of the oracle-equivalence contract.
+        let decay = self.alpha.powi(-(k as i32));
+        let batch_mult = self.beta.powi(k as i32);
+        assemble_point(self.base_lr, self.base_batch, self.max_batch_tokens, warm, decay, batch_mult, k)
+    }
+
+    fn observe_gns(&mut self, _tokens: u64, gns_tokens: f64) {
+        if gns_tokens.is_finite() && gns_tokens > 0.0 {
+            self.latest_gns = Some(gns_tokens);
+        }
+    }
+
+    fn total_tokens(&self) -> u64 {
+        self.total_tokens
+    }
+
+    /// Cut history is controller state, not a function of the token count,
+    /// and is not checkpointed — resuming would silently restart the ramp.
+    fn supports_resume(&self) -> bool {
+        false
+    }
+}
+
+/// The constant-noise oracle: the GNS trajectory implied by a *constant*
+/// per-token gradient-noise covariance under the cosine baseline.
+///
+/// With `tr(Σ)` constant and `‖G‖²` tracking the cosine decay (the NSGD
+/// picture of §3), `B_noise = tr(Σ)/‖G‖²` crosses `B₀·aᵏ` exactly where
+/// the cosine crosses `a⁻ᵏ` — i.e. at [`super::cosine_cut_tokens`]. This
+/// oracle samples that trajectory at the same rounded cut tokens the fixed
+/// staircase is built from: `gns(t) = B₀·a^(#cuts ≤ t)`, computed with the
+/// same `powi` ladder as [`AdaptiveSeesaw::next_cut_threshold`], so the
+/// controller's threshold comparisons are exact at every level.
+///
+/// Used by the equivalence property test and `examples/adaptive_seesaw.rs`
+/// to show the adaptive controller degrades gracefully to Algorithm 1.
+pub fn constant_noise_oracle(base_batch: u64, a: f64, cuts: Vec<u64>) -> impl Fn(u64) -> f64 {
+    move |tokens: u64| {
+        let k = cuts.iter().take_while(|&&c| c <= tokens).count();
+        base_batch as f64 * a.powi(k as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::SeesawBuilder;
+
+    fn controller(a: f64) -> AdaptiveSeesaw {
+        AdaptiveSeesaw::new(3e-3, 4096, 100_000, 1_000_000, a)
+    }
+
+    #[test]
+    fn lemma4_guard_rejects_divergent_factors() {
+        // α < √β diverges (Lemma 4) — construction must fail.
+        assert!(AdaptiveSeesaw::with_factors(1e-2, 1024, 0, 100_000, 1.0, 4.0).is_err());
+        assert!(AdaptiveSeesaw::with_factors(1e-2, 1024, 0, 100_000, 1.2, 2.0).is_err());
+        // α ≥ √β is accepted (critical and conservative members).
+        assert!(AdaptiveSeesaw::with_factors(1e-2, 1024, 0, 100_000, 2f64.sqrt(), 2.0).is_ok());
+        assert!(AdaptiveSeesaw::with_factors(1e-2, 1024, 0, 100_000, 2.0, 1.0).is_ok());
+    }
+
+    #[test]
+    fn no_cut_without_gns_or_during_warmup() {
+        let mut c = controller(2.0);
+        assert_eq!(c.query(0).phase, 0);
+        assert_eq!(c.query(500_000).phase, 0, "no GNS observed yet");
+        // a one-level GNS crossing during warmup must not cut
+        c.observe_gns(50_000, 8192.0);
+        assert_eq!(c.query(50_000).phase, 0, "warmup gates cuts");
+        // …but does cut once past warmup
+        assert_eq!(c.query(100_000).phase, 1);
+    }
+
+    #[test]
+    fn cut_fires_when_gns_crosses_next_batch() {
+        let mut c = controller(2.0);
+        c.observe_gns(150_000, 4096.0 * 2.0 - 1.0); // just below B₀·β
+        assert_eq!(c.query(150_000).phase, 0);
+        c.observe_gns(160_000, 4096.0 * 2.0); // exactly the threshold
+        let p = c.query(160_000);
+        assert_eq!(p.phase, 1);
+        assert_eq!(p.batch_tokens, 8192);
+        assert!((p.lr - 3e-3 / 2f64.sqrt()).abs() < 1e-12);
+        // effective lr stays on the equivalence line: lr·√B constant
+        let before = 3e-3 * (4096f64).sqrt();
+        let after = p.lr * (p.batch_tokens as f64).sqrt();
+        assert!((after / before - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hysteresis_spaces_cuts() {
+        let mut c = controller(2.0).hysteresis(50_000);
+        c.observe_gns(150_000, 1e9); // GNS far beyond every level
+        assert_eq!(c.query(150_000).phase, 1, "one cut per hysteresis window");
+        assert_eq!(c.query(160_000).phase, 1, "inside the window: no cut");
+        assert_eq!(c.query(200_000).phase, 2, "window elapsed: next cut");
+    }
+
+    #[test]
+    fn zero_hysteresis_allows_multi_cut_catchup() {
+        let mut c = controller(2.0);
+        c.observe_gns(150_000, 4096.0 * 8.0); // three levels up
+        let p = c.query(150_000);
+        assert_eq!(p.phase, 3, "GNS three levels up fires three cuts");
+        assert_eq!(p.batch_tokens, 4096 * 8);
+    }
+
+    #[test]
+    fn max_cuts_and_max_batch_cap_the_ramp() {
+        let mut c = controller(2.0).max_cuts(2).max_batch(10_000);
+        c.observe_gns(150_000, 1e12);
+        let p = c.query(150_000);
+        assert_eq!(p.phase, 2);
+        assert_eq!(p.batch_tokens, 10_000, "batch clamped");
+    }
+
+    #[test]
+    fn constant_noise_oracle_reproduces_fixed_staircase() {
+        // the acceptance-criteria contract, at unit-test scale: drive the
+        // controller with the constant-noise oracle through the planner
+        // loop and compare bit-for-bit against the fixed staircase.
+        for a in [1.5f64, 2.0] {
+            let b = SeesawBuilder::new(3e-3, 4096, 800_000, a).max_cuts(16);
+            let mut fixed = b.seesaw();
+            let mut adaptive =
+                AdaptiveSeesaw::new(3e-3, 4096, b.warmup_tokens, 800_000, a).max_cuts(16);
+            let oracle = constant_noise_oracle(4096, a, b.cut_tokens());
+            let mut tokens = 0u64;
+            adaptive.observe_gns(0, oracle(0));
+            while tokens < 800_000 {
+                let pf = Schedule::query(&mut fixed, tokens);
+                let pa = adaptive.query(tokens);
+                assert_eq!(pf.lr.to_bits(), pa.lr.to_bits(), "lr at {tokens} (a={a})");
+                assert_eq!(pf.batch_tokens, pa.batch_tokens, "batch at {tokens} (a={a})");
+                assert_eq!(pf.phase, pa.phase, "phase at {tokens} (a={a})");
+                tokens += pf.batch_tokens;
+                adaptive.observe_gns(tokens, oracle(tokens));
+            }
+        }
+    }
+}

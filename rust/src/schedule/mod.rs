@@ -3,8 +3,10 @@
 //! All schedules are functions of **tokens processed** (not steps): batch
 //! ramps change the tokens-per-step, so tokens are the invariant clock the
 //! paper compares schedules on ("each phase processes the same number of
-//! data points", Theorem 1). The coordinator queries
-//! [`JointSchedule::at(tokens)`] before every optimizer step.
+//! data points", Theorem 1). The coordinator queries the [`Schedule`]
+//! trait before every optimizer step and (optionally) feeds the measured
+//! gradient-noise scale back after it — fixed schedules ignore the
+//! feedback, the [`adaptive::AdaptiveSeesaw`] controller acts on it.
 //!
 //! Provided kinds:
 //! * [`ScheduleKind::CosineContinuous`] — the paper's baseline,
@@ -20,9 +22,14 @@
 //!   `η(τ) = η₀·√cos(πτ/2)`, `B(τ) = B₀/cos(πτ/2)`, whose serial step
 //!   count integrates to `(2/π)·T_steps` (≈36.3% fewer steps).
 //! * [`ScheduleKind::Constant`] — fixed lr and batch.
+//! * [`adaptive::AdaptiveSeesaw`] — not a token lookup table at all: a
+//!   stateful controller that fires the same `(η/√a, B·a)` cut whenever
+//!   the *measured* gradient-noise scale crosses the next batch size.
 
+pub mod adaptive;
 pub mod seesaw;
 
+pub use adaptive::AdaptiveSeesaw;
 pub use seesaw::{stability, table2_grid, SeesawBuilder, StabilityVerdict};
 
 use std::f64::consts::PI;
@@ -38,10 +45,77 @@ pub struct SchedulePoint {
     pub phase: usize,
 }
 
+/// A joint LR/batch-size schedule as the coordinator consumes it: queried
+/// once before every optimizer step, optionally fed the measured
+/// gradient-noise scale after the step.
+///
+/// Token-indexed lookup tables ([`JointSchedule`]) implement `query` as a
+/// pure function of `tokens`; the adaptive controller
+/// ([`adaptive::AdaptiveSeesaw`]) keeps cut state and advances it inside
+/// `query`. The coordinator always queries with non-decreasing `tokens`.
+pub trait Schedule: Send {
+    /// Schedule value for the optimizer step starting at `tokens`.
+    /// Stateful implementations may fire cuts here.
+    fn query(&mut self, tokens: u64) -> SchedulePoint;
+
+    /// Feed the smoothed gradient-noise scale `B_noise = tr(Σ)/‖G‖²`
+    /// (in tokens, comparable to `batch_tokens`) measured for the step
+    /// that *ended* at `tokens`. Fixed schedules ignore it.
+    fn observe_gns(&mut self, tokens: u64, gns_tokens: f64) {
+        let _ = (tokens, gns_tokens);
+    }
+
+    /// Total training budget in tokens.
+    fn total_tokens(&self) -> u64;
+
+    /// Whether a checkpointed run may resume under this schedule. Fixed
+    /// schedules are pure functions of the token count and resume freely;
+    /// stateful controllers whose cut history is not checkpointed must
+    /// return `false` (the coordinator refuses the resume with a clear
+    /// error instead of silently diverging).
+    fn supports_resume(&self) -> bool {
+        true
+    }
+}
+
+/// Linear-warmup multiplier in `(0, 1]`: ramps over `warmup_tokens` (never
+/// exactly 0 at token 0), 1.0 from the end of warmup on.
+///
+/// Shared by [`JointSchedule::at`] and [`adaptive::AdaptiveSeesaw`] so the
+/// two compute bit-identical learning rates during warmup.
+pub fn warmup_factor(warmup_tokens: u64, tokens: u64) -> f64 {
+    if warmup_tokens > 0 && tokens < warmup_tokens {
+        ((tokens + 1) as f64 / warmup_tokens as f64).min(1.0)
+    } else {
+        1.0
+    }
+}
+
+/// Assemble a [`SchedulePoint`] from the warmup/decay/batch multipliers —
+/// the single place the lr product and the batch rounding/clamping happen,
+/// so every schedule implementation quantizes identically (bit-exactness
+/// across the fixed/adaptive refactor rests on this).
+pub fn assemble_point(
+    base_lr: f64,
+    base_batch: u64,
+    max_batch_tokens: u64,
+    warm: f64,
+    decay: f64,
+    batch_mult: f64,
+    phase: usize,
+) -> SchedulePoint {
+    let batch = ((base_batch as f64 * batch_mult).round() as u64)
+        .min(max_batch_tokens)
+        .max(1);
+    SchedulePoint { lr: base_lr * warm * decay, batch_tokens: batch, phase }
+}
+
 /// The schedule family. See module docs.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ScheduleKind {
+    /// Fixed lr and batch for the whole run.
     Constant,
+    /// The paper's cosine baseline: `η(τ) = η₀·cos(πτ/2)` after warmup.
     CosineContinuous,
     /// lr cuts by `alpha` at each token count in `cuts`; batch fixed.
     StepDecay { alpha: f64, cuts: Vec<u64> },
@@ -69,6 +143,7 @@ pub struct JointSchedule {
 }
 
 impl JointSchedule {
+    /// Build a schedule with an explicit warmup horizon (no batch clamp).
     pub fn new(
         base_lr: f64,
         base_batch: u64,
@@ -91,6 +166,7 @@ impl JointSchedule {
         Self::new(base_lr, base_batch, total_tokens / 10, total_tokens, kind)
     }
 
+    /// Clamp ramped batch sizes to `tokens` (device-memory guard).
     pub fn max_batch(mut self, tokens: u64) -> Self {
         self.max_batch_tokens = tokens;
         self
@@ -110,12 +186,7 @@ impl JointSchedule {
 
     /// Schedule value at a token count.
     pub fn at(&self, tokens: u64) -> SchedulePoint {
-        let warm = if self.warmup_tokens > 0 && tokens < self.warmup_tokens {
-            // linear warmup, never exactly 0 at token 0
-            ((tokens + 1) as f64 / self.warmup_tokens as f64).min(1.0)
-        } else {
-            1.0
-        };
+        let warm = warmup_factor(self.warmup_tokens, tokens);
         let (decay, batch_mult, phase): (f64, f64, usize) = match &self.kind {
             ScheduleKind::Constant => (1.0, 1.0, 0),
             ScheduleKind::CosineContinuous => {
@@ -136,10 +207,7 @@ impl JointSchedule {
                 (c.sqrt(), 1.0 / c, 0)
             }
         };
-        let batch = ((self.base_batch as f64 * batch_mult).round() as u64)
-            .min(self.max_batch_tokens)
-            .max(1);
-        SchedulePoint { lr: self.base_lr * warm * decay, batch_tokens: batch, phase }
+        assemble_point(self.base_lr, self.base_batch, self.max_batch_tokens, warm, decay, batch_mult, phase)
     }
 
     /// Count serial optimizer steps over the whole budget (quantized to
@@ -163,6 +231,16 @@ impl JointSchedule {
             tokens += self.at(tokens).batch_tokens;
         }
         tokens
+    }
+}
+
+impl Schedule for JointSchedule {
+    fn query(&mut self, tokens: u64) -> SchedulePoint {
+        JointSchedule::at(self, tokens)
+    }
+
+    fn total_tokens(&self) -> u64 {
+        self.total_tokens
     }
 }
 

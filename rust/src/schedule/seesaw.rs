@@ -14,9 +14,13 @@ use super::{cosine_cut_tokens, JointSchedule, ScheduleKind};
 /// underlying (baseline) decay.
 #[derive(Debug, Clone)]
 pub struct SeesawBuilder {
+    /// Peak learning rate (reached at the end of warmup).
     pub base_lr: f64,
+    /// Batch size before any ramp, in tokens.
     pub base_batch: u64,
+    /// Linear-warmup horizon in tokens (default: 10% of the budget).
     pub warmup_tokens: u64,
+    /// Total training budget in tokens.
     pub total_tokens: u64,
     /// Step factor `a` of the underlying decay staircase (§4: a=1.1 for the
     /// headline runs; §4.1 uses a=2 for the equivalence-line study).
@@ -27,6 +31,7 @@ pub struct SeesawBuilder {
 }
 
 impl SeesawBuilder {
+    /// Builder with the paper's default warmup (10% of the budget).
     pub fn new(base_lr: f64, base_batch: u64, total_tokens: u64, alpha: f64) -> Self {
         Self {
             base_lr,
@@ -38,11 +43,13 @@ impl SeesawBuilder {
         }
     }
 
+    /// Override the warmup horizon.
     pub fn warmup(mut self, tokens: u64) -> Self {
         self.warmup_tokens = tokens;
         self
     }
 
+    /// Override the cut cap.
     pub fn max_cuts(mut self, n: usize) -> Self {
         self.max_cuts = n;
         self

@@ -8,9 +8,13 @@ use seesaw::collective::{
 use seesaw::config::ExecSpec;
 use seesaw::coordinator::{Checkpoint, GradSource, Microbatch, MicroStats, StepEngine};
 use seesaw::data::{Corpus, Loader};
+use seesaw::experiments::adaptive_exps;
 use seesaw::linreg::recursion::Problem;
 use seesaw::linreg::spectrum::Spectrum;
-use seesaw::schedule::{cosine_cut_tokens, JointSchedule, ScheduleKind, SeesawBuilder};
+use seesaw::metrics::GnsEstimator;
+use seesaw::schedule::{
+    cosine_cut_tokens, AdaptiveSeesaw, JointSchedule, Schedule, ScheduleKind, SeesawBuilder,
+};
 use seesaw::util::json::Value;
 use seesaw::util::prop::check;
 use seesaw::util::TempDir;
@@ -185,6 +189,115 @@ fn prop_step_engine_trajectory_invariant_under_threads() {
                 "mean grad must be bit-identical (threads {threads} world {world} {kind:?})"
             );
         }
+    });
+}
+
+#[test]
+fn prop_gns_smoothed_estimate_stays_inside_raw_envelope() {
+    // the EMA-of-components design: gns() is a ratio of positive convex
+    // combinations, so (mediant inequality) it must lie inside the
+    // [min, max] envelope of the per-step raw estimates whenever every
+    // step produced a positive raw estimate.
+    check("gns mediant envelope", 48, |g| {
+        let world = 2 + g.usize_in(0, 5);
+        let micro_tokens = 1 + g.u64(64);
+        let per_worker = 1 + g.u64(4);
+        let mut e = GnsEstimator::new(g.f64_in(0.0, 0.999));
+        let mut raws = Vec::new();
+        for _ in 0..(3 + g.u64(20)) {
+            // random per-worker "sum" gradients over a random dimension
+            let d = 1 + g.usize_in(0, 12);
+            let sums: Vec<Vec<f64>> =
+                (0..world).map(|_| (0..d).map(|_| g.normal() * 2.0 + 0.5).collect()).collect();
+            let sqnorms: Vec<f64> =
+                sums.iter().map(|s| s.iter().map(|x| x * x).sum()).collect();
+            let micro = vec![per_worker; world];
+            let n_total = (world as u64 * per_worker) as f64;
+            let global_sqnorm = (0..d)
+                .map(|k| {
+                    let m = sums.iter().map(|s| s[k]).sum::<f64>() / n_total;
+                    m * m
+                })
+                .sum::<f64>();
+            raws.push(e.observe(&sqnorms, &micro, micro_tokens, global_sqnorm));
+        }
+        if raws.iter().all(|r| r.is_some()) {
+            let vals: Vec<f64> = raws.iter().map(|r| r.unwrap()).collect();
+            let lo = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = vals.iter().cloned().fold(0.0f64, f64::max);
+            let s = e.gns().expect("all raws positive ⇒ smoothed defined");
+            assert!(
+                s >= lo * (1.0 - 1e-9) && s <= hi * (1.0 + 1e-9),
+                "smoothed {s} outside raw envelope [{lo}, {hi}]"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_adaptive_controller_never_violates_lemma4() {
+    // 1) construction: any (α, β) with α < √β must be rejected;
+    // 2) dynamics: for accepted pairs driven by arbitrary GNS signals,
+    //    the post-warmup NSGD effective lr η·√B never increases — the
+    //    Lemma 4 stability invariant, independent of what the noisy
+    //    estimator feeds the controller.
+    check("adaptive Lemma-4 invariant", 64, |g| {
+        let beta = 1.0 + g.f64_in(0.0, 3.0);
+        let alpha = 0.8 + g.f64_in(0.0, 3.0);
+        let total = 200_000 + g.u64(400_000);
+        let warmup = total / 10;
+        let ctrl = AdaptiveSeesaw::with_factors(1e-2, 256, warmup, total, alpha, beta);
+        if alpha < beta.sqrt() - 1e-9 {
+            assert!(ctrl.is_err(), "α={alpha} < √β={} must be rejected", beta.sqrt());
+            return;
+        }
+        let Ok(mut ctrl) = ctrl else { return }; // boundary cases may round either way
+        let mut tokens = warmup; // judge only the post-warmup regime
+        let mut last_eff = f64::INFINITY;
+        while tokens < total {
+            let p = ctrl.query(tokens);
+            // unrounded batch: base·βᵏ (rounding would add ±0.5 jitter)
+            let eff = p.lr * (256f64 * beta.powi(p.phase as i32)).sqrt();
+            assert!(
+                eff <= last_eff * (1.0 + 1e-12),
+                "effective lr grew: {eff} after {last_eff} (α={alpha}, β={beta}, phase {})",
+                p.phase
+            );
+            last_eff = eff;
+            tokens = tokens.saturating_add(p.batch_tokens.max(1));
+            // adversarial GNS feed: huge, tiny, or garbage
+            let gns = match g.usize_in(0, 3) {
+                0 => g.f64_in(1.0, 1e9),
+                1 => g.f64_in(0.0, 1e-6),
+                _ => f64::NAN,
+            };
+            ctrl.observe_gns(tokens, gns);
+        }
+    });
+}
+
+#[test]
+fn prop_adaptive_with_constant_noise_oracle_is_the_fixed_staircase() {
+    // the tentpole equivalence contract over random shapes: hysteresis
+    // off + constant-noise oracle ⇒ bit-identical (lr, batch) trajectory
+    // to SeesawBuilder's precomputed Seesaw staircase.
+    check("adaptive ≡ fixed under constant-noise oracle", 32, |g| {
+        let a = [1.1, 1.5, 2.0, 3.0][g.usize_in(0, 4)];
+        let total = 150_000 + g.u64(600_000);
+        let base_batch = 8 * (1 + g.u64(32));
+        let warmup = if g.bool() { total / 10 } else { 0 };
+        let (fixed, adaptive) = adaptive_exps::staircase_equivalence(a, total, base_batch, warmup);
+        assert_eq!(
+            fixed.trajectory.len(),
+            adaptive.trajectory.len(),
+            "step counts differ (a={a}, total={total}, b={base_batch})"
+        );
+        for (i, (f, ad)) in fixed.trajectory.iter().zip(&adaptive.trajectory).enumerate() {
+            assert_eq!(f.0.to_bits(), ad.0.to_bits(), "lr at step {i} (a={a})");
+            assert_eq!(f.1, ad.1, "batch at step {i} (a={a})");
+        }
+        assert_eq!(fixed.cuts, adaptive.cuts);
+        assert_eq!(fixed.final_risk.to_bits(), adaptive.final_risk.to_bits());
     });
 }
 
