@@ -12,12 +12,17 @@
 //! 2. the degradation check — under the constant-noise oracle the
 //!    adaptive controller must retrace `SeesawBuilder`'s staircase
 //!    bit-for-bit;
-//! 3. with `--lm` (after `python python/compile/aot.py` has built the
+//! 3. the preemption check — the controller is snapshotted mid-ramp
+//!    (after its first cut), rebuilt from the checkpoint-v2 state blob,
+//!    and must finish the run bit-identically to the uninterrupted one;
+//! 4. with `--lm` (after `python python/compile/aot.py` has built the
 //!    artifacts), the same ablation through the full three-layer LM stack
 //!    at `world_size = 2`.
 
 use anyhow::Result;
-use seesaw::experiments::adaptive_exps::{ablation, staircase_equivalence, AblationRow};
+use seesaw::experiments::adaptive_exps::{
+    ablation, resume_equivalence, staircase_equivalence, AblationRow,
+};
 use seesaw::experiments::{lm_exps, Scale};
 use seesaw::metrics::print_table;
 use seesaw::util::cli::Args;
@@ -65,6 +70,31 @@ fn main() -> Result<()> {
         fixed.cuts
     );
     anyhow::ensure!(exact, "oracle-driven controller must reproduce Algorithm 1");
+
+    // Preemption contract: kill the controller mid-ramp, resume from its
+    // state blob, finish bit-identically (the checkpoint-v2 guarantee).
+    let (reference, resumed, at) = resume_equivalence(a, total, 16, hysteresis);
+    anyhow::ensure!(
+        reference.cuts >= 1 && at < total,
+        "preemption check never interrupted: no cut fired over {total} tokens \
+         (a={a}, hysteresis={hysteresis}) — the resume comparison would be vacuous"
+    );
+    let resumed_exact = reference.trajectory.len() == resumed.trajectory.len()
+        && reference
+            .trajectory
+            .iter()
+            .zip(&resumed.trajectory)
+            .all(|(r, s)| r.0.to_bits() == s.0.to_bits() && r.1 == s.1)
+        && reference.final_risk.to_bits() == resumed.final_risk.to_bits();
+    println!(
+        "preemption check: run interrupted at {at} tokens (after cut #1), resumed from \
+         the state blob — trajectory + final risk {} the uninterrupted run \
+         ({} steps, {} cuts each)",
+        if resumed_exact { "EXACTLY match" } else { "DIVERGE from" },
+        reference.trajectory.len(),
+        reference.cuts
+    );
+    anyhow::ensure!(resumed_exact, "mid-ramp resume must be bit-exact");
 
     if args.switch("lm") {
         println!("\nSame ablation through the live LM stack (world_size = 2):");

@@ -273,6 +273,34 @@ impl TrainConfig {
         }
     }
 
+    /// Stable identity string of the schedule this config drives over the
+    /// resolved token budget `total` — the schedule kind with its
+    /// parameters (via [`ScheduleSpec::label`]) plus every config knob
+    /// that shapes the `(lr, batch)` trajectory. That includes the GNS
+    /// feedback path feeding adaptive cuts: `world_size` (shard
+    /// partitioning changes the estimator's small-batch signal) and the
+    /// collective (its reduction order sets the mean-gradient bits behind
+    /// `‖G‖²`). `worker_threads` and `pin_order` are deliberately
+    /// excluded — threads are bit-identical by the engine contract, and
+    /// stat-reduction order never feeds back into the schedule. Floats
+    /// are rendered as their IEEE-754 bit patterns so the string (and its
+    /// FNV hash, [`crate::coordinator::fnv1a64`], stored in every v2
+    /// checkpoint) is exact: a resume restores controller state only into
+    /// a bit-identically-configured schedule.
+    pub fn schedule_identity(&self, total: u64) -> String {
+        format!(
+            "{}|lr={:016x}|b={}|wf={:016x}|T={}|mc={}|w={}|coll={}",
+            self.schedule.label(),
+            self.base_lr.to_bits(),
+            self.base_batch_tokens,
+            self.warmup_frac.to_bits(),
+            total,
+            self.max_cuts,
+            self.world_size,
+            self.exec.collective.name()
+        )
+    }
+
     /// EMA retention for the gradient-noise-scale estimator: the adaptive
     /// spec's `ema`, or a 0.9 default for fixed schedules (whose runs
     /// still log `gns`/`b_crit` as diagnostics).
@@ -467,7 +495,10 @@ mod tests {
         assert_eq!(c.gns_ema(), 0.95);
         let mut dyn_sched = c.build_dyn_schedule(1_000_000);
         assert_eq!(dyn_sched.total_tokens(), 1_000_000);
-        assert!(!dyn_sched.supports_resume(), "adaptive state is not checkpointed");
+        assert!(
+            !dyn_sched.state_save().is_empty(),
+            "the adaptive controller checkpoints its state"
+        );
         // no GNS observed yet → stays in phase 0 at any token count
         assert_eq!(dyn_sched.query(900_000).phase, 0);
         // defaults when fields are omitted
@@ -518,6 +549,40 @@ mod tests {
         for t in [0u64, 50_000, 250_000, 499_999] {
             assert_eq!(fixed.at(t), boxed.query(t));
         }
+    }
+
+    #[test]
+    fn schedule_identity_discriminates_and_is_stable() {
+        let c = TrainConfig::default();
+        let base = c.schedule_identity(1_000_000);
+        assert_eq!(base, c.schedule_identity(1_000_000), "identity must be deterministic");
+        // every trajectory-shaping knob moves the identity
+        let mut d = c.clone();
+        d.schedule = ScheduleSpec::Adaptive { alpha: 2.0, ema: 0.9, hysteresis: 0 };
+        assert_ne!(base, d.schedule_identity(1_000_000));
+        let mut e = c.clone();
+        e.base_lr *= 2.0;
+        assert_ne!(base, e.schedule_identity(1_000_000));
+        let mut f = c.clone();
+        f.base_batch_tokens += 1;
+        assert_ne!(base, f.schedule_identity(1_000_000));
+        assert_ne!(base, c.schedule_identity(999_999), "budget is part of the identity");
+        // adaptive parameters discriminate too (they shape the cut law)
+        let mut g = d.clone();
+        g.schedule = ScheduleSpec::Adaptive { alpha: 2.0, ema: 0.9, hysteresis: 1 };
+        assert_ne!(d.schedule_identity(1_000_000), g.schedule_identity(1_000_000));
+        // the GNS feedback path is part of the identity…
+        let mut h = c.clone();
+        h.world_size = 4;
+        assert_ne!(base, h.schedule_identity(1_000_000), "world_size shapes the GNS signal");
+        let mut i = c.clone();
+        i.exec.collective = CollectiveKind::Parallel;
+        assert_ne!(base, i.schedule_identity(1_000_000), "collective shapes ‖G‖² bits");
+        // …but trajectory-neutral engine knobs are not
+        let mut j = c.clone();
+        j.exec.worker_threads = 8;
+        j.exec.pin_order = false;
+        assert_eq!(base, j.schedule_identity(1_000_000), "threads/pin_order never feed back");
     }
 
     #[test]

@@ -1,16 +1,58 @@
-//! Binary checkpoints: training state + data-loader cursor, so a resumed
-//! run continues the exact token stream (bit-identical loss curves across
-//! a save/restore boundary — asserted in the integration tests).
+//! Binary checkpoints: training state + data-loader cursor + schedule
+//! controller state + GNS-estimator state, so a resumed run continues the
+//! exact token stream **and** the exact adaptive ramp (bit-identical
+//! `(ce, gnorm_sq, gns, cuts)` trajectories across a save/restore
+//! boundary — asserted in the integration and property tests).
 //!
-//! Format: little-endian; magic `SEESAWCK`, version u32, scalar state,
-//! then 3 leaf groups (params/m/v), each as `count:u64 (len:u64 f32…)*`.
+//! ## Wire format (DESIGN.md §9)
+//!
+//! Little-endian throughout; magic `SEESAWCK`, then `version: u32`.
+//!
+//! **v2** (current): four length-prefixed sections, in order. Each
+//! section is `len: u64` followed by exactly `len` payload bytes, so a
+//! reader can validate every length against the bytes actually present
+//! before allocating.
+//!
+//! | # | section | payload |
+//! |---|---------|---------|
+//! | 1 | scalars | `step u64, tokens u64, data_cursor u64, phase u64, gnorm_ema f64, flops f64, serial_time f64` (56 bytes) |
+//! | 2 | leaves | 3 groups (params, m, v), each `count:u64 (len:u64 f32×len)*` |
+//! | 3 | schedule | `spec_hash u64` + the opaque [`crate::schedule::Schedule::state_save`] blob (internally versioned; empty for stateless schedules) |
+//! | 4 | gns | empty, or `ema f64, ema_s f64, ema_g2 f64, observations u64` (32 bytes) |
+//!
+//! **v1** (legacy, still loaded): scalar state without `phase`, then the
+//! 3 leaf groups — no schedule or GNS sections. Loading a v1 file yields
+//! default controller state (`schedule_hash == 0`, empty schedule blob,
+//! no GNS snapshot); fixed schedules resume from it exactly as before,
+//! while stateful schedules reject the empty blob with a clear error.
+//!
+//! Durability: `save` writes to a sibling `.tmp`, fsyncs the file,
+//! atomically renames it over the target, then fsyncs the parent
+//! directory — a crash at any point leaves either the old complete
+//! checkpoint or the new complete checkpoint, never a torn file.
 
+use crate::metrics::GnsState;
 use anyhow::{anyhow, ensure, Result};
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufWriter, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"SEESAWCK";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+/// Sentinel spec hash meaning "unknown" (v1 files). The coordinator
+/// skips the schedule-identity check for it.
+pub const SPEC_HASH_UNKNOWN: u64 = 0;
+
+/// FNV-1a 64-bit hash — the schedule-identity fingerprint stored in the
+/// checkpoint's schedule section. Stable across platforms and releases
+/// (pure arithmetic, no `std::hash` randomization).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
@@ -20,28 +62,146 @@ pub struct Checkpoint {
     pub flops: f64,
     pub serial_time: f64,
     pub data_cursor: u64,
+    /// Schedule phase at save time (cut-event edge detector state).
+    /// `0` on v1 files — the coordinator re-derives it from a query,
+    /// which is exact for the fixed schedules v1 was limited to.
+    pub phase: u64,
     pub params: Vec<Vec<f32>>,
     pub m: Vec<Vec<f32>>,
     pub v: Vec<Vec<f32>>,
+    /// FNV-1a hash of the run's schedule identity
+    /// ([`crate::config::TrainConfig::schedule_identity`]);
+    /// [`SPEC_HASH_UNKNOWN`] for v1 files.
+    pub schedule_hash: u64,
+    /// Opaque [`crate::schedule::Schedule::state_save`] blob (empty for
+    /// stateless schedules and v1 files).
+    pub schedule_state: Vec<u8>,
+    /// GNS-estimator snapshot; `None` on v1 files.
+    pub gns: Option<GnsState>,
+}
+
+/// Bounds-checked little-endian cursor over the checkpoint bytes: every
+/// read validates against the bytes actually present, so a corrupt
+/// length field fails cleanly *before* any allocation sized by it.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        // compare against `remaining` (never `pos + n`, which a corrupt
+        // u64 length could overflow) so oversized lengths error cleanly.
+        ensure!(
+            n <= self.remaining(),
+            "truncated or corrupt checkpoint: wanted {n} bytes at offset {}, have {}",
+            self.pos,
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// One leaf group: `count:u64 (len:u64 f32×len)*`, every length
+    /// validated against the remaining bytes before the `vec!` happens.
+    fn leaf_group(&mut self) -> Result<Vec<Vec<f32>>> {
+        let count = self.u64()? as usize;
+        // each leaf costs ≥ 8 bytes (its length field), so `count` is
+        // bounded by the remaining payload — no absurd-count allocation.
+        ensure!(
+            count <= self.remaining() / 8,
+            "corrupt checkpoint: leaf count {count} exceeds remaining {} bytes",
+            self.remaining()
+        );
+        let mut group = Vec::with_capacity(count);
+        for _ in 0..count {
+            let len = self.u64()? as usize;
+            ensure!(
+                len.checked_mul(4).is_some_and(|b| b <= self.remaining()),
+                "corrupt checkpoint: leaf length {len} exceeds remaining {} bytes",
+                self.remaining()
+            );
+            let bytes = self.take(len * 4)?;
+            let leaf: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            group.push(leaf);
+        }
+        Ok(group)
+    }
+
+    /// A length-prefixed v2 section as its own sub-cursor.
+    fn section(&mut self) -> Result<Cur<'a>> {
+        let len = self.u64()? as usize;
+        Ok(Cur { buf: self.take(len)?, pos: 0 })
+    }
+}
+
+/// `sync_all` on the parent directory so the rename itself is durable
+/// (on POSIX the directory entry lives in the directory's own data).
+/// Unix-only: opening a directory with `File::open` fails on Windows,
+/// where directory-entry fsync isn't a thing anyway (`ReplaceFile`
+/// semantics cover the rename).
+#[cfg(unix)]
+fn fsync_dir(path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::File::open(dir)?.sync_all()?;
+    }
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn fsync_dir(_path: &Path) -> Result<()> {
+    Ok(())
 }
 
 impl Checkpoint {
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        if let Some(dir) = path.as_ref().parent() {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let tmp = path.as_ref().with_extension("tmp");
+        let tmp = path.with_extension("tmp");
         {
             let mut w = BufWriter::new(std::fs::File::create(&tmp)?);
             w.write_all(MAGIC)?;
             w.write_all(&VERSION.to_le_bytes())?;
-            for x in [self.step, self.tokens, self.data_cursor] {
+
+            // §1 scalars
+            w.write_all(&56u64.to_le_bytes())?;
+            for x in [self.step, self.tokens, self.data_cursor, self.phase] {
                 w.write_all(&x.to_le_bytes())?;
             }
             for x in [self.gnorm_ema, self.flops, self.serial_time] {
                 w.write_all(&x.to_le_bytes())?;
             }
-            for group in [&self.params, &self.m, &self.v] {
+
+            // §2 leaves
+            let leaf_bytes = |g: &[Vec<f32>]| -> u64 {
+                8 + g.iter().map(|l| 8 + 4 * l.len() as u64).sum::<u64>()
+            };
+            let groups = [&self.params, &self.m, &self.v];
+            let total: u64 = groups.iter().map(|g| leaf_bytes(g)).sum();
+            w.write_all(&total.to_le_bytes())?;
+            for group in groups {
                 w.write_all(&(group.len() as u64).to_le_bytes())?;
                 for leaf in group.iter() {
                     w.write_all(&(leaf.len() as u64).to_le_bytes())?;
@@ -52,65 +212,141 @@ impl Checkpoint {
                     w.write_all(bytes)?;
                 }
             }
+
+            // §3 schedule: spec hash + opaque controller blob
+            w.write_all(&(8 + self.schedule_state.len() as u64).to_le_bytes())?;
+            w.write_all(&self.schedule_hash.to_le_bytes())?;
+            w.write_all(&self.schedule_state)?;
+
+            // §4 gns
+            match &self.gns {
+                None => w.write_all(&0u64.to_le_bytes())?,
+                Some(g) => {
+                    w.write_all(&32u64.to_le_bytes())?;
+                    for x in [g.ema, g.ema_s, g.ema_g2] {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                    w.write_all(&g.observations.to_le_bytes())?;
+                }
+            }
+
             w.flush()?;
+            // durability: the payload must be on disk before the rename
+            // publishes it, else a crash can expose a torn/empty file
+            // under the final name.
+            w.get_ref().sync_all()?;
         }
-        std::fs::rename(&tmp, path.as_ref())?; // atomic replace
+        std::fs::rename(&tmp, path)?; // atomic replace
+        fsync_dir(path)?; // …and make the rename itself durable
         Ok(())
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
-        let mut r = BufReader::new(std::fs::File::open(path.as_ref())?);
-        let mut magic = [0u8; 8];
-        r.read_exact(&mut magic)?;
-        ensure!(&magic == MAGIC, "not a seesaw checkpoint");
-        let mut u32b = [0u8; 4];
-        r.read_exact(&mut u32b)?;
-        let version = u32::from_le_bytes(u32b);
-        ensure!(version == VERSION, "unsupported checkpoint version {version}");
-        let mut u64b = [0u8; 8];
-        let mut read_u64 = |r: &mut BufReader<std::fs::File>| -> Result<u64> {
-            r.read_exact(&mut u64b)?;
-            Ok(u64::from_le_bytes(u64b))
+        // Whole-file read: every length field is then validated against
+        // bytes that provably exist, with no reader state to thread.
+        // Costs one extra file-sized buffer during the parse (transient
+        // ~2× peak vs streaming) — fine at this repo's scales; revisit
+        // with a metadata-size-validated streaming reader if checkpoints
+        // ever outgrow comfortable RAM.
+        let buf = std::fs::read(path.as_ref())?;
+        let mut r = Cur { buf: &buf, pos: 0 };
+        ensure!(r.take(8)? == MAGIC, "not a seesaw checkpoint");
+        let version = r.u32()?;
+        let ck = match version {
+            1 => Self::load_v1(&mut r)?,
+            2 => Self::load_v2(&mut r)?,
+            v => return Err(anyhow!("unsupported checkpoint version {v}")),
         };
-        let step = read_u64(&mut r)?;
-        let tokens = read_u64(&mut r)?;
-        let data_cursor = read_u64(&mut r)?;
-        let mut f64b = [0u8; 8];
-        let mut read_f64 = |r: &mut BufReader<std::fs::File>| -> Result<f64> {
-            r.read_exact(&mut f64b)?;
-            Ok(f64::from_le_bytes(f64b))
-        };
-        let gnorm_ema = read_f64(&mut r)?;
-        let flops = read_f64(&mut r)?;
-        let serial_time = read_f64(&mut r)?;
-        let read_group = |r: &mut BufReader<std::fs::File>| -> Result<Vec<Vec<f32>>> {
-            let mut b8 = [0u8; 8];
-            r.read_exact(&mut b8)?;
-            let count = u64::from_le_bytes(b8) as usize;
-            ensure!(count < 1_000_000, "absurd leaf count {count}");
-            let mut group = Vec::with_capacity(count);
-            for _ in 0..count {
-                r.read_exact(&mut b8)?;
-                let len = u64::from_le_bytes(b8) as usize;
-                ensure!(len < 1 << 32, "absurd leaf length {len}");
-                let mut leaf = vec![0f32; len];
-                let bytes: &mut [u8] = unsafe {
-                    std::slice::from_raw_parts_mut(leaf.as_mut_ptr() as *mut u8, len * 4)
-                };
-                r.read_exact(bytes)?;
-                group.push(leaf);
+        ensure!(r.remaining() == 0, "trailing bytes in checkpoint");
+        Ok(ck)
+    }
+
+    /// Legacy layout: scalars (no phase), 3 leaf groups, nothing else.
+    fn load_v1(r: &mut Cur<'_>) -> Result<Self> {
+        let step = r.u64()?;
+        let tokens = r.u64()?;
+        let data_cursor = r.u64()?;
+        let gnorm_ema = r.f64()?;
+        let flops = r.f64()?;
+        let serial_time = r.f64()?;
+        let params = r.leaf_group()?;
+        let m = r.leaf_group()?;
+        let v = r.leaf_group()?;
+        Ok(Self {
+            step,
+            tokens,
+            gnorm_ema,
+            flops,
+            serial_time,
+            data_cursor,
+            phase: 0,
+            params,
+            m,
+            v,
+            schedule_hash: SPEC_HASH_UNKNOWN,
+            schedule_state: Vec::new(),
+            gns: None,
+        })
+    }
+
+    fn load_v2(r: &mut Cur<'_>) -> Result<Self> {
+        let mut scalars = r.section()?;
+        let step = scalars.u64()?;
+        let tokens = scalars.u64()?;
+        let data_cursor = scalars.u64()?;
+        let phase = scalars.u64()?;
+        let gnorm_ema = scalars.f64()?;
+        let flops = scalars.f64()?;
+        let serial_time = scalars.f64()?;
+        ensure!(scalars.remaining() == 0, "oversized scalar section");
+
+        let mut leaves = r.section()?;
+        let params = leaves.leaf_group()?;
+        let m = leaves.leaf_group()?;
+        let v = leaves.leaf_group()?;
+        ensure!(leaves.remaining() == 0, "oversized leaf section");
+
+        let mut sched = r.section()?;
+        let schedule_hash = sched.u64()?;
+        let schedule_state = sched.take(sched.remaining())?.to_vec();
+
+        let mut gns_sec = r.section()?;
+        let gns = match gns_sec.remaining() {
+            0 => None,
+            32 => {
+                let ema = gns_sec.f64()?;
+                let ema_s = gns_sec.f64()?;
+                let ema_g2 = gns_sec.f64()?;
+                let observations = gns_sec.u64()?;
+                // value-level validation: `GnsEstimator::new` guarantees
+                // θ ∈ [0, 1) and finite EMAs, so anything else is a
+                // corrupt section that would silently poison the resumed
+                // estimator (a negative 1−θ weight, NaN EMAs) — fail the
+                // load cleanly instead.
+                ensure!(
+                    (0.0..1.0).contains(&ema) && ema_s.is_finite() && ema_g2.is_finite(),
+                    "corrupt gns section: ema={ema}, ema_s={ema_s}, ema_g2={ema_g2}"
+                );
+                Some(GnsState { ema, ema_s, ema_g2, observations })
             }
-            Ok(group)
+            n => return Err(anyhow!("gns section must be 0 or 32 bytes, got {n}")),
         };
-        let params = read_group(&mut r)?;
-        let m = read_group(&mut r)?;
-        let v = read_group(&mut r)?;
-        let mut rest = Vec::new();
-        r.read_to_end(&mut rest)?;
-        if !rest.is_empty() {
-            return Err(anyhow!("trailing bytes in checkpoint"));
-        }
-        Ok(Self { step, tokens, gnorm_ema, flops, serial_time, data_cursor, params, m, v })
+
+        Ok(Self {
+            step,
+            tokens,
+            gnorm_ema,
+            flops,
+            serial_time,
+            data_cursor,
+            phase,
+            params,
+            m,
+            v,
+            schedule_hash,
+            schedule_state,
+            gns,
+        })
     }
 }
 
@@ -126,10 +362,37 @@ mod tests {
             flops: 1e12,
             serial_time: 3.5,
             data_cursor: 77,
+            phase: 3,
             params: vec![vec![1.0, -2.0, 3.5], vec![0.0; 5]],
             m: vec![vec![0.1, 0.2, 0.3], vec![1.0; 5]],
             v: vec![vec![9.0, 8.0, 7.0], vec![2.0; 5]],
+            schedule_hash: fnv1a64(b"test-spec"),
+            schedule_state: vec![1, 2, 3, 4, 5],
+            gns: Some(GnsState { ema: 0.9, ema_s: 12.5, ema_g2: 3.25, observations: 17 }),
         }
+    }
+
+    /// Hand-encode the frozen v1 layout (what pre-v2 builds wrote).
+    fn v1_bytes(ck: &Checkpoint) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend(MAGIC);
+        out.extend(1u32.to_le_bytes());
+        for x in [ck.step, ck.tokens, ck.data_cursor] {
+            out.extend(x.to_le_bytes());
+        }
+        for x in [ck.gnorm_ema, ck.flops, ck.serial_time] {
+            out.extend(x.to_le_bytes());
+        }
+        for group in [&ck.params, &ck.m, &ck.v] {
+            out.extend((group.len() as u64).to_le_bytes());
+            for leaf in group.iter() {
+                out.extend((leaf.len() as u64).to_le_bytes());
+                for x in leaf {
+                    out.extend(x.to_le_bytes());
+                }
+            }
+        }
+        out
     }
 
     #[test]
@@ -140,6 +403,38 @@ mod tests {
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn roundtrip_without_controller_state() {
+        // the fixed-schedule shape: empty schedule blob, no GNS snapshot
+        let dir = crate::util::TempDir::new("ckpt").unwrap();
+        let path = dir.path().join("latest.ckpt");
+        let mut ck = sample();
+        ck.schedule_state = Vec::new();
+        ck.gns = None;
+        ck.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+    }
+
+    #[test]
+    fn v1_files_still_load_with_default_controller_state() {
+        let dir = crate::util::TempDir::new("ckpt").unwrap();
+        let path = dir.path().join("v1.ckpt");
+        let ck = sample();
+        std::fs::write(&path, v1_bytes(&ck)).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, ck.step);
+        assert_eq!(back.tokens, ck.tokens);
+        assert_eq!(back.data_cursor, ck.data_cursor);
+        assert_eq!(back.params, ck.params);
+        assert_eq!(back.m, ck.m);
+        assert_eq!(back.v, ck.v);
+        // migration defaults
+        assert_eq!(back.phase, 0);
+        assert_eq!(back.schedule_hash, SPEC_HASH_UNKNOWN);
+        assert!(back.schedule_state.is_empty());
+        assert_eq!(back.gns, None);
     }
 
     #[test]
@@ -159,17 +454,81 @@ mod tests {
         extended.extend_from_slice(b"JUNK");
         std::fs::write(&path, &extended).unwrap();
         assert!(Checkpoint::load(&path).is_err());
+        // truncated v1, too
+        let v1 = v1_bytes(&sample());
+        std::fs::write(&path, &v1[..v1.len() - 5]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
     }
 
     #[test]
-    fn save_is_atomic_replace() {
+    fn corrupt_length_fields_fail_before_allocation() {
+        // fuzz-style: flip every length-carrying byte region to huge
+        // values and require a clean error (no multi-GB `vec!` — the
+        // guard validates lengths against the bytes actually present).
+        let dir = crate::util::TempDir::new("ckpt").unwrap();
+        let good = dir.path().join("good.ckpt");
+        sample().save(&good).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        let path = dir.path().join("evil.ckpt");
+        // every u64-aligned offset in the header region gets poisoned;
+        // parsing must never panic or OOM, only Err (or succeed when the
+        // poke landed in payload rather than a length field).
+        for off in (8..bytes.len().min(160)).step_by(4) {
+            let mut evil = bytes.clone();
+            for (i, b) in evil[off..(off + 8).min(evil.len())].iter_mut().enumerate() {
+                *b = 0xFF ^ (i as u8);
+            }
+            std::fs::write(&path, &evil).unwrap();
+            let _ = Checkpoint::load(&path); // must return, not abort
+        }
+        // the targeted case from the issue: a leaf length of ~2^32−1
+        let v1 = v1_bytes(&sample());
+        let mut evil = v1.clone();
+        // first leaf length sits right after the scalar block + group count
+        let leaf_len_off = 8 + 4 + 3 * 8 + 3 * 8 + 8;
+        evil[leaf_len_off..leaf_len_off + 8].copy_from_slice(&(u32::MAX as u64).to_le_bytes());
+        std::fs::write(&path, &evil).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("leaf length"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn corrupt_gns_values_fail_the_load() {
+        // a well-framed (32-byte) gns section with out-of-contract values
+        // must be rejected, not restored into a poisoned estimator
+        let dir = crate::util::TempDir::new("ckpt").unwrap();
+        let path = dir.path().join("bad-gns.ckpt");
+        for bad in [
+            GnsState { ema: f64::NAN, ema_s: 1.0, ema_g2: 1.0, observations: 1 },
+            GnsState { ema: 2.0, ema_s: 1.0, ema_g2: 1.0, observations: 1 },
+            GnsState { ema: 0.9, ema_s: f64::INFINITY, ema_g2: 1.0, observations: 1 },
+        ] {
+            let mut ck = sample();
+            ck.gns = Some(bad);
+            ck.save(&path).unwrap();
+            let err = Checkpoint::load(&path).unwrap_err().to_string();
+            assert!(err.contains("corrupt gns section"), "unexpected: {err}");
+        }
+    }
+
+    #[test]
+    fn save_is_atomic_replace_and_durable() {
         let dir = crate::util::TempDir::new("ckpt").unwrap();
         let path = dir.path().join("latest.ckpt");
         sample().save(&path).unwrap();
         let mut second = sample();
         second.step = 43;
         second.save(&path).unwrap();
-        assert_eq!(Checkpoint::load(&path).unwrap().step, 43);
+        // the reopened file is complete and current (fsync'd before the
+        // rename published it), and no tmp residue is left behind
+        assert_eq!(Checkpoint::load(&path).unwrap(), second);
         assert!(!path.with_extension("tmp").exists());
+    }
+
+    #[test]
+    fn fnv_is_stable_and_discriminating() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a64(b"cosine|lr=a|b=1"), fnv1a64(b"adaptive|lr=a|b=1"));
+        assert_eq!(fnv1a64(b"x"), fnv1a64(b"x"));
     }
 }

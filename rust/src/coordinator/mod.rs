@@ -36,7 +36,7 @@
 mod checkpoint;
 pub mod worker;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{fnv1a64, Checkpoint, SPEC_HASH_UNKNOWN};
 pub use worker::{GradSource, Microbatch, MicroStats, StepEngine, StepOutput, Worker};
 
 use crate::config::{OptimizerKind, ScheduleSpec, TrainConfig};
@@ -44,7 +44,7 @@ use crate::data::{Corpus, Loader};
 use crate::metrics::{GnsEstimator, RunLog, StepRecord, WallClockModel};
 use crate::runtime::ModelRuntime;
 use crate::schedule::Schedule;
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 /// Mutable training state: parameters + optimizer moments + clocks.
 pub struct TrainState {
@@ -66,6 +66,12 @@ pub struct TrainState {
     pub serial_time: f64,
     /// Schedule phase of the previous step (cut-event edge detector).
     pub phase: usize,
+    /// Online gradient-noise-scale estimator fed from the engine's
+    /// per-worker shard norms (active — i.e. producing estimates — only
+    /// when `world_size ≥ 2`). Lives in the mutable training state so a
+    /// checkpoint captures its long-horizon EMAs and a resumed run keeps
+    /// the warm GNS signal instead of re-warming from scratch.
+    pub gns: GnsEstimator,
 }
 
 /// Borrowed per-step execution context handed to the step engine's
@@ -123,10 +129,11 @@ pub struct Trainer {
     /// The step engine: workers, gradient buffers, collective — reused
     /// across steps (configured by `cfg.exec`).
     pub engine: StepEngine,
-    /// Online gradient-noise-scale estimator fed from the engine's
-    /// per-worker shard norms (active — i.e. producing estimates — only
-    /// when `world_size ≥ 2`).
-    pub gns: GnsEstimator,
+    /// FNV-1a hash of the schedule identity this run was configured with
+    /// ([`TrainConfig::schedule_identity`]) — written into every
+    /// checkpoint and compared on resume, so controller state is never
+    /// silently restored into a different schedule.
+    pub schedule_hash: u64,
 }
 
 impl Trainer {
@@ -164,8 +171,8 @@ impl Trainer {
         let loader = Loader::new(corpus, rt.seq_len(), cfg.seed.wrapping_add(1));
         let wall = cfg.wallclock.unwrap_or_default();
         let engine = StepEngine::new(cfg.exec);
-        let gns = GnsEstimator::new(cfg.gns_ema());
-        Ok(Self { rt, cfg, schedule, loader, wall, total_tokens: total, engine, gns })
+        let schedule_hash = fnv1a64(cfg.schedule_identity(total).as_bytes());
+        Ok(Self { rt, cfg, schedule, loader, wall, total_tokens: total, engine, schedule_hash })
     }
 
     /// Fresh state (params from the `init` executable).
@@ -180,6 +187,7 @@ impl Trainer {
             flops: 0.0,
             serial_time: 0.0,
             phase: 0,
+            gns: GnsEstimator::new(self.cfg.gns_ema()),
         })
     }
 
@@ -256,13 +264,13 @@ impl Trainer {
         // --- gradient-noise scale ----------------------------------------
         // the shard norms were read off the engine's buffers pre-allreduce;
         // folding them in costs W divisions — no extra gradient work.
-        let gns_raw = self.gns.observe(
+        let gns_raw = state.gns.observe(
             &out.shard_sqnorms,
             &out.shard_micro,
             self.rt.micro_tokens(),
             gnorm_sq,
         );
-        let b_crit = self.gns.gns();
+        let b_crit = state.gns.gns();
 
         // --- bookkeeping -------------------------------------------------
         let tokens_before = state.tokens;
@@ -345,7 +353,11 @@ impl Trainer {
     }
 
     /// Persist the current state to `<checkpoint_dir>/latest.ckpt`
-    /// (no-op when no checkpoint dir is configured).
+    /// (no-op when no checkpoint dir is configured). Writes the v2
+    /// format: training scalars + leaves, the schedule's opaque
+    /// controller blob behind the run's spec hash, and the GNS-estimator
+    /// snapshot — everything a resumed run needs to retrace the
+    /// uninterrupted trajectory bit-for-bit.
     pub fn save_checkpoint(&self, state: &TrainState) -> Result<()> {
         let Some(dir) = &self.cfg.checkpoint_dir else { return Ok(()) };
         let ck = Checkpoint {
@@ -355,9 +367,19 @@ impl Trainer {
             flops: state.flops,
             serial_time: state.serial_time,
             data_cursor: self.loader.cursor,
+            phase: state.phase as u64,
             params: self.rt.to_host(&state.params)?,
             m: self.rt.to_host(&state.m)?,
             v: self.rt.to_host(&state.v)?,
+            schedule_hash: self.schedule_hash,
+            schedule_state: self.schedule.state_save(),
+            // the estimator keeps its EMAs finite (observe drops
+            // non-finite evidence), but never let a pathological snapshot
+            // poison the checkpoint: the loader rejects non-finite GNS
+            // state as corrupt, and that must not strand the run without
+            // a loadable checkpoint — degrade to "no snapshot" instead.
+            gns: Some(state.gns.state())
+                .filter(|s| s.ema_s.is_finite() && s.ema_g2.is_finite()),
         };
         ck.save(dir.join("latest.ckpt"))
     }
@@ -368,20 +390,38 @@ impl Trainer {
         if !path.exists() {
             return Ok(None);
         }
-        if !self.schedule.supports_resume() {
+        let ck = Checkpoint::load(&path)?;
+        // schedule-identity guard: controller state only means anything
+        // under the schedule that produced it. v1 files (hash unknown)
+        // predate stateful schedules, so the check is vacuous for them.
+        if ck.schedule_hash != SPEC_HASH_UNKNOWN && ck.schedule_hash != self.schedule_hash {
             bail!(
-                "schedule {:?} keeps controller state that is not checkpointed; \
-                 resuming from {:?} would silently restart the batch ramp — \
-                 delete the checkpoint or use a fixed schedule",
-                self.cfg.schedule,
-                path
+                "checkpoint {:?} was written under a different schedule configuration \
+                 (spec hash {:#018x}, this run is {:#018x} = {}); resuming would \
+                 silently change the training trajectory — restart from scratch or \
+                 rerun with the original schedule configuration",
+                path,
+                ck.schedule_hash,
+                self.schedule_hash,
+                self.cfg.schedule_identity(self.total_tokens),
             );
         }
-        let ck = Checkpoint::load(&path)?;
+        self.schedule
+            .state_restore(&ck.schedule_state)
+            .with_context(|| format!("restoring schedule state from {path:?}"))?;
         self.loader.cursor = ck.data_cursor;
-        // fixed schedules are pure in the token count, so the phase edge
-        // detector re-anchors from a query at the resume point.
-        let phase = self.schedule.query(ck.tokens).phase;
+        // v2 checkpoints carry the phase edge-detector state; v1 files
+        // predate it, but are only ever written by fixed schedules, which
+        // are pure in the token count — re-anchor from a query.
+        let phase = if ck.schedule_hash != SPEC_HASH_UNKNOWN {
+            ck.phase as usize
+        } else {
+            self.schedule.query(ck.tokens).phase
+        };
+        let gns = match ck.gns {
+            Some(s) => GnsEstimator::from_state(s),
+            None => GnsEstimator::new(self.cfg.gns_ema()),
+        };
         Ok(Some(TrainState {
             params: self.rt.from_host(&ck.params)?,
             m: self.rt.from_host(&ck.m)?,
@@ -392,6 +432,7 @@ impl Trainer {
             flops: ck.flops,
             serial_time: ck.serial_time,
             phase,
+            gns,
         }))
     }
 }

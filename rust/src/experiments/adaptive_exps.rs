@@ -89,19 +89,27 @@ pub fn run_schedule(
             GnsFeed::None => {}
             GnsFeed::Oracle(o) => sched.observe_gns(tokens, o(tokens)),
             GnsFeed::Measured => {
-                let b = p.batch_tokens;
-                let g = it.grad_norm_sq(b);
-                // noise terms scale as tr(Σ)/B; the mean term is
-                // (1−1/B)·‖G‖² — undo both factors to recover the ratio.
-                let noise_tr = (g.additive + g.iterate) * b as f64;
-                let signal = if b > 1 { g.mean / (1.0 - 1.0 / b as f64) } else { g.mean };
-                if signal > 0.0 {
-                    sched.observe_gns(tokens, noise_tr / signal);
+                if let Some(gns) = measured_gns(&it, p.batch_tokens) {
+                    sched.observe_gns(tokens, gns);
                 }
             }
         }
     }
     AblationRow { name: name.into(), final_risk: it.risk(), steps, serial_time, cuts, trajectory }
+}
+
+/// The recursion's exact `B_noise = tr(Σ)/‖G‖²` at batch `b`: noise terms
+/// scale as `tr(Σ)/B`, the mean term is `(1−1/B)·‖G‖²` — undo both
+/// factors to recover the ratio. `None` when the signal is non-positive.
+fn measured_gns(it: &crate::linreg::recursion::RiskIter, b: u64) -> Option<f64> {
+    let g = it.grad_norm_sq(b);
+    let noise_tr = (g.additive + g.iterate) * b as f64;
+    let signal = if b > 1 { g.mean / (1.0 - 1.0 / b as f64) } else { g.mean };
+    if signal > 0.0 {
+        Some(noise_tr / signal)
+    } else {
+        None
+    }
 }
 
 /// Testbed problem for the ablation: a power-law spectrum, far-from-optimum
@@ -165,6 +173,93 @@ pub fn staircase_equivalence(
     (fixed_row, adaptive_row)
 }
 
+/// The preemption contract on the recursion substrate (no artifacts
+/// needed): drive the measured-GNS controller through the ablation
+/// testbed; at the first step boundary **after its first cut** (mid-ramp,
+/// the hard case), snapshot the controller via
+/// [`Schedule::state_save`], rebuild a *fresh* controller from the same
+/// configuration, [`Schedule::state_restore`] the snapshot into it, and
+/// finish the run on the replacement. Returns
+/// `(uninterrupted, resumed, interrupt_tokens)`; the two trajectories
+/// must agree **bit-for-bit**. If no cut ever fires the run is never
+/// interrupted and `interrupt_tokens == total_tokens` — callers must
+/// treat that as a vacuous (meaningless) comparison, not a pass
+/// (pinned by `prop_recursion_resume_equivalence_mid_ramp` and
+/// `examples/adaptive_seesaw.rs`) — the schedule-level half of the
+/// checkpoint-v2 acceptance criterion, enforced without the LM stack.
+pub fn resume_equivalence(
+    a: f64,
+    total_tokens: u64,
+    base_batch: u64,
+    hysteresis: u64,
+) -> (AblationRow, AblationRow, u64) {
+    let problem = testbed();
+    let lr = 0.5 * problem.eta_max();
+    let wall = WallClockModel::default();
+    const CUTS: usize = 8;
+    let fresh = || {
+        AdaptiveSeesaw::new(lr, base_batch, 0, total_tokens, a)
+            .max_cuts(CUTS)
+            .hysteresis(hysteresis)
+    };
+
+    let mut uninterrupted = fresh();
+    let reference =
+        run_schedule(&mut uninterrupted, &problem, GnsFeed::Measured, &wall, "uninterrupted");
+
+    // interrupted run: same loop body as `run_schedule`'s Measured arm
+    // (keep the two in lockstep — the equivalence tests compare against
+    // `run_schedule`, so any drift fails them loudly), except the
+    // schedule object is torn down and rebuilt from its state blob once,
+    // mid-ramp. The swap cannot live inside `run_schedule` because it
+    // needs ownership of the schedule (a `&mut dyn Schedule` cannot be
+    // replaced).
+    let mut sched: Box<dyn Schedule> = Box::new(fresh());
+    let mut it = problem.iter();
+    let mut tokens = 0u64;
+    let mut steps = 0u64;
+    let mut serial_time = 0.0;
+    let mut cuts = 0u64;
+    let mut last_phase = 0usize;
+    let mut trajectory = Vec::new();
+    let mut interrupt_tokens = None;
+    while tokens < total_tokens {
+        let p = sched.query(tokens);
+        if p.phase > last_phase {
+            cuts += (p.phase - last_phase) as u64;
+            last_phase = p.phase;
+        }
+        trajectory.push((p.lr, p.batch_tokens));
+        it.step(p.lr, p.batch_tokens);
+        tokens += p.batch_tokens;
+        serial_time += wall.step_time(p.batch_tokens);
+        steps += 1;
+        if let Some(gns) = measured_gns(&it, p.batch_tokens) {
+            sched.observe_gns(tokens, gns);
+        }
+        if interrupt_tokens.is_none() && cuts >= 1 {
+            // "kill" the process: all that survives is the state blob…
+            let blob = sched.state_save();
+            // …and the run configuration, which rebuilds the controller.
+            let mut resumed = fresh();
+            resumed
+                .state_restore(&blob)
+                .expect("state_save must round-trip through state_restore");
+            sched = Box::new(resumed);
+            interrupt_tokens = Some(tokens);
+        }
+    }
+    let resumed_row = AblationRow {
+        name: "resumed".into(),
+        final_risk: it.risk(),
+        steps,
+        serial_time,
+        cuts,
+        trajectory,
+    };
+    (reference, resumed_row, interrupt_tokens.unwrap_or(total_tokens))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,6 +286,20 @@ mod tests {
             assert_eq!(f.1, o.1, "batch divergence");
         }
         assert_eq!(fixed.final_risk.to_bits(), oracle.final_risk.to_bits());
+    }
+
+    #[test]
+    fn resume_mid_ramp_matches_uninterrupted_bit_for_bit() {
+        let (reference, resumed, at) = resume_equivalence(2.0, 400_000, 16, 0);
+        assert!(reference.cuts >= 1, "testbed must fire at least one cut");
+        assert!(at < 400_000, "the interruption must land mid-run");
+        assert_eq!(reference.trajectory.len(), resumed.trajectory.len());
+        for (i, (r, s)) in reference.trajectory.iter().zip(&resumed.trajectory).enumerate() {
+            assert_eq!(r.0.to_bits(), s.0.to_bits(), "lr at step {i}");
+            assert_eq!(r.1, s.1, "batch at step {i}");
+        }
+        assert_eq!(reference.cuts, resumed.cuts);
+        assert_eq!(reference.final_risk.to_bits(), resumed.final_risk.to_bits());
     }
 
     #[test]

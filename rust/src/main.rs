@@ -6,6 +6,7 @@
 //!              [--world-size W] [--worker-threads T] [--collective ring|parallel]
 //!              [--pin-order true|false] [--variant ref|pallas] [--out-csv path]
 //!              [--gns-ema 0.9] [--hysteresis TOKENS]   (with --schedule adaptive)
+//!              [--checkpoint-dir DIR] [--checkpoint-every STEPS]
 //! seesaw exp <figure1|table1|figure2|figure3|figure4|figure5|figure6|
 //!             figure7|theorem1|corollary1|lemma1|lemma4|assumption2|
 //!             adaptive|all-theory> [--full] [--alpha 1.1]
@@ -16,6 +17,14 @@
 //! `--schedule adaptive` replaces the precomputed Seesaw staircase with
 //! the GNS-driven controller (needs `--world-size ≥ 2`); `seesaw exp
 //! adaptive` runs the fixed-vs-adaptive ablation on the live LM stack.
+//!
+//! With `--checkpoint-dir` the run saves `latest.ckpt` every
+//! `--checkpoint-every` steps (and at the end) and **resumes** from it on
+//! relaunch — including adaptive runs: the v2 checkpoint carries the
+//! controller's cut state and the GNS estimator's EMAs, and the resumed
+//! trajectory is bit-identical to an uninterrupted one. A checkpoint
+//! written under a different schedule configuration is rejected by a
+//! spec-hash check (see README "Preemption & resume").
 
 use anyhow::{anyhow, bail, Result};
 use seesaw::collective::CollectiveKind;
@@ -103,6 +112,9 @@ fn train(args: &Args) -> Result<()> {
     }
     if let Some(p) = args.str_opt("checkpoint-dir") {
         cfg.checkpoint_dir = Some(p.into());
+    }
+    if let Some(x) = args.u64_opt("checkpoint-every")? {
+        cfg.checkpoint_every = x;
     }
     let mut t = Trainer::new(cfg)?;
     println!(

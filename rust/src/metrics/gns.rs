@@ -28,6 +28,24 @@
 //! batch coincide and the two-point system is degenerate); with one
 //! worker [`GnsEstimator::observe`] is a no-op returning `None`.
 
+/// Snapshot of a [`GnsEstimator`]'s mutable state, as persisted in v2
+/// checkpoints (`coordinator::Checkpoint`). The GNS is a long-horizon
+/// running estimate — re-warming the EMAs from scratch after a restart
+/// costs hundreds of steps of controller signal — so the full estimator
+/// state round-trips bit-exactly through [`GnsEstimator::state`] /
+/// [`GnsEstimator::from_state`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GnsState {
+    /// EMA retention θ the estimator was configured with.
+    pub ema: f64,
+    /// Smoothed `tr(Σ)` estimate.
+    pub ema_s: f64,
+    /// Smoothed `‖G‖²` estimate.
+    pub ema_g2: f64,
+    /// Observations folded into the EMAs.
+    pub observations: u64,
+}
+
 /// Online two-point GNS estimator with separate EMA smoothing of the
 /// noise (`tr Σ`) and signal (`‖G‖²`) components.
 #[derive(Debug, Clone)]
@@ -47,6 +65,23 @@ impl GnsEstimator {
     /// New estimator with EMA retention `ema` (clamped into `[0, 1)`).
     pub fn new(ema: f64) -> Self {
         Self { ema: ema.clamp(0.0, 1.0 - 1e-9), ema_s: 0.0, ema_g2: 0.0, observations: 0 }
+    }
+
+    /// Snapshot the full mutable state (checkpoint support).
+    pub fn state(&self) -> GnsState {
+        GnsState {
+            ema: self.ema,
+            ema_s: self.ema_s,
+            ema_g2: self.ema_g2,
+            observations: self.observations,
+        }
+    }
+
+    /// Rebuild an estimator from a checkpointed snapshot. The resumed
+    /// estimator's future outputs are bit-identical to one that was never
+    /// interrupted (all state is in the snapshot).
+    pub fn from_state(s: GnsState) -> Self {
+        Self { ema: s.ema, ema_s: s.ema_s, ema_g2: s.ema_g2, observations: s.observations }
     }
 
     /// Fold in one optimizer step's evidence.
@@ -94,6 +129,13 @@ impl GnsEstimator {
         }
         let s = s_sum / used as f64;
         let g2 = g2_sum / used as f64;
+        if !(s.is_finite() && g2.is_finite()) {
+            // a divergent step (inf/NaN gradient norms) must not poison
+            // the long-horizon EMAs — they ride in checkpoints, and the
+            // loader rejects non-finite state as corrupt. Drop the
+            // evidence instead.
+            return None;
+        }
         if self.observations == 0 {
             self.ema_s = s;
             self.ema_g2 = g2;
@@ -205,6 +247,46 @@ mod tests {
             (got / want - 1.0).abs() < 0.3,
             "smoothed GNS {got:.4} should approach true {want:.4}"
         );
+    }
+
+    #[test]
+    fn non_finite_evidence_never_poisons_the_emas() {
+        // a divergent step (inf ‖G‖²) must be dropped, not folded — the
+        // EMAs ride in checkpoints and the loader rejects non-finite
+        // state as corrupt, which would strand the run.
+        let mut e = GnsEstimator::new(0.9);
+        e.observe(&[1.0, 9.0], &[1, 1], 1, 4.0);
+        let before = e.state();
+        assert_eq!(e.observe(&[1.0, 9.0], &[1, 1], 1, f64::INFINITY), None);
+        assert_eq!(e.observe(&[f64::NAN, 9.0], &[1, 1], 1, 4.0), None);
+        assert_eq!(e.state(), before, "poisoned evidence must not touch the EMAs");
+        assert!(e.state().ema_s.is_finite() && e.state().ema_g2.is_finite());
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_bit_exactly() {
+        // interrupted-vs-uninterrupted estimators must agree to the bit:
+        // feed N observations, snapshot/rebuild halfway, feed the rest.
+        let feed: [(f64, f64, f64); 4] =
+            [(1.0, 9.0, 4.0), (4.0, 16.0, 9.0), (2.0, 10.0, 5.0), (1.5, 7.0, 3.5)];
+        let mut whole = GnsEstimator::new(0.8);
+        let mut first = GnsEstimator::new(0.8);
+        for (i, &(a, b, g)) in feed.iter().enumerate() {
+            whole.observe(&[a, b], &[1, 1], 1, g);
+            if i < 2 {
+                first.observe(&[a, b], &[1, 1], 1, g);
+            }
+        }
+        let mut resumed = GnsEstimator::from_state(first.state());
+        for &(a, b, g) in &feed[2..] {
+            resumed.observe(&[a, b], &[1, 1], 1, g);
+        }
+        assert_eq!(whole.observations(), resumed.observations());
+        assert_eq!(whole.state(), resumed.state());
+        match (whole.gns(), resumed.gns()) {
+            (Some(x), Some(y)) => assert_eq!(x.to_bits(), y.to_bits()),
+            (a, b) => assert_eq!(a, b),
+        }
     }
 
     #[test]

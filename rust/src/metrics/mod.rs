@@ -5,7 +5,7 @@
 mod gns;
 mod wallclock;
 
-pub use gns::GnsEstimator;
+pub use gns::{GnsEstimator, GnsState};
 pub use wallclock::WallClockModel;
 
 use std::io::Write;

@@ -26,6 +26,13 @@
 //!   the controller reproduce a fixed staircase under an oracle whose GNS
 //!   jumps multiple levels between queries.
 //!
+//! The controller is **resumable**: [`Schedule::state_save`] serializes
+//! the full mutable state (cut history, last-cut tokens, current rung,
+//! last observed GNS) into the checkpoint's schedule section, and
+//! [`Schedule::state_restore`] rebuilds it so a preempted run retraces
+//! the uninterrupted trajectory bit-for-bit (the coordinator guards the
+//! static configuration with a spec hash before restoring).
+//!
 //! **Equivalence contract** (pinned by property tests and
 //! `examples/adaptive_seesaw.rs`): driven by the constant-noise oracle
 //! [`constant_noise_oracle`] with hysteresis disabled, the controller's
@@ -35,7 +42,7 @@
 //! subsystem strictly generalizes the paper's Algorithm 1.
 
 use super::{assemble_point, stability, warmup_factor, Schedule, SchedulePoint, StabilityVerdict};
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 /// GNS-driven Seesaw controller. See the module docs for the control law.
 #[derive(Debug, Clone)]
@@ -64,6 +71,10 @@ pub struct AdaptiveSeesaw {
     last_cut_tokens: Option<u64>,
     /// Latest smoothed GNS fed through `observe_gns`, in tokens.
     latest_gns: Option<f64>,
+    /// Token count at which each fired cut landed, in firing order
+    /// (`cut_history.len() == phase`). Checkpointed, so a resumed run
+    /// knows the full ramp it is continuing.
+    cut_history: Vec<u64>,
 }
 
 impl AdaptiveSeesaw {
@@ -106,6 +117,7 @@ impl AdaptiveSeesaw {
             phase: 0,
             last_cut_tokens: None,
             latest_gns: None,
+            cut_history: Vec::new(),
         })
     }
 
@@ -142,6 +154,11 @@ impl AdaptiveSeesaw {
         self.phase
     }
 
+    /// Token count at which each fired cut landed, in firing order.
+    pub fn cut_history(&self) -> &[u64] {
+        &self.cut_history
+    }
+
     /// The GNS threshold that arms the next cut: the *unrounded* post-cut
     /// batch `B₀·βᵏ⁺¹` in tokens. Comparing against the unrounded ramp
     /// (not the rounded `batch_tokens`) keeps the threshold ladder exactly
@@ -165,7 +182,49 @@ impl AdaptiveSeesaw {
             }
             self.phase += 1;
             self.last_cut_tokens = Some(tokens);
+            self.cut_history.push(tokens);
         }
+    }
+}
+
+/// Version tag of the [`AdaptiveSeesaw`] state blob (the `schedule`
+/// section payload of a v2 checkpoint). Bump when the layout changes;
+/// `state_restore` rejects unknown versions instead of misparsing.
+const STATE_VERSION: u8 = 1;
+
+/// Little-endian cursor over a state blob (bounds-checked reads).
+/// Deliberately mirrors `coordinator::checkpoint`'s `Cur` — kept local so
+/// the schedule layer stays independent of the checkpoint module — and
+/// uses the same overflow-proof bounds check (compare against the bytes
+/// remaining, never `pos + n`, which a corrupt length could overflow).
+struct Blob<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Blob<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.buf.len() - self.pos,
+            "truncated schedule state blob: wanted {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 }
 
@@ -193,10 +252,79 @@ impl Schedule for AdaptiveSeesaw {
         self.total_tokens
     }
 
-    /// Cut history is controller state, not a function of the token count,
-    /// and is not checkpointed — resuming would silently restart the ramp.
-    fn supports_resume(&self) -> bool {
-        false
+    /// Serialize the controller state: cut history, last-cut tokens, the
+    /// current `(lr_scale, batch_mult)` rung (the phase index — the
+    /// multipliers themselves are `(α⁻ᵏ, βᵏ)`, recomputed from the
+    /// configured factors so the resumed `powi` ladder is the identical
+    /// arithmetic) and the last observed GNS. Layout (little-endian):
+    /// `version:u8, phase:u64, last_cut:(flag:u8, u64),
+    /// latest_gns:(flag:u8, f64), history:(len:u64, u64×len)`.
+    fn state_save(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(35 + 8 * self.cut_history.len());
+        out.push(STATE_VERSION);
+        out.extend((self.phase as u64).to_le_bytes());
+        out.push(self.last_cut_tokens.is_some() as u8);
+        out.extend(self.last_cut_tokens.unwrap_or(0).to_le_bytes());
+        out.push(self.latest_gns.is_some() as u8);
+        out.extend(self.latest_gns.unwrap_or(0.0).to_le_bytes());
+        out.extend((self.cut_history.len() as u64).to_le_bytes());
+        for &t in &self.cut_history {
+            out.extend(t.to_le_bytes());
+        }
+        out
+    }
+
+    /// Restore a controller checkpointed by [`Schedule::state_save`]. The
+    /// resumed controller retraces the uninterrupted run bit-for-bit: all
+    /// mutable state is in the blob, and the static factors come from the
+    /// (identity-checked) run configuration.
+    fn state_restore(&mut self, bytes: &[u8]) -> Result<()> {
+        if bytes.is_empty() {
+            bail!(
+                "checkpoint has no controller state (written by a v1 format or a fixed \
+                 schedule) — an adaptive run cannot resume from it without silently \
+                 restarting the batch ramp; restart from scratch or resume the original \
+                 schedule"
+            );
+        }
+        let mut r = Blob { buf: bytes, pos: 0 };
+        let version = r.u8()?;
+        ensure!(version == STATE_VERSION, "unknown adaptive-state version {version}");
+        let phase = r.u64()? as usize;
+        let has_last_cut = r.u8()? != 0;
+        let last_cut_tokens = has_last_cut.then_some(r.u64()?);
+        let has_gns = r.u8()? != 0;
+        let latest_gns = has_gns.then_some(r.f64()?);
+        let n = r.u64()? as usize;
+        ensure!(n == phase, "corrupt state: {n} cut-history entries for phase {phase}");
+        ensure!(
+            phase <= self.max_cuts,
+            "checkpointed phase {phase} exceeds this run's max_cuts {} — the schedule \
+             configuration changed",
+            self.max_cuts
+        );
+        let mut cut_history = Vec::with_capacity(n);
+        for _ in 0..n {
+            cut_history.push(r.u64()?);
+        }
+        ensure!(
+            cut_history.windows(2).all(|w| w[0] <= w[1]),
+            "corrupt state: cut history is not non-decreasing"
+        );
+        ensure!(
+            if phase == 0 {
+                last_cut_tokens.is_none()
+            } else {
+                last_cut_tokens == cut_history.last().copied()
+            },
+            "corrupt state: last-cut tokens disagree with the cut history"
+        );
+        ensure!(r.pos == bytes.len(), "trailing bytes in schedule state blob");
+        self.phase = phase;
+        self.last_cut_tokens = last_cut_tokens;
+        self.latest_gns = latest_gns;
+        self.cut_history = cut_history;
+        Ok(())
     }
 }
 
@@ -292,6 +420,72 @@ mod tests {
         let p = c.query(150_000);
         assert_eq!(p.phase, 2);
         assert_eq!(p.batch_tokens, 10_000, "batch clamped");
+    }
+
+    #[test]
+    fn state_roundtrip_mid_ramp_resumes_bit_exactly() {
+        // drive a controller two cuts deep, snapshot, restore into a
+        // fresh instance, then feed both the same tail — every later
+        // query must agree to the bit (the tentpole resume contract at
+        // controller scale).
+        let mut live = controller(2.0).hysteresis(10_000);
+        live.observe_gns(150_000, 4096.0 * 4.0);
+        live.query(150_000);
+        live.query(165_000); // second cut after the hysteresis window
+        assert_eq!(live.cuts_fired(), 2);
+        assert_eq!(live.cut_history(), &[150_000, 165_000]);
+
+        let blob = Schedule::state_save(&live);
+        let mut resumed = controller(2.0).hysteresis(10_000);
+        resumed.state_restore(&blob).unwrap();
+        assert_eq!(resumed.cuts_fired(), 2);
+        assert_eq!(resumed.cut_history(), live.cut_history());
+
+        for t in [200_000u64, 300_000, 500_000] {
+            live.observe_gns(t, 4096.0 * 32.0);
+            resumed.observe_gns(t, 4096.0 * 32.0);
+            let (a, b) = (live.query(t), resumed.query(t));
+            assert_eq!(a.lr.to_bits(), b.lr.to_bits(), "lr at {t}");
+            assert_eq!(a.batch_tokens, b.batch_tokens, "batch at {t}");
+            assert_eq!(a.phase, b.phase, "phase at {t}");
+        }
+    }
+
+    #[test]
+    fn state_restore_rejects_empty_and_corrupt_blobs() {
+        let mut c = controller(2.0);
+        let err = c.state_restore(&[]).unwrap_err().to_string();
+        assert!(err.contains("no controller state"), "unexpected: {err}");
+        assert!(c.state_restore(&[99]).is_err(), "unknown version must be rejected");
+        // phase / history-length mismatch
+        let mut blob = Schedule::state_save(&{
+            let mut d = controller(2.0);
+            d.observe_gns(200_000, 4096.0 * 2.0);
+            d.query(200_000);
+            d
+        });
+        assert_eq!(blob[1], 1, "phase LE byte");
+        blob[1] = 7; // phase no longer matches the 1-entry history
+        assert!(c.state_restore(&blob).is_err());
+        // truncation
+        let good = Schedule::state_save(&controller(2.0));
+        assert!(c.state_restore(&good[..good.len() - 3]).is_err());
+        // trailing junk
+        let mut long = good.clone();
+        long.push(0);
+        assert!(c.state_restore(&long).is_err());
+        // phase-0 blob with the last-cut flag set: unreachable by
+        // state_save, must be rejected (it would silently arm hysteresis)
+        let mut forged = Schedule::state_save(&controller(2.0));
+        forged[9] = 1; // has_last_cut flag (after version u8 + phase u64)
+        assert!(c.state_restore(&forged).is_err());
+        // a phase beyond max_cuts is a configuration mismatch
+        let mut deep = controller(2.0);
+        deep.observe_gns(200_000, 4096.0 * 1024.0);
+        deep.query(200_000);
+        assert!(deep.cuts_fired() > 2);
+        let mut capped = controller(2.0).max_cuts(1);
+        assert!(capped.state_restore(&Schedule::state_save(&deep)).is_err());
     }
 
     #[test]

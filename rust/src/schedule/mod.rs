@@ -32,6 +32,7 @@ pub mod seesaw;
 pub use adaptive::AdaptiveSeesaw;
 pub use seesaw::{stability, table2_grid, SeesawBuilder, StabilityVerdict};
 
+use anyhow::{ensure, Result};
 use std::f64::consts::PI;
 
 /// What the coordinator needs to know before each optimizer step.
@@ -68,13 +69,31 @@ pub trait Schedule: Send {
     /// Total training budget in tokens.
     fn total_tokens(&self) -> u64;
 
-    /// Whether a checkpointed run may resume under this schedule. Fixed
-    /// schedules are pure functions of the token count and resume freely;
-    /// stateful controllers whose cut history is not checkpointed must
-    /// return `false` (the coordinator refuses the resume with a clear
-    /// error instead of silently diverging).
-    fn supports_resume(&self) -> bool {
-        true
+    /// Serialize the schedule's mutable controller state as an opaque,
+    /// internally-versioned blob — the `schedule` section of a v2
+    /// checkpoint (`coordinator::Checkpoint`). Pure token-indexed
+    /// schedules carry no state and return the empty blob; stateful
+    /// controllers ([`adaptive::AdaptiveSeesaw`]) serialize everything a
+    /// resumed run needs to retrace the uninterrupted trajectory
+    /// bit-for-bit (cut history, last-cut tokens, current rung, last
+    /// observed GNS).
+    fn state_save(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore controller state from a checkpoint blob previously
+    /// produced by [`Schedule::state_save`] on an identically-configured
+    /// schedule (the coordinator guards identity with a spec hash before
+    /// calling this). The default implementation — correct for every
+    /// stateless schedule — accepts only the empty blob.
+    fn state_restore(&mut self, bytes: &[u8]) -> Result<()> {
+        ensure!(
+            bytes.is_empty(),
+            "schedule carries no controller state, but the checkpoint has a {}-byte \
+             schedule section — it was written by a different (stateful) schedule",
+            bytes.len()
+        );
+        Ok(())
     }
 }
 
@@ -368,6 +387,15 @@ mod tests {
             got / t,
             want
         );
+    }
+
+    #[test]
+    fn fixed_schedules_are_stateless_for_checkpointing() {
+        let mut s = base(ScheduleKind::CosineContinuous);
+        assert!(Schedule::state_save(&s).is_empty(), "pure lookup tables carry no state");
+        assert!(s.state_restore(&[]).is_ok(), "empty blob restores trivially");
+        let err = s.state_restore(&[1, 2, 3]).unwrap_err().to_string();
+        assert!(err.contains("stateful"), "unexpected error: {err}");
     }
 
     #[test]
