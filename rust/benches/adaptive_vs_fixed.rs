@@ -8,8 +8,9 @@
 //! cargo bench --bench adaptive_vs_fixed
 //! ```
 
+use seesaw::collective::CollectiveStats;
 use seesaw::experiments::adaptive_exps::{ablation, staircase_equivalence};
-use seesaw::metrics::print_table;
+use seesaw::metrics::{print_table, WallClockModel};
 use seesaw::schedule::{AdaptiveSeesaw, Schedule};
 use seesaw::util::bench::{bench, black_box};
 use std::time::Duration;
@@ -17,6 +18,23 @@ use std::time::Duration;
 fn main() {
     let total = 400_000u64;
     let mut table = Vec::new();
+    let mut survival = Vec::new();
+    // bandwidth-bound interconnect for the speedup-survival columns: the
+    // per-step allreduce payload of an 8-way 115k-param testbed model
+    // (2·(W−1)·n·4 B) split into eight 64 KiB buckets, against 8 MB/s.
+    let wall = WallClockModel {
+        devices: 64,
+        tokens_per_device: 64,
+        comm_bytes_per_sec: 8e6,
+        ..WallClockModel::default()
+    };
+    let payload = (2 * 7 * 115_008 * 4) as u64;
+    let comm = CollectiveStats {
+        bytes_moved: payload,
+        phases: 8 * 2 * 7,
+        buckets: 8,
+        tail_bytes: payload / 8,
+    };
     for a in [1.5f64, 2.0, 4.0] {
         let rows = ablation(a, total, 16, 4_000);
         let fixed = &rows[0];
@@ -30,11 +48,30 @@ fn main() {
             format!("{:.1}%", (1.0 - adaptive.serial_time / fixed.serial_time) * 100.0),
             format!("{}/{}", adaptive.cuts, fixed.cuts),
         ]);
+        // how much of the ramp's serial-time saving survives once every
+        // step also pays communication — serialized vs overlapped (§10)
+        let saved = |charge: &dyn Fn(u64) -> f64| {
+            let t = |row: &seesaw::experiments::adaptive_exps::AblationRow| -> f64 {
+                row.trajectory.iter().map(|&(_, b)| charge(b)).sum()
+            };
+            100.0 * (1.0 - t(adaptive) / t(fixed))
+        };
+        survival.push(vec![
+            format!("{a}"),
+            format!("{:.1}%", saved(&|b| wall.step_time(b))),
+            format!("{:.1}%", saved(&|b| wall.step_time_comm(b, comm.bytes_moved))),
+            format!("{:.1}%", saved(&|b| wall.step_time_overlapped(b, &comm))),
+        ]);
     }
     print_table(
         "adaptive vs fixed Seesaw — exact recursion, equal tokens",
         &["a", "fixed CE", "adaptive CE", "fixed steps", "adaptive steps", "time saved", "cuts (a/f)"],
         &table,
+    );
+    print_table(
+        "speedup survival on a bandwidth-bound interconnect (time saved by adaptive)",
+        &["a", "compute only", "+serialized comm", "+overlapped comm"],
+        &survival,
     );
 
     // equivalence sanity before timing anything

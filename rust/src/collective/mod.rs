@@ -17,14 +17,54 @@
 //! implementation ran. Unit + property tests pin the semantics (mean of
 //! all shards, bit-exact reproducibility, byte-accounting parity, any
 //! W ≥ 1).
+//!
+//! **Bucketed mode** (DESIGN.md §10): [`Collective::allreduce_mean_bucketed`]
+//! reduces the flat gradient in deterministic fixed-size buckets — the
+//! wire schedule a real cluster overlaps with compute. Both
+//! implementations guarantee the reduced mean and the pre-reduce
+//! `‖sum_w‖²` GNS tap are **bit-identical to the whole-vector call for
+//! any bucket size** (the ring keeps the global chunk→owner partition
+//! across buckets; the parallel reduction is an ordered per-element
+//! worker sum either way), so `bucket_bytes` is a pure performance knob:
+//! it moves [`CollectiveStats`]'s bucket accounting and the modeled
+//! overlap window, never the trajectory.
 
 /// Statistics from one collective call.
+///
+/// A bucketed call ([`Collective::allreduce_mean_bucketed`]) accounts
+/// every bucket: `bytes_moved`/`phases` sum over buckets, `buckets`
+/// counts them and `tail_bytes` is the payload of the *last* bucket —
+/// the communication a real overlapped cluster cannot hide behind
+/// compute (nothing is left to compute once the tail's leaves are done).
+/// All full buckets carry the same payload, so the per-bucket breakdown
+/// is `(bytes_moved − tail_bytes) / (buckets − 1)` each plus the tail;
+/// [`crate::metrics::WallClockModel`] charges exactly that schedule.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct CollectiveStats {
     /// Total payload bytes moved between workers (both phases).
     pub bytes_moved: u64,
-    /// Communication phases executed (2·(W−1) for a ring).
+    /// Communication phases executed (2·(W−1) per bucket for a ring).
     pub phases: u32,
+    /// Buckets the payload was reduced in: 1 for a whole-vector call,
+    /// ≥ 1 for a bucketed call, 0 when no communication happened
+    /// (`W == 1`).
+    pub buckets: u32,
+    /// Payload bytes of the last bucket (== `bytes_moved` for a
+    /// whole-vector call) — the non-overlappable exposure in the
+    /// overlapped wall-clock model.
+    pub tail_bytes: u64,
+}
+
+/// Stats of one whole-vector (single-bucket) reduce over `w` shards of
+/// `n` elements: the canonical ring payload.
+fn whole_vector_stats(w: usize, n: usize) -> CollectiveStats {
+    let bytes = (2 * (w - 1) * n * 4) as u64;
+    CollectiveStats {
+        bytes_moved: bytes,
+        phases: 2 * (w as u32 - 1),
+        buckets: 1,
+        tail_bytes: bytes,
+    }
 }
 
 /// Which allreduce implementation combines worker gradients.
@@ -77,6 +117,64 @@ pub trait Collective: Send + Sync {
     /// Reduce `shards` to their mean in place; returns byte/phase stats.
     fn allreduce_mean(&self, shards: &mut [Vec<f32>]) -> CollectiveStats;
 
+    /// Reduce the element range `lo..hi` of every shard to its mean in
+    /// place, leaving the rest of the shards untouched — the primitive
+    /// one bucket of [`Collective::allreduce_mean_bucketed`] runs on.
+    ///
+    /// Contract (the bucketing bit-exactness guarantee rests on it): for
+    /// every element, the floating-point reduction order must be
+    /// *identical* to the whole-vector [`Collective::allreduce_mean`] —
+    /// i.e. range-restriction may not re-derive per-element schedules
+    /// from the range width. Then reducing any partition of `0..n`
+    /// range-by-range is bit-identical to one whole-vector call.
+    fn allreduce_mean_range(&self, shards: &mut [Vec<f32>], lo: usize, hi: usize)
+        -> CollectiveStats;
+
+    /// Bucketed mean-allreduce (DESIGN.md §10): the flat gradient is
+    /// split into deterministic fixed-size buckets of `bucket_elems`
+    /// elements (the last bucket takes the remainder) and each bucket is
+    /// reduced independently via [`Collective::allreduce_mean_range`] —
+    /// the wire schedule a real cluster overlaps with compute, bucket
+    /// `k`'s reduce in flight while the leaves behind bucket `k+1` are
+    /// still accumulating.
+    ///
+    /// The per-shard `‖sum_w‖²` GNS tap is read over the *whole* shard
+    /// before any bucket reduces (every shard is still intact at that
+    /// point), so `sqnorms` is bit-identical to
+    /// [`Collective::allreduce_mean_with_sqnorms`]'s. Combined with the
+    /// range contract above, the reduced mean — and therefore the step
+    /// engine's whole trajectory — is bit-identical for **any**
+    /// `bucket_elems`; only [`CollectiveStats`]'s bucket accounting (and
+    /// the modeled overlap window) changes.
+    fn allreduce_mean_bucketed(
+        &self,
+        shards: &mut [Vec<f32>],
+        bucket_elems: usize,
+        sqnorms: &mut Vec<f64>,
+    ) -> CollectiveStats {
+        sqnorms.clear();
+        sqnorms.extend(shards.iter().map(|s| shard_sqnorm(s)));
+        let w = shards.len();
+        assert!(w > 0, "need at least one worker");
+        if w == 1 {
+            return CollectiveStats::default();
+        }
+        let n = shards[0].len();
+        let bucket = bucket_elems.max(1);
+        let mut stats = CollectiveStats::default();
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + bucket).min(n);
+            let s = self.allreduce_mean_range(shards, lo, hi);
+            stats.bytes_moved += s.bytes_moved;
+            stats.phases += s.phases;
+            stats.buckets += 1;
+            stats.tail_bytes = s.bytes_moved;
+            lo = hi;
+        }
+        stats
+    }
+
     /// [`Collective::allreduce_mean`] that additionally reads each shard's
     /// squared L2 norm **before** the reduction destroys the per-worker
     /// sums — the free small-batch signal the gradient-noise-scale
@@ -114,6 +212,15 @@ impl Collective for RingCollective {
     fn allreduce_mean(&self, shards: &mut [Vec<f32>]) -> CollectiveStats {
         ring_allreduce_mean(shards)
     }
+
+    fn allreduce_mean_range(
+        &self,
+        shards: &mut [Vec<f32>],
+        lo: usize,
+        hi: usize,
+    ) -> CollectiveStats {
+        ring_allreduce_mean_range(shards, lo, hi)
+    }
 }
 
 /// Thread-parallel implementation of [`Collective`].
@@ -140,6 +247,19 @@ impl Collective for ParallelCollective {
     /// starting the per-chunk ordered sum from shard 0's values instead
     /// of a zeroed buffer changes nothing.
     fn allreduce_mean(&self, shards: &mut [Vec<f32>]) -> CollectiveStats {
+        let n = shards.first().map(|s| s.len()).unwrap_or(0);
+        self.allreduce_mean_range(shards, 0, n)
+    }
+
+    /// Every element's value is the ordered worker sum `((s₀+s₁)+…)·W⁻¹`
+    /// regardless of thread chunking *or* range restriction, so the
+    /// bucketing contract holds trivially.
+    fn allreduce_mean_range(
+        &self,
+        shards: &mut [Vec<f32>],
+        lo: usize,
+        hi: usize,
+    ) -> CollectiveStats {
         let w = shards.len();
         assert!(w > 0, "need at least one worker");
         if w == 1 {
@@ -147,19 +267,21 @@ impl Collective for ParallelCollective {
         }
         let n = shards[0].len();
         assert!(shards.iter().all(|s| s.len() == n), "shards must be congruent");
+        assert!(lo <= hi && hi <= n, "range {lo}..{hi} out of bounds for {n}");
         let (first, rest) = shards.split_first_mut().expect("w > 1");
         let rest: &[Vec<f32>] = rest;
+        let span = hi - lo;
         // at least 64k elements per chunk to amortize thread spawn
-        // (chunk floor of 1 keeps chunks_mut happy on empty gradients)
-        let threads = (n / 65_536).clamp(1, self.max_threads.max(1));
-        let chunk = n.div_ceil(threads).max(1);
+        // (chunk floor of 1 keeps chunks_mut happy on empty ranges)
+        let threads = (span / 65_536).clamp(1, self.max_threads.max(1));
+        let chunk = span.div_ceil(threads).max(1);
         std::thread::scope(|scope| {
-            for (ci, out_chunk) in first.chunks_mut(chunk).enumerate() {
-                let lo = ci * chunk;
+            for (ci, out_chunk) in first[lo..hi].chunks_mut(chunk).enumerate() {
+                let clo = lo + ci * chunk;
                 scope.spawn(move || {
-                    let hi = lo + out_chunk.len();
+                    let chi = clo + out_chunk.len();
                     for s in rest {
-                        for (o, x) in out_chunk.iter_mut().zip(&s[lo..hi]) {
+                        for (o, x) in out_chunk.iter_mut().zip(&s[clo..chi]) {
                             *o += *x;
                         }
                     }
@@ -171,7 +293,7 @@ impl Collective for ParallelCollective {
             }
             // scope joins all reduction threads here (panics propagate)
         });
-        CollectiveStats { bytes_moved: (2 * (w - 1) * n * 4) as u64, phases: 2 * (w as u32 - 1) }
+        whole_vector_stats(w, span)
     }
 }
 
@@ -196,23 +318,40 @@ fn two_rows_mut(rows: &mut [Vec<f32>], a: usize, b: usize) -> (&mut Vec<f32>, &m
 /// Sequential reference implementation — bit-exact, used by tests and as
 /// the default at small world sizes where task overhead dominates.
 pub fn ring_allreduce_mean(shards: &mut [Vec<f32>]) -> CollectiveStats {
+    let n = shards.first().map(|s| s.len()).unwrap_or(0);
+    ring_allreduce_mean_range(shards, 0, n)
+}
+
+/// [`ring_allreduce_mean`] restricted to the element range `lo..hi` —
+/// one bucket of the bucketed mode.
+///
+/// The chunk→owner partition stays the **global** one (chunk `c` of the
+/// *whole* vector is owned by worker `c`, whatever the range), and each
+/// phase touches the intersection of its chunk with the range. Every
+/// element therefore sees the exact accumulation order of the
+/// whole-vector ring — which is what makes training bit-invariant under
+/// `bucket_bytes` retuning, a deliberate divergence from wire protocols
+/// that re-chunk each bucket (and silently change the sum order when the
+/// bucket size knob moves).
+pub fn ring_allreduce_mean_range(shards: &mut [Vec<f32>], lo: usize, hi: usize) -> CollectiveStats {
     let w = shards.len();
     assert!(w > 0, "need at least one worker");
     let n = shards[0].len();
     assert!(shards.iter().all(|s| s.len() == n), "shards must be congruent");
+    assert!(lo <= hi && hi <= n, "range {lo}..{hi} out of bounds for {n}");
     if w == 1 {
         return CollectiveStats::default();
     }
-    // chunk c is owned by worker c % w
+    // chunk c of the whole vector is owned by worker c; clip to the range
     let chunks = w;
     let chunk_bounds = |c: usize| {
-        let lo = c * n / chunks;
-        let hi = (c + 1) * n / chunks;
-        (lo, hi)
+        let clo = (c * n / chunks).max(lo);
+        let chi = ((c + 1) * n / chunks).min(hi);
+        (clo, chi)
     };
-    let mut stats = CollectiveStats::default();
+    let mut stats = CollectiveStats { buckets: 1, ..CollectiveStats::default() };
     // reduce-scatter: after W−1 phases, worker `c` holds the full sum of
-    // chunk `c`.
+    // (its slice of) chunk `c`.
     for phase in 0..w - 1 {
         for c in 0..chunks {
             // in phase p, worker (c + p + 1) % w sends its copy of chunk c
@@ -222,19 +361,22 @@ pub fn ring_allreduce_mean(shards: &mut [Vec<f32>]) -> CollectiveStats {
             if src == c {
                 continue;
             }
-            let (lo, hi) = chunk_bounds(c);
+            let (clo, chi) = chunk_bounds(c);
+            if clo >= chi {
+                continue;
+            }
             let (acc, sender) = two_rows_mut(shards, c, src);
-            for i in lo..hi {
+            for i in clo..chi {
                 acc[i] += sender[i];
             }
-            stats.bytes_moved += ((hi - lo) * 4) as u64;
+            stats.bytes_moved += ((chi - clo) * 4) as u64;
         }
         stats.phases += 1;
     }
     // normalize owned chunks to the mean
     for c in 0..chunks {
-        let (lo, hi) = chunk_bounds(c);
-        for i in lo..hi {
+        let (clo, chi) = chunk_bounds(c);
+        for i in clo..chi {
             shards[c][i] /= w as f32;
         }
     }
@@ -245,13 +387,17 @@ pub fn ring_allreduce_mean(shards: &mut [Vec<f32>]) -> CollectiveStats {
             if dst == c {
                 continue;
             }
-            let (lo, hi) = chunk_bounds(c);
+            let (clo, chi) = chunk_bounds(c);
+            if clo >= chi {
+                continue;
+            }
             let (owner, target) = two_rows_mut(shards, c, dst);
-            target[lo..hi].copy_from_slice(&owner[lo..hi]);
-            stats.bytes_moved += ((hi - lo) * 4) as u64;
+            target[clo..chi].copy_from_slice(&owner[clo..chi]);
+            stats.bytes_moved += ((chi - clo) * 4) as u64;
         }
         stats.phases += 1;
     }
+    stats.tail_bytes = stats.bytes_moved;
     stats
 }
 
@@ -295,11 +441,7 @@ pub fn parallel_allreduce_mean(shards: &[Vec<f32>]) -> (Vec<f32>, CollectiveStat
     // account the canonical ring schedule the implementation substitutes
     // for: 2·(W−1) phases, each moving the n-element vector once — the
     // same bytes the ring implementation counts chunk by chunk.
-    let stats = CollectiveStats {
-        bytes_moved: (2 * (w - 1) * n * 4) as u64,
-        phases: 2 * (w as u32 - 1),
-    };
-    (result, stats)
+    (result, whole_vector_stats(w, n))
 }
 
 /// Plain sequential mean over worker gradients — the semantic oracle.
@@ -431,6 +573,95 @@ mod tests {
             }
             assert_eq!(with[0], plain[0], "{kind:?}: norm reads must not perturb the reduce");
             assert_eq!(stats.bytes_moved, 2 * 3 * 777 * 4, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn bucketed_reduce_is_bit_identical_to_whole_vector() {
+        // the §10 contract: any bucket size reproduces the unbucketed
+        // reduce to the bit — mean AND sqnorm tap — for both collectives,
+        // including bucket sizes that don't divide n, exceed n, or
+        // degenerate to one element per bucket.
+        for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
+            let coll = kind.build();
+            for &(w, n) in &[(2usize, 64usize), (3, 100), (4, 128), (5, 8191), (7, 1000)] {
+                let s = shards(w, n);
+                let mut whole = s.clone();
+                let mut whole_norms = Vec::new();
+                coll.allreduce_mean_with_sqnorms(&mut whole, &mut whole_norms);
+                for bucket in [1usize, 7, 64, n / 2 + 1, n, 10 * n] {
+                    let mut b = s.clone();
+                    let mut norms = Vec::new();
+                    let stats = coll.allreduce_mean_bucketed(&mut b, bucket, &mut norms);
+                    assert_eq!(
+                        whole[0], b[0],
+                        "{kind:?} w={w} n={n} bucket={bucket}: mean must be bit-identical"
+                    );
+                    assert_eq!(
+                        whole_norms, norms,
+                        "{kind:?} w={w} n={n} bucket={bucket}: sqnorm tap must be bit-identical"
+                    );
+                    assert_eq!(stats.buckets as usize, n.div_ceil(bucket), "{kind:?} bucket count");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bucketed_accounting_sums_to_the_whole_payload() {
+        for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
+            let coll = kind.build();
+            let (w, n, bucket) = (4usize, 1000usize, 256usize);
+            let mut s = shards(w, n);
+            let mut norms = Vec::new();
+            let stats = coll.allreduce_mean_bucketed(&mut s, bucket, &mut norms);
+            // total payload is bucketing-invariant; only phases multiply
+            assert_eq!(stats.bytes_moved, (2 * (w - 1) * n * 4) as u64, "{kind:?}");
+            assert_eq!(stats.buckets, 4, "{kind:?}");
+            assert_eq!(stats.phases, 4 * 2 * (w as u32 - 1), "{kind:?}: 2(W−1) per bucket");
+            // tail bucket holds the remainder: 1000 − 3·256 = 232 elements
+            assert_eq!(stats.tail_bytes, (2 * (w - 1) * 232 * 4) as u64, "{kind:?}");
+            // full buckets split the rest evenly
+            let full = (stats.bytes_moved - stats.tail_bytes) / (stats.buckets as u64 - 1);
+            assert_eq!(full, (2 * (w - 1) * 256 * 4) as u64, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn whole_vector_calls_report_one_bucket() {
+        let mut s = shards(4, 128);
+        let stats = ring_allreduce_mean(&mut s);
+        assert_eq!(stats.buckets, 1);
+        assert_eq!(stats.tail_bytes, stats.bytes_moved);
+        let (_, ps) = parallel_allreduce_mean(&shards(4, 128));
+        assert_eq!(ps.buckets, 1);
+        assert_eq!(ps.tail_bytes, ps.bytes_moved);
+        // single worker: no communication at all
+        let mut one = shards(1, 16);
+        let mut norms = Vec::new();
+        for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
+            let stats = kind.build().allreduce_mean_bucketed(&mut one, 4, &mut norms);
+            assert_eq!(stats, CollectiveStats::default(), "{kind:?}");
+            assert_eq!(norms.len(), 1, "{kind:?}: tap still reads the lone shard");
+        }
+    }
+
+    #[test]
+    fn range_reduce_touches_only_the_range() {
+        for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
+            let coll = kind.build();
+            let s = shards(3, 100);
+            let mut got = s.clone();
+            let stats = coll.allreduce_mean_range(&mut got, 10, 40);
+            assert_eq!(stats.bytes_moved, (2 * 2 * 30 * 4) as u64, "{kind:?}");
+            // shard 0 outside the range is untouched
+            assert_eq!(got[0][..10], s[0][..10], "{kind:?}");
+            assert_eq!(got[0][40..], s[0][40..], "{kind:?}");
+            // inside the range shard 0 holds the mean
+            let want = mean_reference(&s);
+            for i in 10..40 {
+                assert!((got[0][i] - want[i]).abs() < 1e-5, "{kind:?} idx {i}");
+            }
         }
     }
 

@@ -19,8 +19,9 @@ use std::path::{Path, PathBuf};
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ExecSpec {
     /// OS threads driving the workers' shards. `1` is the sequential
-    /// engine; `>1` runs workers on scoped threads. Any value produces a
-    /// bit-identical trajectory (see `coordinator::worker`).
+    /// engine; `>1` runs workers on the engine's persistent pool. Any
+    /// value produces a bit-identical trajectory (see
+    /// `coordinator::worker`).
     pub worker_threads: usize,
     /// Which allreduce implementation combines worker gradient sums.
     pub collective: CollectiveKind,
@@ -29,11 +30,30 @@ pub struct ExecSpec {
     /// `false` reduces worker-major — still deterministic, one sort
     /// cheaper, different fp rounding.
     pub pin_order: bool,
+    /// Overlap gradient communication with compute (DESIGN.md §10): the
+    /// collective reduces in `bucket_bytes`-sized buckets and the
+    /// wall-clock model charges the overlapped window
+    /// (`max(compute, in-flight comm)` + the exposed tail bucket) instead
+    /// of the serialized compute+comm sum. Bit-identical trajectory
+    /// either way — the knob moves modeled time and comm accounting only.
+    pub overlap: bool,
+    /// Bucket size in **bytes** for the overlapped reduce (f32 gradients
+    /// ⇒ `bucket_bytes / 4` elements per bucket). Ignored when `overlap`
+    /// is off.
+    pub bucket_bytes: usize,
 }
 
 impl Default for ExecSpec {
     fn default() -> Self {
-        Self { worker_threads: 1, collective: CollectiveKind::Ring, pin_order: true }
+        Self {
+            worker_threads: 1,
+            collective: CollectiveKind::Ring,
+            pin_order: true,
+            overlap: false,
+            // 1 MiB — a few buckets over the testbed's ~460 KB gradients,
+            // datacenter-order granularity on real ones.
+            bucket_bytes: 1 << 20,
+        }
     }
 }
 
@@ -280,9 +300,11 @@ impl TrainConfig {
     /// feedback path feeding adaptive cuts: `world_size` (shard
     /// partitioning changes the estimator's small-batch signal) and the
     /// collective (its reduction order sets the mean-gradient bits behind
-    /// `‖G‖²`). `worker_threads` and `pin_order` are deliberately
-    /// excluded — threads are bit-identical by the engine contract, and
-    /// stat-reduction order never feeds back into the schedule. Floats
+    /// `‖G‖²`). `worker_threads`, `pin_order`, `overlap` and
+    /// `bucket_bytes` are deliberately excluded — threads and the
+    /// bucketed overlapped reduce are bit-identical by the engine
+    /// contract, and stat-reduction order never feeds back into the
+    /// schedule. Floats
     /// are rendered as their IEEE-754 bit patterns so the string (and its
     /// FNV hash, [`crate::coordinator::fnv1a64`], stored in every v2
     /// checkpoint) is exact: a resume restores controller state only into
@@ -370,10 +392,20 @@ fn parse_exec(v: &Value) -> Result<ExecSpec> {
         Some(p) => p.as_bool()?,
         None => d.pin_order,
     };
+    let overlap = match v.get("overlap") {
+        Some(o) => o.as_bool()?,
+        None => d.overlap,
+    };
+    let bucket_bytes = v.u64_or("bucket_bytes", d.bucket_bytes as u64)? as usize;
+    if bucket_bytes == 0 {
+        bail!("exec.bucket_bytes must be positive (one bucket needs at least one element)");
+    }
     Ok(ExecSpec {
         worker_threads: v.u64_or("worker_threads", d.worker_threads as u64)? as usize,
         collective,
         pin_order,
+        overlap,
+        bucket_bytes,
     })
 }
 
@@ -468,18 +500,29 @@ mod tests {
     #[test]
     fn exec_spec_parses_and_defaults() {
         let c = TrainConfig::from_json(
-            r#"{"exec": {"worker_threads": 4, "collective": "parallel", "pin_order": false}}"#,
+            r#"{"exec": {"worker_threads": 4, "collective": "parallel", "pin_order": false,
+                         "overlap": true, "bucket_bytes": 65536}}"#,
         )
         .unwrap();
         assert_eq!(
             c.exec,
-            ExecSpec { worker_threads: 4, collective: CollectiveKind::Parallel, pin_order: false }
+            ExecSpec {
+                worker_threads: 4,
+                collective: CollectiveKind::Parallel,
+                pin_order: false,
+                overlap: true,
+                bucket_bytes: 65_536,
+            }
         );
         let d = TrainConfig::from_json("{}").unwrap();
         assert_eq!(d.exec, ExecSpec::default());
         assert_eq!(d.exec.worker_threads, 1);
         assert_eq!(d.exec.collective, CollectiveKind::Ring);
         assert!(d.exec.pin_order);
+        assert!(!d.exec.overlap, "overlap is opt-in");
+        assert_eq!(d.exec.bucket_bytes, 1 << 20);
+        // a zero bucket size can never reduce anything — rejected
+        assert!(TrainConfig::from_json(r#"{"exec": {"bucket_bytes": 0}}"#).is_err());
     }
 
     #[test]
@@ -582,7 +625,13 @@ mod tests {
         let mut j = c.clone();
         j.exec.worker_threads = 8;
         j.exec.pin_order = false;
-        assert_eq!(base, j.schedule_identity(1_000_000), "threads/pin_order never feed back");
+        j.exec.overlap = true;
+        j.exec.bucket_bytes = 4096;
+        assert_eq!(
+            base,
+            j.schedule_identity(1_000_000),
+            "threads/pin_order/overlap/bucket_bytes never feed back"
+        );
     }
 
     #[test]

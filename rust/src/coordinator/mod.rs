@@ -13,11 +13,14 @@
 //!    workers;
 //! 3. each [`worker::Worker`] accumulates fwd+bwd gradients over its
 //!    shard directly into its preallocated flat buffer
-//!    ([`ModelRuntime::grad_step_into`]) — on scoped threads when
-//!    [`crate::config::ExecSpec::worker_threads`] > 1;
+//!    ([`ModelRuntime::grad_step_into`]) — on the engine's persistent
+//!    worker pool when [`crate::config::ExecSpec::worker_threads`] > 1
+//!    (long-lived threads parked between steps, no per-step spawn);
 //! 4. the configured [`crate::collective::Collective`] allreduces the
-//!    worker sums; buffer 0 is scaled to the global mean gradient in
-//!    place;
+//!    worker sums — in deterministic `bucket_bytes` buckets when
+//!    [`crate::config::ExecSpec::overlap`] is on (bit-identical result,
+//!    overlappable wire schedule); buffer 0 is scaled to the global mean
+//!    gradient in place;
 //! 5. apply the optimizer executable (`adamw_step` / `sgd_step` — NSGD is
 //!    sgd with `lr/√(EMA‖ḡ‖²)`, eq. 7);
 //! 6. fold the per-worker shard norms + the global gradient norm into the
@@ -27,7 +30,9 @@
 //!    schedules ignore it);
 //! 7. log metrics (loss, z-loss, grad norm, GNS/`b_crit`/cut events,
 //!    FLOPs, modeled serial time — which charges the collective's payload
-//!    bytes against the wall-clock model's interconnect bandwidth).
+//!    bytes against the wall-clock model's interconnect bandwidth,
+//!    serialized after compute or overlapped per bucket window per
+//!    [`crate::config::ExecSpec::overlap`]).
 //!
 //! The engine's trajectory is bit-identical for any `worker_threads`
 //! (see `worker` module docs); `worker_threads = 1` is the sequential
@@ -148,18 +153,29 @@ impl Trainer {
         }
         let rt = ModelRuntime::load(cfg.model_dir())?;
         if matches!(cfg.schedule, ScheduleSpec::Adaptive { .. }) {
-            // the planner clamps `world` to the microbatch count, so a
-            // base batch that plans to one microbatch would silently
-            // produce a single shard and no GNS signal — reject it here
-            // (batch only grows from the base under the adaptive ramp).
+            // the engine clamps `world` to the microbatch count, so a base
+            // batch planning fewer microbatches than workers would shard
+            // across fewer workers than configured — degrading (at one
+            // microbatch: eliminating) the per-shard contrast the GNS
+            // estimator reads, and starving the controller despite the
+            // world_size ≥ 2 guard above. The batch only grows from the
+            // base under the adaptive ramp, so requiring the *base* batch
+            // to cover every worker keeps the whole run out of the clamp
+            // regime; `train_step` still checks the effective world every
+            // step as a backstop.
             let base_micro =
                 (cfg.base_batch_tokens as f64 / rt.micro_tokens() as f64).round().max(1.0) as u64;
             ensure!(
-                base_micro >= 2,
-                "adaptive schedule needs base_batch_tokens ≥ 2 microbatches ({} tokens each) \
-                 so the batch shards across workers; got {} tokens",
+                base_micro >= cfg.world_size as u64,
+                "adaptive schedule needs base_batch_tokens ≥ world_size microbatches \
+                 ({} tokens each) so every worker holds a gradient shard for the GNS \
+                 estimator; got {} tokens = {} microbatch(es) across {} workers — the \
+                 engine would silently run only {} worker(s)",
                 rt.micro_tokens(),
-                cfg.base_batch_tokens
+                cfg.base_batch_tokens,
+                base_micro,
+                cfg.world_size,
+                base_micro.min(cfg.world_size as u64)
             );
         }
         let total = cfg.resolve_total_tokens(rt.manifest.non_embedding_params);
@@ -203,7 +219,7 @@ impl Trainer {
         state.phase = point.phase;
         let n_micro = self.plan_microbatches(point.batch_tokens);
         let batch_tokens = n_micro * self.rt.micro_tokens();
-        let world = self.cfg.world_size.max(1).min(n_micro as usize);
+        let world = self.cfg.world_size.max(1);
         let b = self.rt.microbatch();
 
         // --- plan: the loader stays on this thread, so the token stream
@@ -219,6 +235,25 @@ impl Trainer {
         // buffers, the configured collective combines the sums -----------
         let ctx = StepCtx { rt: &self.rt, params: &state.params, zcoef: self.cfg.zcoef as f32 };
         let out = self.engine.execute(&ctx, world, micro)?;
+        if out.world < world && matches!(self.cfg.schedule, ScheduleSpec::Adaptive { .. }) {
+            // the engine had to clamp the world to the microbatch count:
+            // fewer gradient shards than configured degrade the GNS
+            // estimator's contrast, and at one shard the signal the
+            // adaptive controller runs on vanishes entirely. Silently
+            // continuing would let the batch ramp starve mid-run (the
+            // pre-fix behavior); fail loudly instead — the startup guard
+            // makes this unreachable for well-formed configs, so reaching
+            // it means the schedule produced a batch below the base.
+            bail!(
+                "step {}: batch of {} microbatch(es) cannot shard across the configured \
+                 world_size = {} (effective world {}); the GNS estimator would silently \
+                 lose shard contrast mid-ramp — raise base_batch_tokens or lower world_size",
+                state.step + 1,
+                n_micro,
+                world,
+                out.world
+            );
+        }
         let mean_grad = self.engine.mean_grad();
         let gnorm_sq: f64 = mean_grad.iter().map(|&x| (x as f64) * (x as f64)).sum();
 
@@ -276,7 +311,11 @@ impl Trainer {
         let tokens_before = state.tokens;
         state.tokens += batch_tokens;
         state.flops += self.rt.manifest.flops_per_token as f64 * batch_tokens as f64;
-        state.serial_time += self.wall.step_time_comm(batch_tokens, out.comm.bytes_moved);
+        state.serial_time += if self.cfg.exec.overlap {
+            self.wall.step_time_overlapped(batch_tokens, &out.comm)
+        } else {
+            self.wall.step_time_comm(batch_tokens, out.comm.bytes_moved)
+        };
         // feed the smoothed GNS back at the *end-of-step* token count —
         // the value the next `query` call will see.
         if let Some(b) = b_crit {
@@ -293,6 +332,7 @@ impl Trainer {
             flops: state.flops,
             serial_time: state.serial_time,
             comm_bytes: out.comm.bytes_moved,
+            comm_buckets: out.comm.buckets,
             gns: gns_raw,
             b_crit,
             cuts,
@@ -419,7 +459,8 @@ impl Trainer {
             self.schedule.query(ck.tokens).phase
         };
         let gns = match ck.gns {
-            Some(s) => GnsEstimator::from_state(s),
+            Some(s) => GnsEstimator::from_state(s)
+                .with_context(|| format!("restoring GNS estimator state from {path:?}"))?,
             None => GnsEstimator::new(self.cfg.gns_ema()),
         };
         Ok(Some(TrainState {

@@ -1,17 +1,27 @@
-//! The parallel step engine (DESIGN.md §2): [`Worker`]s run microbatch
+//! The parallel step engine (DESIGN.md §2, §10): [`Worker`]s run microbatch
 //! shards against preallocated flat gradient buffers — on the calling
-//! thread (`worker_threads = 1`, the sequential engine) or on scoped
-//! threads — then a pluggable [`Collective`] combines the per-worker sums
+//! thread (`worker_threads = 1`, the sequential engine) or on a
+//! **persistent, channel-driven worker pool** owned by the engine
+//! (long-lived threads reused across steps; no per-step spawn on the hot
+//! path) — then a pluggable [`Collective`] combines the per-worker sums
 //! and buffer 0 is scaled to the mean gradient in place (zero-copy: no
 //! `Vec<Vec<f32>>` per microbatch, no result vector per step).
 //!
+//! With [`ExecSpec::overlap`] the collective runs in **bucketed** mode:
+//! the flat gradient reduces in deterministic `bucket_bytes`-sized
+//! buckets — the wire schedule a real cluster pipelines behind compute —
+//! and the wall-clock model charges the overlapped window instead of the
+//! serialized compute+comm sum (`WallClockModel::step_time_overlapped`).
+//!
 //! Bit-exactness contract: the microbatch→worker assignment is the fixed
 //! round-robin `index % world`, each worker accumulates its shard in
-//! global microbatch order, the collective is deterministic, and (with
+//! global microbatch order, the collective is deterministic **and
+//! bucketing-invariant** (see `collective` module docs), and (with
 //! [`ExecSpec::pin_order`]) scalar stats reduce in global microbatch
 //! order — so the engine's `(ce, gnorm_sq, params)` trajectory is
-//! bit-identical for any `worker_threads`, and `worker_threads = 1`
-//! reproduces the historical sequential coordinator exactly.
+//! bit-identical for any `worker_threads`, any `overlap`/`bucket_bytes`
+//! setting, and `worker_threads = 1` with overlap off reproduces the
+//! historical sequential coordinator exactly.
 //!
 //! The engine is decoupled from PJRT through [`GradSource`], so the
 //! threading/reduction machinery is property-tested and benchmarked
@@ -21,6 +31,7 @@
 use crate::collective::{Collective, CollectiveStats};
 use crate::config::ExecSpec;
 use anyhow::{anyhow, ensure, Result};
+use std::sync::mpsc;
 
 /// Scalar statistics from one microbatch fwd+bwd.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -74,13 +85,123 @@ impl Worker {
     }
 
     /// Run this worker's shard in assignment (global-index) order,
-    /// accumulating gradients into `buf`.
-    fn run_shard<S: GradSource>(&mut self, src: &S, buf: &mut [f32]) -> Result<()> {
+    /// accumulating gradients into `buf`. `?Sized` so the pool can drive
+    /// it through a `&dyn GradSource`.
+    fn run_shard<S: GradSource + ?Sized>(&mut self, src: &S, buf: &mut [f32]) -> Result<()> {
         for m in &self.shard {
             let s = src.accumulate(&m.tokens, &m.targets, buf)?;
             self.stats.push((m.index, s));
         }
         Ok(())
+    }
+}
+
+/// One dispatched unit of step work: a contiguous chunk of workers and
+/// their gradient buffers, to be run in worker-id order against the
+/// lifetime-erased gradient source.
+///
+/// The raw pointers/erased lifetime are sound because
+/// [`StepEngine::execute`] blocks until every dispatched job has signalled
+/// `done` (or provably cannot touch its pointers again — see the SAFETY
+/// notes at the dispatch and drain sites), so the borrows they stand for
+/// strictly outlive every access.
+struct Job {
+    workers: *mut Worker,
+    bufs: *mut Vec<f32>,
+    count: usize,
+    src: &'static dyn GradSource,
+    done: mpsc::Sender<Result<()>>,
+}
+
+// SAFETY: the pointers reference engine-owned chunks that no other thread
+// (including the dispatching one, which is parked on the done channel)
+// touches while the job is live; `src` is `Sync` and only shared by `&`.
+unsafe impl Send for Job {}
+
+impl Job {
+    fn run(&self) -> Result<()> {
+        // SAFETY: `count` workers/buffers starting at the chunk pointers
+        // were exclusively borrowed for this job by `execute`, which does
+        // not reuse them (or return) until `done` is signalled; sibling
+        // jobs cover disjoint chunks (`chunks_mut`).
+        let workers = unsafe { std::slice::from_raw_parts_mut(self.workers, self.count) };
+        let bufs = unsafe { std::slice::from_raw_parts_mut(self.bufs, self.count) };
+        for (w, buf) in workers.iter_mut().zip(bufs.iter_mut()) {
+            w.run_shard(self.src, buf)?;
+        }
+        Ok(())
+    }
+}
+
+/// One long-lived pool thread: its job channel plus the join handle.
+struct PoolThread {
+    tx: Option<mpsc::Sender<Job>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PoolThread {
+    fn spawn(id: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let handle = std::thread::Builder::new()
+            .name(format!("seesaw-pool-{id}"))
+            .spawn(move || pool_thread_main(rx))
+            .expect("failed to spawn step-engine pool thread");
+        Self { tx: Some(tx), handle: Some(handle) }
+    }
+
+    fn is_alive(&self) -> bool {
+        self.handle.as_ref().is_some_and(|h| !h.is_finished())
+    }
+}
+
+/// Pool thread main loop: park on the job channel, run each job behind a
+/// panic guard (a poisoned [`GradSource`] must not take the pool down),
+/// signal the result, park again. Exits when the engine drops the sender.
+fn pool_thread_main(rx: mpsc::Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job.run()))
+            .unwrap_or_else(|_| Err(anyhow!("worker thread panicked")));
+        let _ = job.done.send(result);
+    }
+}
+
+/// The persistent worker pool (DESIGN.md §10): threads are spawned on the
+/// first multi-threaded step, then parked on their channels between steps
+/// — replacing the per-step `std::thread::scope` spawn, whose setup cost
+/// scaled with exactly the large-batch steps Seesaw ramps into.
+#[derive(Default)]
+struct WorkerPool {
+    threads: Vec<PoolThread>,
+}
+
+impl WorkerPool {
+    /// Grow to at least `n` live threads, respawning any that died (a
+    /// thread only dies if the channel machinery itself failed — job
+    /// panics are caught inside the thread).
+    fn ensure(&mut self, n: usize) {
+        for (i, t) in self.threads.iter_mut().enumerate() {
+            if i < n && !t.is_alive() {
+                *t = PoolThread::spawn(i);
+            }
+        }
+        while self.threads.len() < n {
+            self.threads.push(PoolThread::spawn(self.threads.len()));
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // close every channel first so all threads leave their recv loop,
+        // then join — no thread can be blocked sending to another.
+        for t in &mut self.threads {
+            t.tx = None;
+        }
+        for t in &mut self.threads {
+            if let Some(h) = t.handle.take() {
+                let _ = h.join();
+            }
+        }
     }
 }
 
@@ -90,28 +211,38 @@ impl Worker {
 pub struct StepOutput {
     /// Microbatches this step reduced over.
     pub n_micro: u64,
+    /// The **effective** data-parallel world this step ran with: the
+    /// requested world clamped to the microbatch count (a worker cannot
+    /// shard less than one microbatch). When this is below the requested
+    /// world the GNS estimator sees fewer shards than configured — and at
+    /// 1 no shards at all — so the coordinator checks it instead of
+    /// letting the signal silently starve (the mid-ramp clamp bug).
+    pub world: usize,
     /// Σ ce over microbatches (reduction order per [`ExecSpec::pin_order`]).
     pub ce_sum: f64,
     /// Σ mean(lse²) over microbatches.
     pub zsq_sum: f64,
-    /// Stats of the gradient collective (zero when `world == 1`).
+    /// Stats of the gradient collective (zero when `world == 1`),
+    /// including bucket accounting when [`ExecSpec::overlap`] is on.
     pub comm: CollectiveStats,
     /// `‖sum_w‖²` of each worker's accumulated (pre-allreduce) gradient,
     /// read for free off the buffers the collective is about to reduce —
     /// the small-batch half of the gradient-noise-scale estimator. Empty
-    /// when `world == 1` (no contrast to estimate from, so the pass is
-    /// skipped).
+    /// when the effective `world == 1` (no contrast to estimate from, so
+    /// the pass is skipped). Moved out of the engine's reusable buffer
+    /// (`std::mem::take`), not cloned.
     pub shard_sqnorms: Vec<f64>,
     /// Microbatches each worker accumulated (round-robin counts), parallel
     /// to `shard_sqnorms`.
     pub shard_micro: Vec<u64>,
 }
 
-/// The step engine: owns workers, their preallocated gradient buffers and
-/// the configured collective; reused across steps so the hot path does no
-/// per-step allocation proportional to the gradient size (beyond the
-/// microbatch plan itself, only O(world) scalar metadata — the shard
-/// norms/counts in [`StepOutput`] — is allocated per step).
+/// The step engine: owns workers, their preallocated gradient buffers,
+/// the configured collective and the persistent thread pool; reused
+/// across steps so the hot path neither spawns threads nor allocates
+/// proportional to the gradient size (beyond the microbatch plan itself,
+/// only O(world) scalar metadata — the shard norms/counts in
+/// [`StepOutput`] — leaves the engine per step).
 pub struct StepEngine {
     /// Execution knobs this engine was built with.
     pub exec: ExecSpec,
@@ -119,14 +250,17 @@ pub struct StepEngine {
     workers: Vec<Worker>,
     /// Flat per-worker gradient buffers, parallel to `workers`.
     bufs: Vec<Vec<f32>>,
-    /// Reusable per-worker ‖sum‖² buffer (refilled each step, no per-step
-    /// allocation).
+    /// Per-worker ‖sum‖² buffer; refilled each step and handed to the
+    /// caller via `std::mem::take` (one O(world) vec per step, no copy).
     sqnorms: Vec<f64>,
+    /// Long-lived worker threads, spawned lazily on the first step with
+    /// `worker_threads > 1` and parked between steps.
+    pool: WorkerPool,
 }
 
 impl StepEngine {
     /// Engine with the given execution knobs; buffers grow lazily on the
-    /// first step.
+    /// first step, pool threads on the first multi-threaded step.
     pub fn new(exec: ExecSpec) -> Self {
         Self {
             collective: exec.collective.build(),
@@ -134,6 +268,7 @@ impl StepEngine {
             workers: Vec::new(),
             bufs: Vec::new(),
             sqnorms: Vec::new(),
+            pool: WorkerPool::default(),
         }
     }
 
@@ -142,12 +277,21 @@ impl StepEngine {
         self.collective.name()
     }
 
+    /// Live pool threads (0 until the first step with `worker_threads > 1`
+    /// dispatches work; they then persist across steps).
+    pub fn pool_threads(&self) -> usize {
+        self.pool.threads.iter().filter(|t| t.is_alive()).count()
+    }
+
     /// Execute one optimizer step: shard `micro` round-robin over `world`
-    /// workers, run every shard (on scoped threads when
-    /// `exec.worker_threads > 1`), allreduce the worker sums, and scale
-    /// buffer 0 to the mean gradient over microbatches in place.
+    /// workers, run every shard (on the persistent pool when
+    /// `exec.worker_threads > 1`), allreduce the worker sums (bucketed
+    /// when `exec.overlap`), and scale buffer 0 to the mean gradient over
+    /// microbatches in place.
     ///
     /// `micro` must be in increasing `index` order (the loader order).
+    /// `world` is clamped to the microbatch count; the effective value is
+    /// reported in [`StepOutput::world`].
     pub fn execute<S: GradSource>(
         &mut self,
         src: &S,
@@ -186,25 +330,76 @@ impl StepEngine {
                 w.run_shard(src, buf)?;
             }
         } else {
-            // contiguous worker→thread chunks; each thread runs its
-            // workers in id order, so per-worker work (and therefore each
-            // buffer's accumulation order) is identical to threads == 1.
+            // contiguous worker→thread chunks; each chunk runs its workers
+            // in id order, so per-worker work (and therefore each buffer's
+            // accumulation order) is identical to threads == 1. Which pool
+            // thread runs which chunk never matters.
             let per = world.div_ceil(threads);
-            std::thread::scope(|scope| -> Result<()> {
-                let mut handles = Vec::new();
-                for (wchunk, bchunk) in active.chunks_mut(per).zip(bufs.chunks_mut(per)) {
-                    handles.push(scope.spawn(move || -> Result<()> {
-                        for (w, buf) in wchunk.iter_mut().zip(bchunk.iter_mut()) {
-                            w.run_shard(src, buf)?;
+            let n_chunks = world.div_ceil(per);
+            self.pool.ensure(n_chunks);
+            // SAFETY: only the *lifetime* is erased; the reference stays a
+            // plain `&S`. Every job that holds it signals `done` (or drops
+            // the sender) before `execute` returns — enforced by the drain
+            // loop below — so no pool thread can touch `src` (or the
+            // worker/buffer chunks) after this call ends.
+            let src_dyn: &dyn GradSource = src;
+            let src_static: &'static dyn GradSource =
+                unsafe { std::mem::transmute::<&dyn GradSource, &'static dyn GradSource>(src_dyn) };
+            let (done_tx, done_rx) = mpsc::channel::<Result<()>>();
+            let mut sent = 0usize;
+            let mut dispatch_err = None;
+            for (i, (wchunk, bchunk)) in
+                active.chunks_mut(per).zip(bufs.chunks_mut(per)).enumerate()
+            {
+                let job = Job {
+                    workers: wchunk.as_mut_ptr(),
+                    bufs: bchunk.as_mut_ptr(),
+                    count: wchunk.len(),
+                    src: src_static,
+                    done: done_tx.clone(),
+                };
+                // a failed send returns the job unrun (its pointers die
+                // with it); stop dispatching but still drain what was sent
+                let delivered = match self.pool.threads[i].tx.as_ref() {
+                    Some(tx) => tx.send(job).is_ok(),
+                    None => false,
+                };
+                if delivered {
+                    sent += 1;
+                } else {
+                    dispatch_err = Some(anyhow!("worker pool thread unavailable"));
+                    break;
+                }
+            }
+            drop(done_tx);
+            // drain ALL dispatched jobs before touching engine state again
+            // (or returning): this is what upholds the Job SAFETY contract
+            // even on early errors.
+            let mut first_err = dispatch_err;
+            let mut received = 0usize;
+            while received < sent {
+                match done_rx.recv() {
+                    Ok(res) => {
+                        received += 1;
+                        if let Err(e) = res {
+                            if first_err.is_none() {
+                                first_err = Some(e);
+                            }
                         }
-                        Ok(())
-                    }));
+                    }
+                    // disconnect ⇒ every job's `done` handle is dropped ⇒
+                    // no job can still touch its pointers: safe to stop.
+                    Err(_) => {
+                        if first_err.is_none() {
+                            first_err = Some(anyhow!("worker pool thread died"));
+                        }
+                        break;
+                    }
                 }
-                for h in handles {
-                    h.join().map_err(|_| anyhow!("worker thread panicked"))??;
-                }
-                Ok(())
-            })?;
+            }
+            if let Some(e) = first_err {
+                return Err(e);
+            }
         }
 
         let (ce_sum, zsq_sum) = if self.exec.pin_order {
@@ -239,8 +434,16 @@ impl StepEngine {
             // estimator's small-batch signal) before the reduce destroys
             // the per-worker sums, then averages them; buffer 0 is
             // rescaled to the mean over microbatches:
-            // mean_g = (Σ_w sum_w)/n = avg_w·W/n.
-            let stats = self.collective.allreduce_mean_with_sqnorms(bufs, &mut self.sqnorms);
+            // mean_g = (Σ_w sum_w)/n = avg_w·W/n. With overlap on, the
+            // reduce runs bucket-by-bucket — bit-identical result, but the
+            // stats describe the bucketed wire schedule the wall-clock
+            // model overlaps with compute.
+            let stats = if self.exec.overlap {
+                let bucket_elems = (self.exec.bucket_bytes / 4).max(1);
+                self.collective.allreduce_mean_bucketed(bufs, bucket_elems, &mut self.sqnorms)
+            } else {
+                self.collective.allreduce_mean_with_sqnorms(bufs, &mut self.sqnorms)
+            };
             let scale = world as f32 / n_micro as f32;
             for x in &mut bufs[0] {
                 *x *= scale;
@@ -261,10 +464,11 @@ impl StepEngine {
 
         Ok(StepOutput {
             n_micro,
+            world,
             ce_sum,
             zsq_sum,
             comm,
-            shard_sqnorms: self.sqnorms.clone(),
+            shard_sqnorms: std::mem::take(&mut self.sqnorms),
             shard_micro,
         })
     }
@@ -323,7 +527,7 @@ mod tests {
                     let mut e = StepEngine::new(ExecSpec {
                         worker_threads: threads,
                         collective: kind,
-                        pin_order: true,
+                        ..ExecSpec::default()
                     });
                     let src = FakeSource { elems: 257 };
                     let out = e.execute(&src, world, micros(8)).unwrap();
@@ -340,12 +544,104 @@ mod tests {
     }
 
     #[test]
+    fn pool_persists_and_stays_bit_identical_across_steps() {
+        // the tentpole regression: one engine reused across many steps
+        // (the production shape) must match fresh-engine-per-step output
+        // bit for bit, and must not spawn threads per step — the pool is
+        // created once and parked between steps.
+        let src = FakeSource { elems: 513 };
+        let mut reused = StepEngine::new(ExecSpec { worker_threads: 4, ..ExecSpec::default() });
+        assert_eq!(reused.pool_threads(), 0, "pool is lazy");
+        for step in 0..6u64 {
+            let n = 3 + step; // varying microbatch counts re-plan the shards
+            let out_reused = reused.execute(&src, 4, micros(n)).unwrap();
+            let grad_reused = reused.mean_grad().to_vec();
+            let mut fresh = StepEngine::new(ExecSpec { worker_threads: 4, ..ExecSpec::default() });
+            let out_fresh = fresh.execute(&src, 4, micros(n)).unwrap();
+            assert_eq!(out_reused, out_fresh, "step {step}");
+            assert_eq!(grad_reused, fresh.mean_grad(), "step {step} mean grad");
+        }
+        let threads_after_first = reused.pool_threads();
+        assert!(threads_after_first >= 1, "pool must have spawned");
+        reused.execute(&src, 4, micros(8)).unwrap();
+        assert_eq!(reused.pool_threads(), threads_after_first, "pool is reused, not respawned");
+    }
+
+    #[test]
+    fn grad_source_errors_propagate_and_leave_the_engine_usable() {
+        /// Fails on a chosen microbatch index — exercising the pool's
+        /// error path (and its drain-before-return discipline).
+        struct FlakySource {
+            fail_on: i32,
+        }
+        impl GradSource for FlakySource {
+            fn grad_elements(&self) -> usize {
+                32
+            }
+            fn accumulate(
+                &self,
+                tokens: &[i32],
+                _targets: &[i32],
+                sink: &mut [f32],
+            ) -> Result<MicroStats> {
+                if tokens.first() == Some(&self.fail_on) {
+                    anyhow::bail!("synthetic microbatch failure");
+                }
+                sink.iter_mut().for_each(|x| *x += 1.0);
+                Ok(MicroStats::default())
+            }
+        }
+        let mut e = StepEngine::new(ExecSpec { worker_threads: 4, ..ExecSpec::default() });
+        // micros(6) carries tokens i*3+1 — index 2 has token 7
+        let err = e.execute(&FlakySource { fail_on: 7 }, 4, micros(6)).unwrap_err();
+        assert!(err.to_string().contains("synthetic"), "{err}");
+        // the engine (and its pool) must remain usable after the failure
+        let ok = e.execute(&FlakySource { fail_on: i32::MIN }, 4, micros(6)).unwrap();
+        assert_eq!(ok.n_micro, 6);
+        assert!(e.mean_grad().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn overlap_mode_is_bit_identical_to_serialized_reduce() {
+        // §10 contract at engine level: overlap on, any bucket size ⇒
+        // identical (stats, sqnorms, mean grad) bits; only the comm
+        // bucket accounting differs.
+        for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
+            let src = FakeSource { elems: 1031 };
+            let mut base = StepEngine::new(ExecSpec { collective: kind, ..ExecSpec::default() });
+            let out_base = base.execute(&src, 4, micros(8)).unwrap();
+            let grad_base = base.mean_grad().to_vec();
+            for bucket_bytes in [4usize, 256, 1024, 4096, 1 << 20] {
+                let mut e = StepEngine::new(ExecSpec {
+                    collective: kind,
+                    overlap: true,
+                    bucket_bytes,
+                    worker_threads: 3,
+                    ..ExecSpec::default()
+                });
+                let out = e.execute(&src, 4, micros(8)).unwrap();
+                assert_eq!(out.ce_sum.to_bits(), out_base.ce_sum.to_bits(), "{kind:?}");
+                assert_eq!(out.shard_sqnorms, out_base.shard_sqnorms, "{kind:?} b={bucket_bytes}");
+                assert!(
+                    e.mean_grad().iter().zip(&grad_base).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{kind:?} bucket_bytes={bucket_bytes}: mean grad must be bit-identical"
+                );
+                // same total payload, bucketed accounting
+                assert_eq!(out.comm.bytes_moved, out_base.comm.bytes_moved, "{kind:?}");
+                let want_buckets = 1031usize.div_ceil((bucket_bytes / 4).max(1)) as u32;
+                assert_eq!(out.comm.buckets, want_buckets, "{kind:?} b={bucket_bytes}");
+            }
+        }
+    }
+
+    #[test]
     fn single_worker_mean_matches_direct_average() {
         let src = FakeSource { elems: 64 };
         let mut e = StepEngine::new(ExecSpec::default());
         let n = 5u64;
         let out = e.execute(&src, 1, micros(n)).unwrap();
         assert_eq!(out.n_micro, n);
+        assert_eq!(out.world, 1);
         assert_eq!(out.comm, CollectiveStats::default());
         // oracle: accumulate all microbatches into one buffer, divide by n
         let mut want = vec![0f32; 64];
@@ -399,11 +695,18 @@ mod tests {
     }
 
     #[test]
-    fn world_larger_than_microbatches_is_clamped() {
+    fn world_larger_than_microbatches_is_clamped_and_reported() {
         let src = FakeSource { elems: 16 };
         let mut e = StepEngine::new(ExecSpec { worker_threads: 8, ..ExecSpec::default() });
         let out = e.execute(&src, 8, micros(3)).unwrap();
         assert_eq!(out.n_micro, 3);
+        assert_eq!(out.world, 3, "the effective world must be surfaced, not hidden");
         assert!(e.mean_grad().iter().all(|x| x.is_finite()));
+        // the degenerate regime behind the mid-ramp GNS starvation bug:
+        // one microbatch collapses to one worker and an empty norm tap —
+        // visible to the caller through `world`.
+        let out1 = e.execute(&src, 8, micros(1)).unwrap();
+        assert_eq!(out1.world, 1);
+        assert!(out1.shard_sqnorms.is_empty(), "no shard contrast survives the collapse");
     }
 }

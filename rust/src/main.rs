@@ -4,7 +4,8 @@
 //! seesaw train [--config run.json] [--model s] [--schedule seesaw] [--alpha 1.1]
 //!              [--lr 3e-3] [--batch-tokens 4096] [--total-tokens N]
 //!              [--world-size W] [--worker-threads T] [--collective ring|parallel]
-//!              [--pin-order true|false] [--variant ref|pallas] [--out-csv path]
+//!              [--pin-order true|false] [--overlap true|false] [--bucket-bytes N]
+//!              [--variant ref|pallas] [--out-csv path]
 //!              [--gns-ema 0.9] [--hysteresis TOKENS]   (with --schedule adaptive)
 //!              [--checkpoint-dir DIR] [--checkpoint-every STEPS]
 //! seesaw exp <figure1|table1|figure2|figure3|figure4|figure5|figure6|
@@ -107,6 +108,13 @@ fn train(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow!("unknown collective `{s}` (ring|parallel)"))?;
     }
     cfg.exec.pin_order = args.bool_or("pin-order", cfg.exec.pin_order)?;
+    cfg.exec.overlap = args.bool_or("overlap", cfg.exec.overlap)?;
+    if let Some(x) = args.u64_opt("bucket-bytes")? {
+        if x == 0 {
+            bail!("--bucket-bytes must be positive (one bucket needs at least one element)");
+        }
+        cfg.exec.bucket_bytes = x as usize;
+    }
     if let Some(p) = args.str_opt("out-csv") {
         cfg.out_csv = Some(p.into());
     }
@@ -118,14 +126,19 @@ fn train(args: &Args) -> Result<()> {
     }
     let mut t = Trainer::new(cfg)?;
     println!(
-        "model={} params={} budget={} tokens, schedule={:?}, world={}, threads={}, collective={}",
+        "model={} params={} budget={} tokens, schedule={:?}, world={}, threads={}, collective={}{}",
         t.rt.manifest.model.name,
         t.rt.manifest.param_count,
         t.total_tokens,
         t.cfg.schedule,
         t.cfg.world_size,
         t.cfg.exec.worker_threads,
-        t.engine.collective_name()
+        t.engine.collective_name(),
+        if t.cfg.exec.overlap {
+            format!(" (overlapped, {} B buckets)", t.cfg.exec.bucket_bytes)
+        } else {
+            String::new()
+        }
     );
     let log = t.run()?;
     println!(

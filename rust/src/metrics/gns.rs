@@ -80,8 +80,33 @@ impl GnsEstimator {
     /// Rebuild an estimator from a checkpointed snapshot. The resumed
     /// estimator's future outputs are bit-identical to one that was never
     /// interrupted (all state is in the snapshot).
-    pub fn from_state(s: GnsState) -> Self {
-        Self { ema: s.ema, ema_s: s.ema_s, ema_g2: s.ema_g2, observations: s.observations }
+    ///
+    /// The retention is **validated**, not clamped like
+    /// [`GnsEstimator::new`]: a constructor clamp fixes a bad config
+    /// once, but silently "fixing" a checkpointed blob would resume a
+    /// *different* estimator than the one that was saved — and a blob
+    /// with `ema = 1.0` (or worse) would freeze the EMAs forever, dead
+    /// GNS signal with no error anywhere. Corrupt state fails loudly
+    /// instead.
+    pub fn from_state(s: GnsState) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            (0.0..1.0).contains(&s.ema),
+            "GNS snapshot has EMA retention {} outside [0, 1): at 1.0 the estimator would \
+             never fold new evidence in again (frozen EMAs after resume); the checkpoint \
+             is corrupt or was written by an incompatible build",
+            s.ema
+        );
+        anyhow::ensure!(
+            s.ema_s.is_finite() && s.ema_g2.is_finite(),
+            "GNS snapshot carries non-finite EMAs (tr(Σ)={}, ‖G‖²={}) — corrupt checkpoint",
+            s.ema_s,
+            s.ema_g2
+        );
+        // deliberately NO sign constraint: the unbiased per-step s/‖G‖²
+        // estimates go negative under early-training noise (module docs),
+        // so negative EMAs are legitimate reachable state a checkpoint
+        // must round-trip; `ratio` already refuses to *consume* them.
+        Ok(Self { ema: s.ema, ema_s: s.ema_s, ema_g2: s.ema_g2, observations: s.observations })
     }
 
     /// Fold in one optimizer step's evidence.
@@ -277,7 +302,7 @@ mod tests {
                 first.observe(&[a, b], &[1, 1], 1, g);
             }
         }
-        let mut resumed = GnsEstimator::from_state(first.state());
+        let mut resumed = GnsEstimator::from_state(first.state()).unwrap();
         for &(a, b, g) in &feed[2..] {
             resumed.observe(&[a, b], &[1, 1], 1, g);
         }
@@ -287,6 +312,29 @@ mod tests {
             (Some(x), Some(y)) => assert_eq!(x.to_bits(), y.to_bits()),
             (a, b) => assert_eq!(a, b),
         }
+    }
+
+    #[test]
+    fn from_state_rejects_out_of_range_or_non_finite_snapshots() {
+        // ema = 1.0 would freeze the EMAs forever after resume — the bug
+        // the restore-side validation exists for. (`new` clamps because a
+        // config typo should degrade gracefully; a *snapshot* outside the
+        // invariant means corruption and must fail loudly.)
+        let good = GnsState { ema: 0.9, ema_s: 1.0, ema_g2: 2.0, observations: 3 };
+        assert!(GnsEstimator::from_state(good).is_ok());
+        for bad_ema in [1.0, 1.5, -0.1, f64::NAN] {
+            let err = GnsEstimator::from_state(GnsState { ema: bad_ema, ..good }).unwrap_err();
+            assert!(err.to_string().contains("[0, 1)"), "ema={bad_ema}: {err}");
+        }
+        for (s, g2) in [(f64::INFINITY, 1.0), (1.0, f64::NAN)] {
+            let bad = GnsEstimator::from_state(GnsState { ema_s: s, ema_g2: g2, ..good });
+            assert!(bad.is_err(), "non-finite EMAs must be rejected");
+        }
+        // negative EMAs are legitimate reachable state (early-training
+        // noise makes the unbiased estimates negative) — they must
+        // round-trip, not be rejected as corrupt
+        let noisy = GnsState { ema_s: -6.0, ema_g2: -0.5, ..good };
+        assert!(GnsEstimator::from_state(noisy).is_ok(), "negative EMAs are valid state");
     }
 
     #[test]

@@ -36,6 +36,10 @@ pub struct StepRecord {
     /// Allreduce payload bytes this step's collective moved (0 when
     /// `world_size == 1`).
     pub comm_bytes: u64,
+    /// Buckets the payload was reduced in: 1 for a whole-vector reduce,
+    /// > 1 under the overlapped bucketed mode (`exec.overlap`), 0 when no
+    /// communication happened.
+    pub comm_buckets: u32,
     /// Raw per-step gradient-noise-scale estimate `tr(Σ)/‖G‖²` in tokens
     /// (`None` when undefined — one worker, or noise swamping the signal).
     pub gns: Option<f64>,
@@ -116,12 +120,12 @@ impl RunLog {
 
 /// Column header of the per-step run CSV.
 pub const CSV_HEADER: &str =
-    "run,step,tokens,lr,batch_tokens,ce,zloss,gnorm_sq,flops,serial_time,comm_bytes,gns,b_crit,cuts,val_ce";
+    "run,step,tokens,lr,batch_tokens,ce,zloss,gnorm_sq,flops,serial_time,comm_bytes,comm_buckets,gns,b_crit,cuts,val_ce";
 
 fn write_csv_row(f: &mut impl Write, run: &str, r: &StepRecord) -> std::io::Result<()> {
     writeln!(
         f,
-        "{},{},{},{:.6e},{},{:.6},{:.6},{:.6e},{:.6e},{:.6},{},{},{},{},{}",
+        "{},{},{},{:.6e},{},{:.6},{:.6},{:.6e},{:.6e},{:.6},{},{},{},{},{},{}",
         run,
         r.step,
         r.tokens,
@@ -133,6 +137,7 @@ fn write_csv_row(f: &mut impl Write, run: &str, r: &StepRecord) -> std::io::Resu
         r.flops,
         r.serial_time,
         r.comm_bytes,
+        r.comm_buckets,
         r.gns.map(|v| format!("{v:.3}")).unwrap_or_default(),
         r.b_crit.map(|v| format!("{v:.3}")).unwrap_or_default(),
         if r.cuts > 0 { r.cuts.to_string() } else { String::new() },
@@ -193,6 +198,7 @@ mod tests {
             flops: 1e9,
             serial_time: step as f64,
             comm_bytes: 4096,
+            comm_buckets: 1,
             gns: (step % 2 == 1).then_some(1234.5),
             b_crit: (step % 2 == 1).then_some(2345.6),
             cuts: if step == 2 { 2 } else { 0 },

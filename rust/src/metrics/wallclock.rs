@@ -7,7 +7,23 @@
 //! a cluster of `devices` workers each processing up to `tokens_per_device`
 //! tokens per step at `step_latency` seconds; batches beyond total
 //! capacity serialize into multiple waves (the regime where ramping stops
-//! helping — the guard Figure 3 probes from the optimization side).
+//! helping — the guard Figure 3 probes from the optimization side). Every
+//! wave is a full synchronous data-parallel step, so every wave pays its
+//! own gradient reduce.
+//!
+//! Two communication charges exist (DESIGN.md §10):
+//!
+//! * **serialized** ([`WallClockModel::step_time_comm`]) — compute, then
+//!   the whole allreduce payload, per wave;
+//! * **overlapped** ([`WallClockModel::step_time_overlapped`]) — the
+//!   bucketed wire schedule: bucket `k`'s reduce starts as soon as the
+//!   leaves feeding it are done (readiness spread uniformly across the
+//!   wave's compute) and pipelines behind the bucket before it
+//!   (double-buffering: one bucket accumulating while one is in flight),
+//!   so per-wave time is the pipeline's finish — at best
+//!   `max(compute, comm)` plus the exposed non-overlappable tail bucket.
+
+use crate::collective::CollectiveStats;
 
 /// The modeled cluster: device count/capacity, per-step latency and
 /// interconnect bandwidth (see module docs).
@@ -36,17 +52,60 @@ impl Default for WallClockModel {
 }
 
 impl WallClockModel {
-    /// Seconds of compute one optimizer step of `batch_tokens` costs.
-    pub fn step_time(&self, batch_tokens: u64) -> f64 {
+    /// Compute waves one optimizer step of `batch_tokens` serializes into.
+    pub fn waves(&self, batch_tokens: u64) -> u64 {
         let capacity = self.devices * self.tokens_per_device;
-        let waves = batch_tokens.div_ceil(capacity).max(1);
-        waves as f64 * self.step_latency
+        batch_tokens.div_ceil(capacity).max(1)
     }
 
-    /// Seconds for one step including its allreduce: compute waves plus
-    /// the collective's payload over the modeled interconnect.
+    /// Seconds of compute one optimizer step of `batch_tokens` costs.
+    pub fn step_time(&self, batch_tokens: u64) -> f64 {
+        self.waves(batch_tokens) as f64 * self.step_latency
+    }
+
+    /// Seconds for one step including its allreduce, fully serialized:
+    /// every compute wave is a synchronous data-parallel step, so every
+    /// wave pays its own reduce of the full payload (charging the payload
+    /// once per *step* undercounted exactly the past-capacity regime
+    /// Figure 3 probes).
     pub fn step_time_comm(&self, batch_tokens: u64, comm_bytes: u64) -> f64 {
-        self.step_time(batch_tokens) + comm_bytes as f64 / self.comm_bytes_per_sec
+        self.waves(batch_tokens) as f64
+            * (self.step_latency + comm_bytes as f64 / self.comm_bytes_per_sec)
+    }
+
+    /// Seconds for one step with the bucketed reduce overlapped behind
+    /// compute (DESIGN.md §10). Per wave, bucket `k` (of `B`) becomes
+    /// ready at compute time `(k+1)/B · latency` and its reduce pipelines
+    /// behind the previous bucket's:
+    ///
+    /// ```text
+    /// finish₀ = ready₀ + comm₀
+    /// finishₖ = max(readyₖ, finishₖ₋₁) + commₖ      wave = finish_{B−1}
+    /// ```
+    ///
+    /// Bandwidth-bound interconnects approach `latency/B + total_comm`
+    /// (one bucket of exposed ramp-in), compute-bound ones
+    /// `latency + tail_comm` (only the last bucket exposed) — both
+    /// strictly below the serialized `latency + total_comm` whenever the
+    /// payload is split (`buckets ≥ 2`). Unbucketed stats (`buckets ≤ 1`)
+    /// degrade to [`WallClockModel::step_time_comm`]: a single bucket is
+    /// only ready when compute ends, hiding nothing.
+    pub fn step_time_overlapped(&self, batch_tokens: u64, comm: &CollectiveStats) -> f64 {
+        if comm.buckets <= 1 || comm.bytes_moved == 0 {
+            return self.step_time_comm(batch_tokens, comm.bytes_moved);
+        }
+        let b = comm.buckets as u64;
+        // all full buckets carry the same payload; the tail takes the rest
+        let full_bytes = (comm.bytes_moved - comm.tail_bytes) as f64 / (b - 1) as f64;
+        let bw = self.comm_bytes_per_sec;
+        let mut finish = 0.0f64;
+        for k in 0..b {
+            let ready = self.step_latency * (k + 1) as f64 / b as f64;
+            let comm_k =
+                if k + 1 == b { comm.tail_bytes as f64 / bw } else { full_bytes / bw };
+            finish = finish.max(ready) + comm_k;
+        }
+        self.waves(batch_tokens) as f64 * finish
     }
 
     /// Total serial seconds of a whole `(batch_tokens per step)` history.
@@ -96,6 +155,96 @@ mod tests {
         assert_eq!(m.step_time_comm(512, 2_000_000_000), 2.0 + 2.0);
         // monotone in payload
         assert!(m.step_time_comm(512, 1 << 30) > m.step_time_comm(512, 1 << 20));
+        // past capacity every wave is a synchronous step paying its own
+        // reduce: 2 waves ⇒ 2·(2s compute + 2s reduce), not 2·2s + 2s.
+        assert_eq!(m.step_time_comm(8 * 1024 + 1, 2_000_000_000), 2.0 * (2.0 + 2.0));
+        assert_eq!(m.step_time_comm(3 * 8 * 1024, 1_000_000_000), 3.0 * (2.0 + 1.0));
+    }
+
+    /// Bucketed stats with `b` equal buckets of `bytes` each.
+    fn bucketed(b: u32, bytes: u64) -> CollectiveStats {
+        CollectiveStats {
+            bytes_moved: b as u64 * bytes,
+            phases: b * 2,
+            buckets: b,
+            tail_bytes: bytes,
+        }
+    }
+
+    #[test]
+    fn overlap_hides_comm_up_to_the_tail_bucket() {
+        let m = WallClockModel {
+            devices: 8,
+            tokens_per_device: 1024,
+            step_latency: 2.0,
+            comm_bytes_per_sec: 1e9, // 1 GB/s
+        };
+        // compute-bound: 4 buckets × 0.1 s comm each ≪ 2 s compute.
+        // Serialized: 2 + 0.4. Overlapped: 2 + 0.1 (only the tail shows).
+        let light = bucketed(4, 100_000_000);
+        let serial = m.step_time_comm(512, light.bytes_moved);
+        let over = m.step_time_overlapped(512, &light);
+        assert!((serial - 2.4).abs() < 1e-12);
+        assert!((over - 2.1).abs() < 1e-12, "{over}");
+        // bandwidth-bound: 4 buckets × 1 s each ≫ compute windows.
+        // Serialized: 2 + 4. Overlapped: first bucket ready at 0.5, then
+        // the pipe never starves: 0.5 + 4 = 4.5.
+        let heavy = bucketed(4, 1_000_000_000);
+        let serial = m.step_time_comm(512, heavy.bytes_moved);
+        let over = m.step_time_overlapped(512, &heavy);
+        assert!((serial - 6.0).abs() < 1e-12);
+        assert!((over - 4.5).abs() < 1e-12, "{over}");
+        // overlap is strictly better whenever the payload is split
+        assert!(over < serial);
+    }
+
+    #[test]
+    fn overlap_degrades_to_serialized_when_unsplit() {
+        let m = WallClockModel::default();
+        // one bucket: only ready when compute ends — nothing hides
+        let one =
+            CollectiveStats { bytes_moved: 1 << 30, phases: 2, buckets: 1, tail_bytes: 1 << 30 };
+        assert_eq!(m.step_time_overlapped(512, &one), m.step_time_comm(512, 1 << 30));
+        // no comm at all
+        let none = CollectiveStats::default();
+        assert_eq!(m.step_time_overlapped(512, &none), m.step_time(512));
+    }
+
+    #[test]
+    fn overlap_charges_every_wave() {
+        let m = WallClockModel {
+            devices: 8,
+            tokens_per_device: 1024,
+            step_latency: 2.0,
+            comm_bytes_per_sec: 1e9,
+        };
+        let s = bucketed(4, 100_000_000);
+        let one_wave = m.step_time_overlapped(512, &s);
+        assert_eq!(m.step_time_overlapped(2 * 8 * 1024, &s), 2.0 * one_wave);
+    }
+
+    #[test]
+    fn overlap_never_beats_the_comm_or_compute_floor() {
+        // the pipeline can hide comm behind compute, never shrink either:
+        // wave time ≥ max(compute, total comm), and ≤ serialized.
+        let m = WallClockModel {
+            devices: 8,
+            tokens_per_device: 1024,
+            step_latency: 2.0,
+            comm_bytes_per_sec: 1e9,
+        };
+        for buckets in [2u32, 3, 7, 32] {
+            for per_bucket in [1_000u64, 50_000_000, 3_000_000_000] {
+                let s = bucketed(buckets, per_bucket);
+                let over = m.step_time_overlapped(512, &s);
+                let comm_total = s.bytes_moved as f64 / m.comm_bytes_per_sec;
+                assert!(over >= m.step_latency.max(comm_total) - 1e-9, "{buckets} {per_bucket}");
+                assert!(
+                    over <= m.step_time_comm(512, s.bytes_moved) + 1e-9,
+                    "{buckets} {per_bucket}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use seesaw::config::{OptimizerKind, ScheduleSpec, TrainConfig};
 use seesaw::coordinator::Trainer;
+use seesaw::metrics::WallClockModel;
 use seesaw::runtime::ModelRuntime;
 use seesaw::util::TempDir;
 
@@ -361,6 +362,89 @@ fn parallel_engine_trajectory_is_bit_identical_to_sequential() {
 }
 
 #[test]
+fn overlapped_reduce_is_bit_identical_and_models_faster_steps() {
+    // §10 acceptance at full-stack scale: overlap on, any bucket size,
+    // persistent pool — bit-identical (ce, gnorm_sq, gns, params) to the
+    // serialized engine, while the modeled serial time on a
+    // bandwidth-bound interconnect is strictly lower.
+    if artifacts_or_skip("test").is_none() {
+        return;
+    }
+    let run = |overlap: bool, bucket_bytes: usize| {
+        let mut cfg = base_config();
+        cfg.total_tokens = 8_192;
+        cfg.base_batch_tokens = 2_048; // 4 microbatches per step
+        cfg.world_size = 4;
+        cfg.exec.worker_threads = 4;
+        cfg.exec.overlap = overlap;
+        cfg.exec.bucket_bytes = bucket_bytes;
+        cfg.eval_every = 0;
+        // 1 MB/s modeled interconnect: comm dominates compute, the regime
+        // where overlap pays (and where Figure 1's speedup would erode)
+        cfg.wallclock =
+            Some(WallClockModel { comm_bytes_per_sec: 1e6, ..WallClockModel::default() });
+        let mut t = Trainer::new(cfg).unwrap();
+        let mut state = t.init_state().unwrap();
+        let mut recs = Vec::new();
+        while state.tokens < t.total_tokens {
+            recs.push(t.train_step(&mut state).unwrap());
+        }
+        (recs, t.rt.to_host(&state.params).unwrap())
+    };
+    let (base, p_base) = run(false, 1 << 20);
+    for bucket_bytes in [4_096usize, 65_536] {
+        let (over, p_over) = run(true, bucket_bytes);
+        assert_eq!(base.len(), over.len(), "bucket {bucket_bytes}: step counts differ");
+        for (a, b) in base.iter().zip(&over) {
+            let step = a.step;
+            assert_eq!(a.ce.to_bits(), b.ce.to_bits(), "ce at step {step} (b={bucket_bytes})");
+            assert_eq!(
+                a.gnorm_sq.to_bits(),
+                b.gnorm_sq.to_bits(),
+                "gnorm_sq at step {step} (b={bucket_bytes})"
+            );
+            assert_eq!(a.gns.map(f64::to_bits), b.gns.map(f64::to_bits), "gns at step {step}");
+            assert_eq!(a.comm_bytes, b.comm_bytes, "payload is bucketing-invariant");
+            assert!(b.comm_buckets >= 2, "the gradient must have split (b={bucket_bytes})");
+            assert!(
+                b.serial_time < a.serial_time,
+                "step {step}: overlapped modeled time {} must beat serialized {}",
+                b.serial_time,
+                a.serial_time
+            );
+        }
+        assert_eq!(p_base, p_over, "bucket {bucket_bytes}: final params must be bit-identical");
+    }
+}
+
+#[test]
+fn adaptive_run_with_undersharded_base_batch_is_rejected() {
+    // the headline mid-ramp GNS starvation regression: before the fix, a
+    // base batch planning fewer microbatches than world_size passed the
+    // world_size ≥ 2 startup guard, then the engine silently clamped the
+    // world — fewer (or zero) gradient shards reached the estimator and
+    // the adaptive controller starved with no error anywhere. Now the
+    // coordinator fails loudly at startup.
+    if artifacts_or_skip("test").is_none() {
+        return;
+    }
+    let mut cfg = base_config();
+    cfg.schedule = ScheduleSpec::Adaptive { alpha: 2.0, ema: 0.9, hysteresis: 0 };
+    cfg.world_size = 4;
+    cfg.base_batch_tokens = 1_024; // 2 microbatches < 4 workers
+    // (`.err()` rather than `unwrap_err`: `Trainer` carries PJRT handles
+    // and has no Debug impl)
+    let err = Trainer::new(cfg.clone()).err().expect("clamp regime must be rejected").to_string();
+    assert!(
+        err.contains("world_size microbatches"),
+        "the clamp regime must be rejected with a diagnosis, got: {err}"
+    );
+    // the same geometry with a covering base batch is accepted
+    cfg.base_batch_tokens = 2_048; // 4 microbatches
+    assert!(Trainer::new(cfg).is_ok());
+}
+
+#[test]
 fn serial_time_charges_allreduce_bytes_when_sharded() {
     if artifacts_or_skip("test").is_none() {
         return;
@@ -392,7 +476,8 @@ fn adaptive_schedule_requires_sharded_workers() {
     let mut cfg = base_config();
     cfg.schedule = ScheduleSpec::Adaptive { alpha: 2.0, ema: 0.9, hysteresis: 0 };
     cfg.world_size = 1;
-    let err = Trainer::new(cfg).unwrap_err().to_string();
+    // (`.err()` rather than `unwrap_err`: `Trainer` has no Debug impl)
+    let err = Trainer::new(cfg).err().expect("world_size 1 must be rejected").to_string();
     assert!(err.contains("world_size"), "unexpected error: {err}");
 }
 

@@ -177,6 +177,7 @@ fn prop_step_engine_trajectory_invariant_under_threads() {
                 worker_threads: threads,
                 collective: kind,
                 pin_order: pin,
+                ..ExecSpec::default()
             });
             let out = e.execute(&src, world, micro(seed)).unwrap();
             (out, e.mean_grad().to_vec())
@@ -190,6 +191,114 @@ fn prop_step_engine_trajectory_invariant_under_threads() {
                 g1.iter().zip(&gt).all(|(x, y)| x.to_bits() == y.to_bits()),
                 "mean grad must be bit-identical (threads {threads} world {world} {kind:?})"
             );
+        }
+    });
+}
+
+#[test]
+fn prop_engine_overlap_is_bit_exact_for_any_bucket_size() {
+    // the §10 tentpole contract over random shapes: overlap on, swept
+    // across bucket sizes (including degenerate 4-byte buckets and
+    // buckets larger than the gradient), on the persistent pool, must
+    // reproduce the sequential serialized engine's
+    // (ce, gnorm_sq proxy, mean_grad, shard_sqnorms) to the bit — only
+    // the comm bucket accounting may differ.
+    check("engine overlap/bucket invariance", 32, |g| {
+        let elems = 1 + g.usize_in(0, 3000);
+        let n_micro = 1 + g.u64(12);
+        let world = *g.pick(&[2usize, 3, 4, 7]);
+        let kind = if g.bool() { CollectiveKind::Ring } else { CollectiveKind::Parallel };
+        let seed = g.u64(1 << 30);
+        let micro = |seed: u64| -> Vec<Microbatch> {
+            (0..n_micro)
+                .map(|i| Microbatch {
+                    index: i,
+                    tokens: vec![(seed.wrapping_mul(131) as i32).wrapping_add(i as i32 * 17); 3],
+                    targets: vec![(i as i32).wrapping_mul(3) + 1; 3],
+                })
+                .collect()
+        };
+        let src = SyntheticGrad { elems };
+        // reference: sequential engine, serialized whole-vector reduce
+        let mut base = StepEngine::new(ExecSpec { collective: kind, ..ExecSpec::default() });
+        let out_base = base.execute(&src, world, micro(seed)).unwrap();
+        let grad_base = base.mean_grad().to_vec();
+        for bucket_bytes in [4usize, 40, 1024, 4 * elems, 1 << 20] {
+            let threads = *g.pick(&[1usize, 2, 4]);
+            let mut e = StepEngine::new(ExecSpec {
+                worker_threads: threads,
+                collective: kind,
+                overlap: true,
+                bucket_bytes,
+                ..ExecSpec::default()
+            });
+            let out = e.execute(&src, world, micro(seed)).unwrap();
+            let tag = format!("{kind:?} world {world} threads {threads} bucket {bucket_bytes}");
+            assert_eq!(out.ce_sum.to_bits(), out_base.ce_sum.to_bits(), "ce ({tag})");
+            assert_eq!(out.zsq_sum.to_bits(), out_base.zsq_sum.to_bits(), "zsq ({tag})");
+            assert_eq!(out.world, out_base.world, "world ({tag})");
+            assert_eq!(out.shard_micro, out_base.shard_micro, "shard_micro ({tag})");
+            assert_eq!(
+                out.shard_sqnorms.len(),
+                out_base.shard_sqnorms.len(),
+                "sqnorm count ({tag})"
+            );
+            for (a, b) in out.shard_sqnorms.iter().zip(&out_base.shard_sqnorms) {
+                assert_eq!(a.to_bits(), b.to_bits(), "shard sqnorm bits ({tag})");
+            }
+            assert!(
+                e.mean_grad().iter().zip(&grad_base).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "mean grad must be bit-identical ({tag})"
+            );
+            // total payload is bucketing-invariant; bucket count is the
+            // deterministic ceil split of the gradient
+            assert_eq!(out.comm.bytes_moved, out_base.comm.bytes_moved, "bytes ({tag})");
+            if out.world > 1 {
+                let want = elems.div_ceil((bucket_bytes / 4).max(1)) as u32;
+                assert_eq!(out.comm.buckets, want, "bucket count ({tag})");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_engine_world_beyond_microbatches_surfaces_the_clamp() {
+    // the mid-ramp GNS starvation regression at engine scale: when the
+    // step plans fewer microbatches than the requested world, the clamp
+    // must be *visible* (StepOutput.world), the shard metadata must match
+    // the effective world, and at one microbatch the GNS evidence is
+    // provably gone (empty sqnorms → GnsEstimator::observe returns None)
+    // — exactly the starvation the coordinator now fails loudly on.
+    check("engine world clamp surfaced", 32, |g| {
+        let elems = 1 + g.usize_in(0, 500);
+        let n_micro = 1 + g.u64(6);
+        let world = (n_micro as usize) + 1 + g.usize_in(0, 8); // always > n_micro
+        let threads = *g.pick(&[1usize, 2, 8]);
+        let src = SyntheticGrad { elems };
+        let mut e = StepEngine::new(ExecSpec {
+            worker_threads: threads,
+            overlap: g.bool(),
+            ..ExecSpec::default()
+        });
+        let micro: Vec<Microbatch> = (0..n_micro)
+            .map(|i| Microbatch {
+                index: i,
+                tokens: vec![i as i32 + 2; 3],
+                targets: vec![1; 3],
+            })
+            .collect();
+        let out = e.execute(&src, world, micro).unwrap();
+        assert_eq!(out.world, n_micro as usize, "effective world must be the clamp");
+        assert!(out.world < world, "the regime under test really clamps");
+        assert_eq!(out.shard_micro.len(), out.world);
+        assert_eq!(out.shard_micro.iter().sum::<u64>(), n_micro);
+        let mut gns = GnsEstimator::new(0.9);
+        let raw = gns.observe(&out.shard_sqnorms, &out.shard_micro, 3, 1.0);
+        if out.world == 1 {
+            assert!(out.shard_sqnorms.is_empty());
+            assert_eq!(raw, None, "one shard ⇒ the estimator starves — now detectable");
+        } else {
+            assert_eq!(out.shard_sqnorms.len(), out.world, "norms track the effective world");
         }
     });
 }
@@ -579,5 +688,26 @@ fn prop_wallclock_monotone_in_batch_and_comm() {
         assert!(m.step_time_comm(a, 0) == m.step_time(a));
         assert!(m.step_time_comm(a, bytes) >= m.step_time(a));
         assert!(m.step_time_comm(a, bytes) <= m.step_time_comm(a, bytes + (1 << 20)) + 1e-12);
+        // every compute wave pays its own reduce
+        let per_wave = m.step_latency + bytes as f64 / m.comm_bytes_per_sec;
+        let waves = m.step_time(a) / m.step_latency;
+        assert!((m.step_time_comm(a, bytes) - waves * per_wave).abs() < 1e-9 * per_wave * waves);
+        // the overlapped charge is sandwiched between the physical floor
+        // max(compute, comm) and the fully serialized sum, per wave
+        let buckets = 2 + g.u64(30) as u32;
+        let tail = 1 + bytes / buckets as u64;
+        let comm = seesaw::collective::CollectiveStats {
+            bytes_moved: tail * buckets as u64,
+            phases: 2 * buckets,
+            buckets,
+            tail_bytes: tail,
+        };
+        let over = m.step_time_overlapped(a, &comm);
+        let comm_t = comm.bytes_moved as f64 / m.comm_bytes_per_sec;
+        assert!(over >= waves * m.step_latency.max(comm_t) - 1e-9, "overlap under the floor");
+        assert!(
+            over <= m.step_time_comm(a, comm.bytes_moved) + 1e-9,
+            "overlap must never exceed the serialized charge"
+        );
     });
 }
