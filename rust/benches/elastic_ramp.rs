@@ -1,0 +1,180 @@
+//! Elastic scale-out survival table (DESIGN.md §11) — the wall-clock
+//! case for `WorldPolicy::RampCoupled`, Figure-1 style.
+//!
+//! Seesaw's speedup is serial steps: every cut doubles the batch so the
+//! run takes fewer optimizer steps. But at a **fixed** world size each
+//! doubling also doubles per-worker compute — the modeled step time
+//! doubles per cut and the serial-step saving is eaten from below. The
+//! ramp-coupled policy grows the fleet with the batch (per-worker
+//! microbatches constant), holding step time ~flat across the ramp at
+//! the price of a growing allreduce ring.
+//!
+//! Prints three tables and asserts the §11 acceptance criterion:
+//! modeled elastic step time stays within **1.2×** of its pre-cut value
+//! across the full ramp (datacenter interconnect), while the fixed-world
+//! step time at least doubles.
+//!
+//! ```sh
+//! cargo bench --bench elastic_ramp     # no artifacts needed
+//! ```
+
+use seesaw::coordinator::elastic::{effective_world, WorldPolicy};
+use seesaw::metrics::{print_table, WallClockModel};
+
+/// Canonical ring payload for a `world`-way reduce of `elems` f32s.
+fn ring_bytes(world: usize, elems: usize) -> u64 {
+    if world < 2 {
+        return 0;
+    }
+    (2 * (world - 1) * elems * 4) as u64
+}
+
+fn main() {
+    // the testbed gradient (115k params) on a fleet whose base rung fits
+    // exactly one base batch per wave — every cut pushes a fixed world
+    // into extra waves immediately.
+    const ELEMS: usize = 115_008;
+    const MICRO_TOKENS: u64 = 512;
+    let base_world = 2usize;
+    let base_batch = 4_096u64;
+    let base_micro = base_batch / MICRO_TOKENS;
+    let policy = WorldPolicy::RampCoupled { max_world: 64 };
+    let wall = WallClockModel {
+        devices: 2,
+        tokens_per_device: 2_048,
+        step_latency: 1.0,
+        comm_bytes_per_sec: 100e9, // datacenter interconnect
+    };
+
+    // --- per-rung step time across the ramp --------------------------
+    let mut rows = Vec::new();
+    let mut elastic_times = Vec::new();
+    let mut fixed_times = Vec::new();
+    for k in 0..6u32 {
+        let batch = base_batch << k;
+        let n_micro = batch / MICRO_TOKENS;
+        let world = effective_world(policy, base_world, base_micro, n_micro);
+        let fixed =
+            wall.step_time_comm(batch, ring_bytes(base_world, ELEMS));
+        let elastic =
+            wall.step_time_elastic(batch, world, base_world, ring_bytes(world, ELEMS));
+        rows.push(vec![
+            format!("{k}"),
+            batch.to_string(),
+            base_world.to_string(),
+            format!("{fixed:.3}"),
+            world.to_string(),
+            format!("{elastic:.3}"),
+            format!("{:.2}×", elastic / fixed),
+        ]);
+        elastic_times.push(elastic);
+        fixed_times.push(fixed);
+    }
+    print_table(
+        "elastic ramp survival — modeled step time per rung (100 GB/s interconnect)",
+        &["cut", "batch", "fixed W", "fixed s/step", "elastic W", "elastic s/step", "ratio"],
+        &rows,
+    );
+
+    // §11 acceptance: elastic holds within 1.2× of pre-cut; fixed ≥ 2×
+    let pre_cut = elastic_times[0];
+    for (k, t) in elastic_times.iter().enumerate() {
+        assert!(
+            *t <= 1.2 * pre_cut,
+            "acceptance: elastic step time at rung {k} ({t:.3}s) exceeded 1.2× the \
+             pre-cut value ({pre_cut:.3}s)"
+        );
+    }
+    assert!(
+        *fixed_times.last().unwrap() >= 2.0 * fixed_times[0],
+        "fixed-world step time must at least double across the ramp ({:.3} vs {:.3})",
+        fixed_times.last().unwrap(),
+        fixed_times[0]
+    );
+    println!(
+        "\nacceptance: elastic held ≤ {:.2}× pre-cut across {} rungs; fixed grew {:.1}×",
+        elastic_times.iter().fold(0f64, |a, &b| a.max(b)) / pre_cut,
+        elastic_times.len(),
+        fixed_times.last().unwrap() / fixed_times[0]
+    );
+
+    // --- whole-run serial survival: how much of the paper's serial-step
+    // saving each execution strategy keeps ------------------------------
+    // 14-step Seesaw ramp vs 20 constant-batch steps (equal tokens)
+    let ramp: Vec<u64> = std::iter::repeat(base_batch)
+        .take(8)
+        .chain(std::iter::repeat(2 * base_batch).take(4))
+        .chain(std::iter::repeat(4 * base_batch).take(2))
+        .collect();
+    let constant: Vec<u64> = std::iter::repeat(base_batch).take(20).collect();
+    assert_eq!(ramp.iter().sum::<u64>(), constant.iter().sum::<u64>(), "equal tokens");
+    let charge = |batches: &[u64], elastic: bool| -> f64 {
+        batches
+            .iter()
+            .map(|&b| {
+                let n_micro = b / MICRO_TOKENS;
+                if elastic {
+                    let w = effective_world(policy, base_world, base_micro, n_micro);
+                    wall.step_time_elastic(b, w, base_world, ring_bytes(w, ELEMS))
+                } else {
+                    wall.step_time_comm(b, ring_bytes(base_world, ELEMS))
+                }
+            })
+            .sum()
+    };
+    let baseline = charge(&constant, false);
+    let ramp_fixed = charge(&ramp, false);
+    let ramp_elastic = charge(&ramp, true);
+    print_table(
+        "serial-time survival at equal tokens (cosine-equivalent 20-step baseline)",
+        &["strategy", "steps", "serial s", "saved vs baseline"],
+        &[
+            vec![
+                "constant batch, fixed W".into(),
+                constant.len().to_string(),
+                format!("{baseline:.2}"),
+                "—".into(),
+            ],
+            vec![
+                "Seesaw ramp, fixed W".into(),
+                ramp.len().to_string(),
+                format!("{ramp_fixed:.2}"),
+                format!("{:.1}%", 100.0 * (1.0 - ramp_fixed / baseline)),
+            ],
+            vec![
+                "Seesaw ramp, ramp-coupled W".into(),
+                ramp.len().to_string(),
+                format!("{ramp_elastic:.2}"),
+                format!("{:.1}%", 100.0 * (1.0 - ramp_elastic / baseline)),
+            ],
+        ],
+    );
+    assert!(
+        ramp_elastic < ramp_fixed && ramp_elastic < baseline,
+        "ramp-coupled must dominate: {ramp_elastic:.2} vs fixed {ramp_fixed:.2} vs \
+         baseline {baseline:.2}"
+    );
+
+    // --- where scale-out stops paying: the bandwidth-bound regime ------
+    // on a slow interconnect the growing ring eventually eats the flat
+    // compute — the honest cost side of elasticity (no assertion; this is
+    // the chart that says when to stop growing the fleet)
+    let slow = WallClockModel { comm_bytes_per_sec: 8e6, ..wall };
+    let mut rows = Vec::new();
+    for k in 0..6u32 {
+        let batch = base_batch << k;
+        let world = effective_world(policy, base_world, base_micro, batch / MICRO_TOKENS);
+        let t = slow.step_time_elastic(batch, world, base_world, ring_bytes(world, ELEMS));
+        rows.push(vec![
+            format!("{k}"),
+            world.to_string(),
+            format!("{:.1} MB", ring_bytes(world, ELEMS) as f64 / 1e6),
+            format!("{t:.3}"),
+        ]);
+    }
+    print_table(
+        "scale-out overhead on an 8 MB/s interconnect (ring grows with the fleet)",
+        &["cut", "elastic W", "ring payload", "s/step"],
+        &rows,
+    );
+}

@@ -8,6 +8,10 @@
 //! * **overlapped wall-clock model** — how much of Figure 1's serial-time
 //!   speedup survives a bandwidth-bound interconnect with and without
 //!   bucketed overlap (DESIGN.md §10; asserts overlapped < serialized)
+//! * **elastic ramp model** — fixed vs ramp-coupled world across the
+//!   Seesaw ramp (DESIGN.md §11; asserts the elastic step time holds
+//!   flat where the fixed-world charge doubles; full table in
+//!   `benches/elastic_ramp.rs`)
 //! * `grad_step` — PJRT execute of fwd+bwd on one microbatch
 //! * `adamw_step` / `sgd_step` — optimizer executables
 //! * `eval_step` — forward only
@@ -153,6 +157,43 @@ fn overlap_model(results: &mut Vec<BenchResult>) {
     );
 }
 
+/// Elastic fleet model (DESIGN.md §11): the same Seesaw ramp charged at a
+/// fixed world vs a ramp-coupled one — step time holds ~flat where the
+/// fixed-world charge doubles per cut. The full survival table (incl. the
+/// capped and bandwidth-bound regimes) lives in `benches/elastic_ramp.rs`.
+fn elastic_model() {
+    use seesaw::coordinator::elastic::{effective_world, WorldPolicy};
+    // capacity = one 4096-token base batch per wave at world 2
+    let wall = WallClockModel {
+        devices: 2,
+        tokens_per_device: 2048,
+        step_latency: 1.0,
+        comm_bytes_per_sec: 100e9,
+    };
+    let policy = WorldPolicy::RampCoupled { max_world: 64 };
+    println!("\n-- elastic ramp model (fixed vs ramp-coupled world, 100 GB/s) --");
+    let ring = |w: usize| if w < 2 { 0 } else { (2 * (w - 1) * 115_008 * 4) as u64 };
+    let mut top_fixed = 0.0f64;
+    let mut top_elastic = 0.0f64;
+    for k in 0..4u32 {
+        let batch = 4096u64 << k;
+        let world = effective_world(policy, 2, 8, batch / 512);
+        let fixed = wall.step_time_comm(batch, ring(2));
+        let elastic = wall.step_time_elastic(batch, world, 2, ring(world));
+        println!(
+            "  cut {k}: batch {batch:>6} — fixed(W=2) {fixed:>7.3} s/step, \
+             elastic(W={world}) {elastic:>7.3} s/step"
+        );
+        top_fixed = fixed;
+        top_elastic = elastic;
+    }
+    assert!(
+        top_elastic < top_fixed / 2.0,
+        "acceptance: ramp-coupled step time must hold flat where fixed doubles \
+         ({top_elastic} vs {top_fixed})"
+    );
+}
+
 fn main() {
     let t = Duration::from_secs(2);
     let mut results: Vec<BenchResult> = Vec::new();
@@ -160,6 +201,7 @@ fn main() {
     // --- step engine (pure CPU — runs without artifacts) ----------------
     worker_scaling(&mut results);
     overlap_model(&mut results);
+    elastic_model();
 
     // --- coordinator pieces that need no runtime -------------------------
     let shards: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 115_008]).collect();

@@ -8,6 +8,7 @@
 //! module; the build has no serde.)
 
 use crate::collective::CollectiveKind;
+use crate::coordinator::elastic::WorldPolicy;
 use crate::metrics::WallClockModel;
 use crate::schedule::{AdaptiveSeesaw, JointSchedule, Schedule, ScheduleKind, SeesawBuilder};
 use crate::util::json::Value;
@@ -41,6 +42,12 @@ pub struct ExecSpec {
     /// ⇒ `bucket_bytes / 4` elements per bucket). Ignored when `overlap`
     /// is off.
     pub bucket_bytes: usize,
+    /// Elastic world policy (DESIGN.md §11): [`WorldPolicy::Fixed`] runs
+    /// every step at `world_size`; [`WorldPolicy::RampCoupled`] grows the
+    /// effective world with the Seesaw batch ramp so per-worker
+    /// microbatches stay constant (capped at its `max_world`). World
+    /// transitions surface as reshard events in the coordinator.
+    pub elastic: WorldPolicy,
 }
 
 impl Default for ExecSpec {
@@ -53,6 +60,7 @@ impl Default for ExecSpec {
             // 1 MiB — a few buckets over the testbed's ~460 KB gradients,
             // datacenter-order granularity on real ones.
             bucket_bytes: 1 << 20,
+            elastic: WorldPolicy::Fixed,
         }
     }
 }
@@ -293,31 +301,74 @@ impl TrainConfig {
         }
     }
 
-    /// Stable identity string of the schedule this config drives over the
-    /// resolved token budget `total` — the schedule kind with its
-    /// parameters (via [`ScheduleSpec::label`]) plus every config knob
-    /// that shapes the `(lr, batch)` trajectory. That includes the GNS
-    /// feedback path feeding adaptive cuts: `world_size` (shard
-    /// partitioning changes the estimator's small-batch signal) and the
-    /// collective (its reduction order sets the mean-gradient bits behind
-    /// `‖G‖²`). `worker_threads`, `pin_order`, `overlap` and
-    /// `bucket_bytes` are deliberately excluded — threads and the
-    /// bucketed overlapped reduce are bit-identical by the engine
-    /// contract, and stat-reduction order never feeds back into the
-    /// schedule. Floats
-    /// are rendered as their IEEE-754 bit patterns so the string (and its
-    /// FNV hash, [`crate::coordinator::fnv1a64`], stored in every v2
-    /// checkpoint) is exact: a resume restores controller state only into
-    /// a bit-identically-configured schedule.
-    pub fn schedule_identity(&self, total: u64) -> String {
+    /// Stable identity string of the **optimizer trajectory** this config
+    /// drives over the resolved token budget `total` (DESIGN.md §11): the
+    /// schedule kind with its parameters (via [`ScheduleSpec::label`])
+    /// plus every knob that shapes the `(lr, batch)` law — base lr/batch,
+    /// warmup fraction, budget, cut cap. Floats are rendered as their
+    /// IEEE-754 bit patterns so the string (and its FNV hash,
+    /// [`crate::coordinator::fnv1a64`], stored in every checkpoint) is
+    /// exact: a resume restores controller state only into a
+    /// bit-identically-configured schedule.
+    ///
+    /// The **execution topology** — `world_size`, collective, threads,
+    /// overlap/buckets, elastic policy — is deliberately *not* here: it
+    /// lives in [`TrainConfig::exec_fingerprint`] and **may differ**
+    /// across a resume (an elastic reshard: the run continues on a
+    /// different fleet, logged as a reshard event, never refused). The
+    /// pre-split identity that bound the topology in is kept as
+    /// [`TrainConfig::legacy_schedule_identity`] so v2 checkpoints still
+    /// verify.
+    pub fn trajectory_identity(&self, total: u64) -> String {
         format!(
-            "{}|lr={:016x}|b={}|wf={:016x}|T={}|mc={}|w={}|coll={}",
+            "{}|lr={:016x}|b={}|wf={:016x}|T={}|mc={}",
             self.schedule.label(),
             self.base_lr.to_bits(),
             self.base_batch_tokens,
             self.warmup_frac.to_bits(),
             total,
             self.max_cuts,
+        )
+    }
+
+    /// Fingerprint of the **execution topology**: world size, collective,
+    /// worker threads, stat order, overlap/buckets, elastic policy.
+    /// Stored in v3 checkpoints next to the trajectory identity; a
+    /// mismatch on resume is a *reshard event* (logged, GNS estimator
+    /// rescaled, engine resized), not an error — the whole point of the
+    /// §11 identity split.
+    ///
+    /// Note the continuity grades across a fingerprint drift: `lr`,
+    /// `batch` and fixed-schedule `cuts` stay **bit-identical** (pure
+    /// functions of the restored schedule state), and `ce` is
+    /// bit-identical through the first post-reshard update (the loader
+    /// plans microbatches on the coordinator thread; `pin_order` reduces
+    /// stats in global microbatch order) — while `gnorm_sq`/GNS, and
+    /// `ce` beyond that first update, agree to fp tolerance only (a
+    /// different shard partition or collective reduces the gradient in a
+    /// different floating-point order).
+    pub fn exec_fingerprint(&self) -> String {
+        format!(
+            "w={}|coll={}|threads={}|pin={}|overlap={}|bucket={}|elastic={}",
+            self.world_size,
+            self.exec.collective.name(),
+            self.exec.worker_threads,
+            self.exec.pin_order,
+            self.exec.overlap,
+            self.exec.bucket_bytes,
+            self.exec.elastic.label(),
+        )
+    }
+
+    /// The pre-§11 identity string exactly as v2 checkpoints hashed it:
+    /// the trajectory identity with `world_size` and the collective bound
+    /// in. Only used to verify v2 files on resume — they predate the
+    /// trajectory/execution split, so for them a topology change is
+    /// indistinguishable from a trajectory change and is still refused.
+    pub fn legacy_schedule_identity(&self, total: u64) -> String {
+        format!(
+            "{}|w={}|coll={}",
+            self.trajectory_identity(total),
             self.world_size,
             self.exec.collective.name()
         )
@@ -400,12 +451,34 @@ fn parse_exec(v: &Value) -> Result<ExecSpec> {
     if bucket_bytes == 0 {
         bail!("exec.bucket_bytes must be positive (one bucket needs at least one element)");
     }
+    // elastic world policy: `elastic: "fixed" | "ramp-coupled"` with the
+    // fleet cap in `max_world` (default 64 — the wall-clock model's
+    // default device count).
+    let has_max_world = v.get("max_world").is_some();
+    let max_world = v.u64_or("max_world", 64)? as usize;
+    if max_world == 0 {
+        bail!("exec.max_world must be positive (the fleet needs at least one worker)");
+    }
+    let elastic = match v.get("elastic") {
+        Some(e) => {
+            let s = e.as_str()?;
+            WorldPolicy::parse(s, max_world)
+                .ok_or_else(|| anyhow!("unknown elastic policy `{s}` (fixed|ramp-coupled)"))?
+        }
+        None => d.elastic,
+    };
+    // a cap without a ramp-coupled policy would be silently dead config —
+    // and read as "elastic on" to whoever wrote it; refuse with the fix
+    if has_max_world && matches!(elastic, WorldPolicy::Fixed) {
+        bail!("exec.max_world only applies with exec.elastic = \"ramp-coupled\"");
+    }
     Ok(ExecSpec {
         worker_threads: v.u64_or("worker_threads", d.worker_threads as u64)? as usize,
         collective,
         pin_order,
         overlap,
         bucket_bytes,
+        elastic,
     })
 }
 
@@ -501,7 +574,8 @@ mod tests {
     fn exec_spec_parses_and_defaults() {
         let c = TrainConfig::from_json(
             r#"{"exec": {"worker_threads": 4, "collective": "parallel", "pin_order": false,
-                         "overlap": true, "bucket_bytes": 65536}}"#,
+                         "overlap": true, "bucket_bytes": 65536,
+                         "elastic": "ramp-coupled", "max_world": 16}}"#,
         )
         .unwrap();
         assert_eq!(
@@ -512,6 +586,7 @@ mod tests {
                 pin_order: false,
                 overlap: true,
                 bucket_bytes: 65_536,
+                elastic: WorldPolicy::RampCoupled { max_world: 16 },
             }
         );
         let d = TrainConfig::from_json("{}").unwrap();
@@ -521,8 +596,24 @@ mod tests {
         assert!(d.exec.pin_order);
         assert!(!d.exec.overlap, "overlap is opt-in");
         assert_eq!(d.exec.bucket_bytes, 1 << 20);
+        assert_eq!(d.exec.elastic, WorldPolicy::Fixed, "elastic scale-out is opt-in");
+        // ramp-coupled without an explicit cap takes the 64-worker default
+        let e = TrainConfig::from_json(r#"{"exec": {"elastic": "ramp-coupled"}}"#).unwrap();
+        assert_eq!(e.exec.elastic, WorldPolicy::RampCoupled { max_world: 64 });
         // a zero bucket size can never reduce anything — rejected
         assert!(TrainConfig::from_json(r#"{"exec": {"bucket_bytes": 0}}"#).is_err());
+        // unknown policies and an empty fleet cap are rejected
+        assert!(TrainConfig::from_json(r#"{"exec": {"elastic": "bogus"}}"#).is_err());
+        assert!(TrainConfig::from_json(
+            r#"{"exec": {"elastic": "ramp-coupled", "max_world": 0}}"#
+        )
+        .is_err());
+        // …and a cap with no ramp-coupled policy is dead config — refused
+        assert!(TrainConfig::from_json(r#"{"exec": {"max_world": 8}}"#).is_err());
+        assert!(TrainConfig::from_json(
+            r#"{"exec": {"elastic": "fixed", "max_world": 8}}"#
+        )
+        .is_err());
     }
 
     #[test]
@@ -595,42 +686,61 @@ mod tests {
     }
 
     #[test]
-    fn schedule_identity_discriminates_and_is_stable() {
+    fn trajectory_identity_discriminates_and_is_stable() {
         let c = TrainConfig::default();
-        let base = c.schedule_identity(1_000_000);
-        assert_eq!(base, c.schedule_identity(1_000_000), "identity must be deterministic");
+        let base = c.trajectory_identity(1_000_000);
+        assert_eq!(base, c.trajectory_identity(1_000_000), "identity must be deterministic");
         // every trajectory-shaping knob moves the identity
         let mut d = c.clone();
         d.schedule = ScheduleSpec::Adaptive { alpha: 2.0, ema: 0.9, hysteresis: 0 };
-        assert_ne!(base, d.schedule_identity(1_000_000));
+        assert_ne!(base, d.trajectory_identity(1_000_000));
         let mut e = c.clone();
         e.base_lr *= 2.0;
-        assert_ne!(base, e.schedule_identity(1_000_000));
+        assert_ne!(base, e.trajectory_identity(1_000_000));
         let mut f = c.clone();
         f.base_batch_tokens += 1;
-        assert_ne!(base, f.schedule_identity(1_000_000));
-        assert_ne!(base, c.schedule_identity(999_999), "budget is part of the identity");
+        assert_ne!(base, f.trajectory_identity(1_000_000));
+        assert_ne!(base, c.trajectory_identity(999_999), "budget is part of the identity");
         // adaptive parameters discriminate too (they shape the cut law)
         let mut g = d.clone();
         g.schedule = ScheduleSpec::Adaptive { alpha: 2.0, ema: 0.9, hysteresis: 1 };
-        assert_ne!(d.schedule_identity(1_000_000), g.schedule_identity(1_000_000));
-        // the GNS feedback path is part of the identity…
+        assert_ne!(d.trajectory_identity(1_000_000), g.trajectory_identity(1_000_000));
+    }
+
+    #[test]
+    fn execution_topology_is_fingerprinted_not_identity() {
+        // the whole point of the elastic reshard: the execution topology
+        // may change across a resume, so it must NOT move the trajectory
+        // identity — it moves the exec fingerprint instead.
+        let c = TrainConfig::default();
+        let traj = c.trajectory_identity(1_000_000);
+        let fp = c.exec_fingerprint();
         let mut h = c.clone();
         h.world_size = 4;
-        assert_ne!(base, h.schedule_identity(1_000_000), "world_size shapes the GNS signal");
+        assert_eq!(traj, h.trajectory_identity(1_000_000), "world may differ on resume");
+        assert_ne!(fp, h.exec_fingerprint(), "…but the fingerprint records it");
         let mut i = c.clone();
         i.exec.collective = CollectiveKind::Parallel;
-        assert_ne!(base, i.schedule_identity(1_000_000), "collective shapes ‖G‖² bits");
-        // …but trajectory-neutral engine knobs are not
+        assert_eq!(traj, i.trajectory_identity(1_000_000));
+        assert_ne!(fp, i.exec_fingerprint());
         let mut j = c.clone();
         j.exec.worker_threads = 8;
         j.exec.pin_order = false;
         j.exec.overlap = true;
         j.exec.bucket_bytes = 4096;
+        j.exec.elastic = WorldPolicy::RampCoupled { max_world: 8 };
+        assert_eq!(traj, j.trajectory_identity(1_000_000));
+        assert_ne!(fp, j.exec_fingerprint());
+        // and the legacy (v2) identity is exactly trajectory + topology —
+        // the pre-split string old checkpoints hashed
         assert_eq!(
-            base,
-            j.schedule_identity(1_000_000),
-            "threads/pin_order/overlap/bucket_bytes never feed back"
+            c.legacy_schedule_identity(1_000_000),
+            format!("{traj}|w={}|coll=ring", c.world_size)
+        );
+        assert_ne!(
+            c.legacy_schedule_identity(1_000_000),
+            h.legacy_schedule_identity(1_000_000),
+            "v2 files bind the world into the identity"
         );
     }
 

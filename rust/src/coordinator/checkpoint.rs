@@ -4,11 +4,11 @@
 //! `(ce, gnorm_sq, gns, cuts)` trajectories across a save/restore
 //! boundary — asserted in the integration and property tests).
 //!
-//! ## Wire format (DESIGN.md §9)
+//! ## Wire format (DESIGN.md §9, §11)
 //!
 //! Little-endian throughout; magic `SEESAWCK`, then `version: u32`.
 //!
-//! **v2** (current): four length-prefixed sections, in order. Each
+//! **v3** (current): five length-prefixed sections, in order. Each
 //! section is `len: u64` followed by exactly `len` payload bytes, so a
 //! reader can validate every length against the bytes actually present
 //! before allocating.
@@ -19,6 +19,24 @@
 //! | 2 | leaves | 3 groups (params, m, v), each `count:u64 (len:u64 f32×len)*` |
 //! | 3 | schedule | `spec_hash u64` + the opaque [`crate::schedule::Schedule::state_save`] blob (internally versioned; empty for stateless schedules) |
 //! | 4 | gns | empty, or `ema f64, ema_s f64, ema_g2 f64, observations u64` (32 bytes) |
+//! | 5 | exec | `world u64, traj_len u64, trajectory-identity UTF-8 × traj_len, exec-fingerprint UTF-8 (rest)` |
+//!
+//! The §11 identity split lives in sections 3 and 5: `spec_hash` (and
+//! the decoded `traj_identity` string, stored so mismatch errors can
+//! show the *fields* that differ, not just two hashes) covers only the
+//! **optimizer trajectory** and must match on resume; the **execution
+//! fingerprint** (world size, collective, threads, overlap/buckets,
+//! elastic policy) may differ — the coordinator logs the drift as a
+//! reshard event and `world` (the effective world at save time) seeds
+//! the GNS estimator's reshard.
+//!
+//! **v2** (legacy, still loaded): sections 1–4 only, with `spec_hash`
+//! covering trajectory *and* topology (the pre-split identity). Loading
+//! yields `world == 0` (unknown) and empty identity strings; the
+//! coordinator verifies such files against
+//! [`crate::config::TrainConfig::legacy_schedule_identity`], so a v2
+//! resume under a changed topology is still refused (the file cannot
+//! prove the trajectory alone matches).
 //!
 //! **v1** (legacy, still loaded): scalar state without `phase`, then the
 //! 3 leaf groups — no schedule or GNS sections. Loading a v1 file yields
@@ -37,7 +55,7 @@ use std::io::{BufWriter, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"SEESAWCK";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 /// Sentinel spec hash meaning "unknown" (v1 files). The coordinator
 /// skips the schedule-identity check for it.
 pub const SPEC_HASH_UNKNOWN: u64 = 0;
@@ -70,7 +88,9 @@ pub struct Checkpoint {
     pub m: Vec<Vec<f32>>,
     pub v: Vec<Vec<f32>>,
     /// FNV-1a hash of the run's schedule identity
-    /// ([`crate::config::TrainConfig::schedule_identity`]);
+    /// — of [`crate::config::TrainConfig::trajectory_identity`] on v3
+    /// files, of the topology-bound
+    /// [`crate::config::TrainConfig::legacy_schedule_identity`] on v2 —
     /// [`SPEC_HASH_UNKNOWN`] for v1 files.
     pub schedule_hash: u64,
     /// Opaque [`crate::schedule::Schedule::state_save`] blob (empty for
@@ -78,6 +98,19 @@ pub struct Checkpoint {
     pub schedule_state: Vec<u8>,
     /// GNS-estimator snapshot; `None` on v1 files.
     pub gns: Option<GnsState>,
+    /// Effective data-parallel world at save time — the `old_world` side
+    /// of the GNS reshard when a resume lands on a different fleet.
+    /// `0` = unknown (v1/v2 files).
+    pub world: u64,
+    /// Decoded [`crate::config::TrainConfig::trajectory_identity`] string
+    /// (what `schedule_hash` hashes on v3 files), stored so an identity
+    /// mismatch on resume can name the differing fields instead of
+    /// printing two opaque hashes. Empty on v1/v2 files.
+    pub traj_identity: String,
+    /// Decoded [`crate::config::TrainConfig::exec_fingerprint`] at save
+    /// time; a drift against the resuming config is a reshard event, not
+    /// an error. Empty on v1/v2 files.
+    pub exec_fingerprint: String,
 }
 
 /// Bounds-checked little-endian cursor over the checkpoint bytes: every
@@ -230,6 +263,15 @@ impl Checkpoint {
                 }
             }
 
+            // §5 exec: effective world + the decoded identity strings
+            let traj = self.traj_identity.as_bytes();
+            let fp = self.exec_fingerprint.as_bytes();
+            w.write_all(&(16 + traj.len() as u64 + fp.len() as u64).to_le_bytes())?;
+            w.write_all(&self.world.to_le_bytes())?;
+            w.write_all(&(traj.len() as u64).to_le_bytes())?;
+            w.write_all(traj)?;
+            w.write_all(fp)?;
+
             w.flush()?;
             // durability: the payload must be on disk before the rename
             // publishes it, else a crash can expose a torn/empty file
@@ -255,6 +297,7 @@ impl Checkpoint {
         let ck = match version {
             1 => Self::load_v1(&mut r)?,
             2 => Self::load_v2(&mut r)?,
+            3 => Self::load_v3(&mut r)?,
             v => return Err(anyhow!("unsupported checkpoint version {v}")),
         };
         ensure!(r.remaining() == 0, "trailing bytes in checkpoint");
@@ -286,9 +329,13 @@ impl Checkpoint {
             schedule_hash: SPEC_HASH_UNKNOWN,
             schedule_state: Vec::new(),
             gns: None,
+            world: 0,
+            traj_identity: String::new(),
+            exec_fingerprint: String::new(),
         })
     }
 
+    /// Sections 1–4, shared by the v2 and v3 layouts.
     fn load_v2(r: &mut Cur<'_>) -> Result<Self> {
         let mut scalars = r.section()?;
         let step = scalars.u64()?;
@@ -346,7 +393,25 @@ impl Checkpoint {
             schedule_hash,
             schedule_state,
             gns,
+            world: 0,
+            traj_identity: String::new(),
+            exec_fingerprint: String::new(),
         })
+    }
+
+    /// v3 = the v2 sections plus the exec section (§11 identity split).
+    fn load_v3(r: &mut Cur<'_>) -> Result<Self> {
+        let mut ck = Self::load_v2(r)?;
+        let mut exec = r.section()?;
+        ck.world = exec.u64()?;
+        let traj_len = exec.u64()? as usize;
+        let traj = exec.take(traj_len)?;
+        let fp = exec.take(exec.remaining())?;
+        ck.traj_identity = String::from_utf8(traj.to_vec())
+            .map_err(|_| anyhow!("corrupt exec section: trajectory identity is not UTF-8"))?;
+        ck.exec_fingerprint = String::from_utf8(fp.to_vec())
+            .map_err(|_| anyhow!("corrupt exec section: exec fingerprint is not UTF-8"))?;
+        Ok(ck)
     }
 }
 
@@ -369,10 +434,65 @@ mod tests {
             schedule_hash: fnv1a64(b"test-spec"),
             schedule_state: vec![1, 2, 3, 4, 5],
             gns: Some(GnsState { ema: 0.9, ema_s: 12.5, ema_g2: 3.25, observations: 17 }),
+            world: 2,
+            traj_identity: "cosine|lr=3f68b0f27bb2fe5b|b=4096|T=9001".into(),
+            exec_fingerprint: "w=2|coll=ring|threads=1|pin=true".into(),
         }
     }
 
+    /// Hand-encode the frozen v2 layout (what PR3/PR4-era builds wrote):
+    /// sections 1–4 without the exec section. Independent copy of
+    /// `tests/common/mod.rs`'s encoder — see `v1_bytes` for why.
+    fn v2_bytes(ck: &Checkpoint) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend(MAGIC);
+        out.extend(2u32.to_le_bytes());
+        // §1 scalars
+        out.extend(56u64.to_le_bytes());
+        for x in [ck.step, ck.tokens, ck.data_cursor, ck.phase] {
+            out.extend(x.to_le_bytes());
+        }
+        for x in [ck.gnorm_ema, ck.flops, ck.serial_time] {
+            out.extend(x.to_le_bytes());
+        }
+        // §2 leaves
+        let leaf_bytes =
+            |g: &[Vec<f32>]| -> u64 { 8 + g.iter().map(|l| 8 + 4 * l.len() as u64).sum::<u64>() };
+        let groups = [&ck.params, &ck.m, &ck.v];
+        let total: u64 = groups.iter().map(|g| leaf_bytes(g)).sum();
+        out.extend(total.to_le_bytes());
+        for group in groups {
+            out.extend((group.len() as u64).to_le_bytes());
+            for leaf in group.iter() {
+                out.extend((leaf.len() as u64).to_le_bytes());
+                for x in leaf {
+                    out.extend(x.to_le_bytes());
+                }
+            }
+        }
+        // §3 schedule
+        out.extend((8 + ck.schedule_state.len() as u64).to_le_bytes());
+        out.extend(ck.schedule_hash.to_le_bytes());
+        out.extend(&ck.schedule_state);
+        // §4 gns
+        match &ck.gns {
+            None => out.extend(0u64.to_le_bytes()),
+            Some(g) => {
+                out.extend(32u64.to_le_bytes());
+                for x in [g.ema, g.ema_s, g.ema_g2] {
+                    out.extend(x.to_le_bytes());
+                }
+                out.extend(g.observations.to_le_bytes());
+            }
+        }
+        out
+    }
+
     /// Hand-encode the frozen v1 layout (what pre-v2 builds wrote).
+    /// Deliberately an independent copy of `tests/common/mod.rs`'s
+    /// encoder: the unit suite must compile without the integration test
+    /// tree, and a divergence between the copies fails one suite — the
+    /// frozen-layout tripwire working as intended.
     fn v1_bytes(ck: &Checkpoint) -> Vec<u8> {
         let mut out = Vec::new();
         out.extend(MAGIC);
@@ -415,6 +535,69 @@ mod tests {
         ck.gns = None;
         ck.save(&path).unwrap();
         assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+        // …and the degenerate exec section (no identities known) too
+        ck.world = 0;
+        ck.traj_identity = String::new();
+        ck.exec_fingerprint = String::new();
+        ck.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+    }
+
+    #[test]
+    fn v2_files_load_with_unknown_topology() {
+        // v2 migration: sections 1–4 survive exactly; the §11 exec fields
+        // come back as "unknown" so the coordinator falls back to the
+        // legacy (topology-bound) identity check.
+        let dir = crate::util::TempDir::new("ckpt").unwrap();
+        let path = dir.path().join("v2.ckpt");
+        let ck = sample();
+        std::fs::write(&path, v2_bytes(&ck)).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, ck.step);
+        assert_eq!(back.phase, ck.phase);
+        assert_eq!(back.params, ck.params);
+        assert_eq!(back.schedule_hash, ck.schedule_hash);
+        assert_eq!(back.schedule_state, ck.schedule_state);
+        assert_eq!(back.gns, ck.gns);
+        assert_eq!(back.world, 0, "v2 predates the exec section");
+        assert!(back.traj_identity.is_empty());
+        assert!(back.exec_fingerprint.is_empty());
+        // a trailing-junk v2 file is still rejected (no silent v3 parse)
+        let mut junk = v2_bytes(&ck);
+        junk.extend_from_slice(b"JUNK");
+        std::fs::write(&path, &junk).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn v3_exec_section_rejects_corrupt_strings_and_lengths() {
+        let dir = crate::util::TempDir::new("ckpt").unwrap();
+        let path = dir.path().join("v3.ckpt");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // the traj_len field sits 8 bytes into the exec section payload;
+        // find the section start by walking the four section lengths
+        let mut off = 12usize; // magic + version
+        for _ in 0..4 {
+            let len =
+                u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
+            off += 8 + len;
+        }
+        let traj_len_off = off + 8 + 8; // section len + world
+        let mut evil = bytes.clone();
+        evil[traj_len_off..traj_len_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &evil).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated or corrupt"), "oversized traj_len: {err}");
+        // non-UTF-8 identity bytes are corrupt, not silently lossy
+        let traj_off = traj_len_off + 8;
+        let mut bad_utf8 = bytes.clone();
+        bad_utf8[traj_off] = 0xFF;
+        bad_utf8[traj_off + 1] = 0xFE;
+        std::fs::write(&path, &bad_utf8).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("not UTF-8"), "unexpected: {err}");
     }
 
     #[test]

@@ -1,0 +1,176 @@
+//! Elastic world policy (DESIGN.md §11): how the data-parallel world size
+//! follows the Seesaw batch ramp.
+//!
+//! Seesaw's payoff is wall-clock: every cut doubles the batch so serial
+//! steps shrink — but at a **fixed** world size every doubling also
+//! doubles per-worker compute, eroding the paper's ≈36% serial-time
+//! speedup step by step. The production answer (the regime of Lau et
+//! al. 2024's adaptive-batch distributed training) is to grow the worker
+//! fleet *with* the ramp so per-worker microbatches stay constant. This
+//! module is that policy layer:
+//!
+//! * [`WorldPolicy::Fixed`] — the historical behaviour: the effective
+//!   world is `world_size`, whatever the schedule does.
+//! * [`WorldPolicy::RampCoupled`] — the effective world scales with the
+//!   planned batch, `world = base_world · (n_micro / base_micro)`, capped
+//!   at `max_world` (the fleet you can actually get) and floored at
+//!   `base_world` (the ramp never scales *in* below the configured
+//!   world). Per-worker microbatches then hold at `base_micro /
+//!   base_world` across the whole ramp, so modeled step time stays ~flat
+//!   where the fixed-world charge doubles
+//!   ([`crate::metrics::WallClockModel::step_time_elastic`],
+//!   `benches/elastic_ramp.rs`).
+//!
+//! The policy is a **pure function** of the planned batch — no mutable
+//! state, nothing extra to checkpoint: a resumed run re-derives the same
+//! world from the restored schedule phase, and a world *transition*
+//! (either a ramp-coupled growth step or an operator resuming a
+//! checkpoint onto a different fleet) surfaces as a **reshard event** in
+//! the coordinator: the [`crate::metrics::GnsEstimator`] is explicitly
+//! resharded ([`crate::metrics::GnsEstimator::reshard`]) and the step
+//! engine resizes its worker/buffer/pool state
+//! ([`super::StepEngine::resize`]).
+
+/// How the effective data-parallel world follows the batch ramp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WorldPolicy {
+    /// The effective world is always the configured `world_size`.
+    #[default]
+    Fixed,
+    /// Grow the world with the batch so per-worker microbatches stay
+    /// constant, up to `max_world` workers.
+    RampCoupled {
+        /// Hard cap on the scaled-out world (fleet size). Once the ramp
+        /// reaches it, further cuts grow per-worker work again — the
+        /// capped regime `benches/elastic_ramp.rs` charts.
+        max_world: usize,
+    },
+}
+
+impl WorldPolicy {
+    /// Parse the config/CLI spelling (`fixed` | `ramp-coupled`). The
+    /// `max_world` cap is carried separately (`exec.max_world`,
+    /// `--max-world`) and folded in by the caller.
+    pub fn parse(s: &str, max_world: usize) -> Option<Self> {
+        match s {
+            "fixed" => Some(WorldPolicy::Fixed),
+            "ramp-coupled" | "ramp_coupled" => Some(WorldPolicy::RampCoupled { max_world }),
+            _ => None,
+        }
+    }
+
+    /// Compact label for fingerprints and run banners.
+    pub fn label(&self) -> String {
+        match self {
+            WorldPolicy::Fixed => "fixed".into(),
+            WorldPolicy::RampCoupled { max_world } => format!("ramp-coupled(max={max_world})"),
+        }
+    }
+}
+
+/// The effective world for one optimizer step: `base_world` under
+/// [`WorldPolicy::Fixed`]; under [`WorldPolicy::RampCoupled`] it scales
+/// with the batch growth `n_micro / base_micro` (whole multiples only —
+/// fractional fleet growth would unbalance shards), clamped to
+/// `[base_world, max_world]`.
+///
+/// Deliberately **not** clamped to `n_micro` here: the engine's
+/// microbatch clamp stays visible (`StepOutput::world`) and the
+/// coordinator's starvation guards stay in charge of diagnosing it — a
+/// silent clamp inside the policy would re-introduce exactly the
+/// mid-ramp GNS starvation bug PR 4 fixed. For sane configurations
+/// (`base_micro ≥ base_world`, the adaptive startup guard) the scaled
+/// world never exceeds the microbatch count by construction.
+pub fn effective_world(
+    policy: WorldPolicy,
+    base_world: usize,
+    base_micro: u64,
+    n_micro: u64,
+) -> usize {
+    let base_world = base_world.max(1);
+    match policy {
+        WorldPolicy::Fixed => base_world,
+        WorldPolicy::RampCoupled { max_world } => {
+            let growth = (n_micro / base_micro.max(1)).max(1);
+            let desired = (base_world as u64).saturating_mul(growth);
+            let cap = (max_world.max(1) as u64).max(base_world as u64);
+            desired.min(cap) as usize
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_policy_ignores_the_ramp() {
+        for n_micro in [1u64, 2, 8, 64] {
+            assert_eq!(effective_world(WorldPolicy::Fixed, 4, 4, n_micro), 4);
+        }
+        // degenerate base world is floored to one worker
+        assert_eq!(effective_world(WorldPolicy::Fixed, 0, 4, 8), 1);
+    }
+
+    #[test]
+    fn ramp_coupled_holds_per_worker_microbatches_constant() {
+        let p = WorldPolicy::RampCoupled { max_world: 64 };
+        let (base_world, base_micro) = (2usize, 4u64);
+        for k in 0..5u32 {
+            let n_micro = base_micro << k; // the Seesaw ×2 ramp
+            let world = effective_world(p, base_world, base_micro, n_micro);
+            assert_eq!(world, base_world << k, "rung {k}");
+            assert_eq!(n_micro / world as u64, base_micro / base_world as u64, "rung {k}");
+        }
+    }
+
+    #[test]
+    fn ramp_coupled_caps_at_max_world_and_floors_at_base() {
+        let p = WorldPolicy::RampCoupled { max_world: 8 };
+        assert_eq!(effective_world(p, 2, 4, 256), 8, "capped at the fleet size");
+        // the batch never shrinks below base under Seesaw, but the policy
+        // must still be total: a sub-base batch keeps the base world
+        assert_eq!(effective_world(p, 2, 4, 1), 2);
+        assert_eq!(effective_world(p, 2, 4, 4), 2, "no growth before the first cut");
+        // a cap below the base world never scales *in* below base
+        let tight = WorldPolicy::RampCoupled { max_world: 1 };
+        assert_eq!(effective_world(tight, 4, 4, 64), 4);
+    }
+
+    #[test]
+    fn ramp_coupled_growth_is_monotone_in_the_batch() {
+        let p = WorldPolicy::RampCoupled { max_world: 32 };
+        let mut last = 0usize;
+        for n_micro in 1..=128u64 {
+            let w = effective_world(p, 2, 3, n_micro);
+            assert!(w >= last, "world must grow monotonically with the batch");
+            last = w;
+        }
+        assert_eq!(last, 32, "the sweep must reach the cap");
+    }
+
+    #[test]
+    fn non_power_of_two_ramps_take_whole_growth_steps() {
+        // β = 1.5 ramp: 4 → 6 → 9 microbatches; growth multiples 1, 1, 2
+        let p = WorldPolicy::RampCoupled { max_world: 64 };
+        assert_eq!(effective_world(p, 2, 4, 6), 2);
+        assert_eq!(effective_world(p, 2, 4, 9), 4);
+    }
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        assert_eq!(WorldPolicy::parse("fixed", 8), Some(WorldPolicy::Fixed));
+        assert_eq!(
+            WorldPolicy::parse("ramp-coupled", 8),
+            Some(WorldPolicy::RampCoupled { max_world: 8 })
+        );
+        assert_eq!(
+            WorldPolicy::parse("ramp_coupled", 3),
+            Some(WorldPolicy::RampCoupled { max_world: 3 })
+        );
+        assert_eq!(WorldPolicy::parse("bogus", 8), None);
+        assert_eq!(WorldPolicy::Fixed.label(), "fixed");
+        assert_eq!(WorldPolicy::RampCoupled { max_world: 16 }.label(), "ramp-coupled(max=16)");
+        assert_eq!(WorldPolicy::default(), WorldPolicy::Fixed);
+    }
+}

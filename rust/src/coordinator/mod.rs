@@ -9,8 +9,11 @@
 //!    GNS-driven [`crate::schedule::AdaptiveSeesaw`] controller;
 //! 2. plan `B / micro_tokens` microbatches on this thread (the loader
 //!    order is the determinism contract) and hand them to the
-//!    [`StepEngine`], which shards them round-robin across `world_size`
-//!    workers;
+//!    [`StepEngine`], which shards them round-robin across the step's
+//!    **effective world** — `world_size` under [`WorldPolicy::Fixed`],
+//!    growing with the batch ramp under [`WorldPolicy::RampCoupled`]
+//!    (`coordinator::elastic`, DESIGN.md §11); a world transition is a
+//!    reshard event (GNS estimator resharded, engine resized, logged);
 //! 3. each [`worker::Worker`] accumulates fwd+bwd gradients over its
 //!    shard directly into its preallocated flat buffer
 //!    ([`ModelRuntime::grad_step_into`]) — on the engine's persistent
@@ -39,9 +42,11 @@
 //! engine and reproduces the historical single-thread coordinator.
 
 mod checkpoint;
+pub mod elastic;
 pub mod worker;
 
 pub use checkpoint::{fnv1a64, Checkpoint, SPEC_HASH_UNKNOWN};
+pub use elastic::WorldPolicy;
 pub use worker::{GradSource, Microbatch, MicroStats, StepEngine, StepOutput, Worker};
 
 use crate::config::{OptimizerKind, ScheduleSpec, TrainConfig};
@@ -134,11 +139,27 @@ pub struct Trainer {
     /// The step engine: workers, gradient buffers, collective — reused
     /// across steps (configured by `cfg.exec`).
     pub engine: StepEngine,
-    /// FNV-1a hash of the schedule identity this run was configured with
-    /// ([`TrainConfig::schedule_identity`]) — written into every
-    /// checkpoint and compared on resume, so controller state is never
-    /// silently restored into a different schedule.
-    pub schedule_hash: u64,
+    /// FNV-1a hash of the **optimizer-trajectory** identity this run was
+    /// configured with ([`TrainConfig::trajectory_identity`]) — written
+    /// into every checkpoint and compared on resume, so controller state
+    /// is never silently restored into a different schedule. The
+    /// execution topology is deliberately outside it (§11 split): a
+    /// topology change on resume is a reshard event, not an error.
+    pub trajectory_hash: u64,
+    /// FNV-1a hash of the pre-split identity
+    /// ([`TrainConfig::legacy_schedule_identity`]) — what v2 checkpoints
+    /// stored; only consulted when resuming one.
+    pub legacy_hash: u64,
+    /// Microbatches the *base* batch plans — the denominator of the
+    /// ramp-coupled world growth law (`elastic::effective_world`).
+    pub base_micro: u64,
+    /// Effective world of the previous executed step (seeded from the
+    /// checkpoint on resume). A step whose effective world differs is a
+    /// **reshard event**: the GNS estimator is explicitly resharded, the
+    /// engine resized, and the transition logged. `None` until the first
+    /// step (or when resuming a pre-v3 checkpoint that predates the
+    /// recorded world).
+    last_world: Option<usize>,
 }
 
 impl Trainer {
@@ -152,6 +173,8 @@ impl Trainer {
             );
         }
         let rt = ModelRuntime::load(cfg.model_dir())?;
+        let base_micro =
+            (cfg.base_batch_tokens as f64 / rt.micro_tokens() as f64).round().max(1.0) as u64;
         if matches!(cfg.schedule, ScheduleSpec::Adaptive { .. }) {
             // the engine clamps `world` to the microbatch count, so a base
             // batch planning fewer microbatches than workers would shard
@@ -162,9 +185,8 @@ impl Trainer {
             // base under the adaptive ramp, so requiring the *base* batch
             // to cover every worker keeps the whole run out of the clamp
             // regime; `train_step` still checks the effective world every
-            // step as a backstop.
-            let base_micro =
-                (cfg.base_batch_tokens as f64 / rt.micro_tokens() as f64).round().max(1.0) as u64;
+            // step as a backstop. (The ramp-coupled policy preserves the
+            // invariant: the world grows at most as fast as the batch.)
             ensure!(
                 base_micro >= cfg.world_size as u64,
                 "adaptive schedule needs base_batch_tokens ≥ world_size microbatches \
@@ -178,6 +200,15 @@ impl Trainer {
                 base_micro.min(cfg.world_size as u64)
             );
         }
+        if let WorldPolicy::RampCoupled { max_world } = cfg.exec.elastic {
+            ensure!(
+                max_world >= cfg.world_size,
+                "elastic ramp-coupled policy caps the fleet at max_world = {max_world}, \
+                 below the configured world_size = {} — raise --max-world or lower \
+                 --world-size",
+                cfg.world_size
+            );
+        }
         let total = cfg.resolve_total_tokens(rt.manifest.non_embedding_params);
         let schedule = cfg.build_dyn_schedule(total);
         let corpus = match &cfg.corpus_path {
@@ -187,8 +218,21 @@ impl Trainer {
         let loader = Loader::new(corpus, rt.seq_len(), cfg.seed.wrapping_add(1));
         let wall = cfg.wallclock.unwrap_or_default();
         let engine = StepEngine::new(cfg.exec);
-        let schedule_hash = fnv1a64(cfg.schedule_identity(total).as_bytes());
-        Ok(Self { rt, cfg, schedule, loader, wall, total_tokens: total, engine, schedule_hash })
+        let trajectory_hash = fnv1a64(cfg.trajectory_identity(total).as_bytes());
+        let legacy_hash = fnv1a64(cfg.legacy_schedule_identity(total).as_bytes());
+        Ok(Self {
+            rt,
+            cfg,
+            schedule,
+            loader,
+            wall,
+            total_tokens: total,
+            engine,
+            trajectory_hash,
+            legacy_hash,
+            base_micro,
+            last_world: None,
+        })
     }
 
     /// Fresh state (params from the `init` executable).
@@ -219,7 +263,36 @@ impl Trainer {
         state.phase = point.phase;
         let n_micro = self.plan_microbatches(point.batch_tokens);
         let batch_tokens = n_micro * self.rt.micro_tokens();
-        let world = self.cfg.world_size.max(1);
+        // --- elastic world (DESIGN.md §11): the policy derives this
+        // step's effective world from the planned batch — a pure function
+        // of the (restored) schedule state, so resume re-derives it
+        // identically. A transition against the previous step's world
+        // (ramp-coupled growth, or an operator resuming onto a different
+        // fleet) is a reshard event: the GNS estimator carries its EMAs
+        // across the new shard geometry explicitly and the engine frees
+        // resources the smaller side no longer needs.
+        let world = elastic::effective_world(
+            self.cfg.exec.elastic,
+            self.cfg.world_size.max(1),
+            self.base_micro,
+            n_micro,
+        );
+        if let Some(prev) = self.last_world {
+            if prev != world {
+                state
+                    .gns
+                    .reshard(prev, world)
+                    .with_context(|| format!("resharding GNS estimator {prev} → {world}"))?;
+                self.engine.resize(world);
+                eprintln!(
+                    "reshard: world {prev} → {world} at step {} \
+                     ({n_micro} microbatches, {} per worker)",
+                    state.step + 1,
+                    n_micro / world.max(1) as u64
+                );
+            }
+        }
+        self.last_world = Some(world);
         let b = self.rt.microbatch();
 
         // --- plan: the loader stays on this thread, so the token stream
@@ -245,8 +318,8 @@ impl Trainer {
             // makes this unreachable for well-formed configs, so reaching
             // it means the schedule produced a batch below the base.
             bail!(
-                "step {}: batch of {} microbatch(es) cannot shard across the configured \
-                 world_size = {} (effective world {}); the GNS estimator would silently \
+                "step {}: batch of {} microbatch(es) cannot shard across the planned \
+                 world = {} (engine ran {}); the GNS estimator would silently \
                  lose shard contrast mid-ramp — raise base_batch_tokens or lower world_size",
                 state.step + 1,
                 n_micro,
@@ -311,10 +384,30 @@ impl Trainer {
         let tokens_before = state.tokens;
         state.tokens += batch_tokens;
         state.flops += self.rt.manifest.flops_per_token as f64 * batch_tokens as f64;
-        state.serial_time += if self.cfg.exec.overlap {
-            self.wall.step_time_overlapped(batch_tokens, &out.comm)
-        } else {
-            self.wall.step_time_comm(batch_tokens, out.comm.bytes_moved)
+        // charge selection: the elastic fleet scales the wave count with
+        // the effective world (holding step time ~flat across the ramp
+        // where the fixed-world charge doubles per cut), and overlap
+        // pipelines the bucketed reduce behind each wave's compute —
+        // every (elastic × overlap) combination charges exactly what the
+        // engine actually ran, so the CSV's `comm_buckets` and the
+        // modeled time never contradict each other.
+        state.serial_time += match (self.cfg.exec.elastic, self.cfg.exec.overlap) {
+            (WorldPolicy::RampCoupled { .. }, true) => self.wall.step_time_elastic_overlapped(
+                batch_tokens,
+                out.world,
+                self.cfg.world_size.max(1),
+                &out.comm,
+            ),
+            (WorldPolicy::RampCoupled { .. }, false) => self.wall.step_time_elastic(
+                batch_tokens,
+                out.world,
+                self.cfg.world_size.max(1),
+                out.comm.bytes_moved,
+            ),
+            (WorldPolicy::Fixed, true) => self.wall.step_time_overlapped(batch_tokens, &out.comm),
+            (WorldPolicy::Fixed, false) => {
+                self.wall.step_time_comm(batch_tokens, out.comm.bytes_moved)
+            }
         };
         // feed the smoothed GNS back at the *end-of-step* token count —
         // the value the next `query` call will see.
@@ -333,6 +426,7 @@ impl Trainer {
             serial_time: state.serial_time,
             comm_bytes: out.comm.bytes_moved,
             comm_buckets: out.comm.buckets,
+            world: out.world,
             gns: gns_raw,
             b_crit,
             cuts,
@@ -393,11 +487,14 @@ impl Trainer {
     }
 
     /// Persist the current state to `<checkpoint_dir>/latest.ckpt`
-    /// (no-op when no checkpoint dir is configured). Writes the v2
+    /// (no-op when no checkpoint dir is configured). Writes the v3
     /// format: training scalars + leaves, the schedule's opaque
-    /// controller blob behind the run's spec hash, and the GNS-estimator
-    /// snapshot — everything a resumed run needs to retrace the
-    /// uninterrupted trajectory bit-for-bit.
+    /// controller blob behind the run's trajectory hash, the
+    /// GNS-estimator snapshot, and the execution fingerprint (effective
+    /// world + decoded identity strings) — everything a resumed run
+    /// needs to retrace the uninterrupted trajectory bit-for-bit, and
+    /// everything a resumed run *on a different fleet* needs to reshard
+    /// instead of refusing.
     pub fn save_checkpoint(&self, state: &TrainState) -> Result<()> {
         let Some(dir) = &self.cfg.checkpoint_dir else { return Ok(()) };
         let ck = Checkpoint {
@@ -411,7 +508,7 @@ impl Trainer {
             params: self.rt.to_host(&state.params)?,
             m: self.rt.to_host(&state.m)?,
             v: self.rt.to_host(&state.v)?,
-            schedule_hash: self.schedule_hash,
+            schedule_hash: self.trajectory_hash,
             schedule_state: self.schedule.state_save(),
             // the estimator keeps its EMAs finite (observe drops
             // non-finite evidence), but never let a pathological snapshot
@@ -420,6 +517,12 @@ impl Trainer {
             // a loadable checkpoint — degrade to "no snapshot" instead.
             gns: Some(state.gns.state())
                 .filter(|s| s.ema_s.is_finite() && s.ema_g2.is_finite()),
+            // the effective world of the last executed step (the base
+            // world before the first) — the `old_world` side of the GNS
+            // reshard when this file resumes onto a different fleet
+            world: self.last_world.unwrap_or(self.cfg.world_size.max(1)) as u64,
+            traj_identity: self.cfg.trajectory_identity(self.total_tokens),
+            exec_fingerprint: self.cfg.exec_fingerprint(),
         };
         ck.save(dir.join("latest.ckpt"))
     }
@@ -431,20 +534,62 @@ impl Trainer {
             return Ok(None);
         }
         let ck = Checkpoint::load(&path)?;
-        // schedule-identity guard: controller state only means anything
-        // under the schedule that produced it. v1 files (hash unknown)
-        // predate stateful schedules, so the check is vacuous for them.
-        if ck.schedule_hash != SPEC_HASH_UNKNOWN && ck.schedule_hash != self.schedule_hash {
-            bail!(
-                "checkpoint {:?} was written under a different schedule configuration \
-                 (spec hash {:#018x}, this run is {:#018x} = {}); resuming would \
-                 silently change the training trajectory — restart from scratch or \
-                 rerun with the original schedule configuration",
-                path,
-                ck.schedule_hash,
-                self.schedule_hash,
-                self.cfg.schedule_identity(self.total_tokens),
-            );
+        // trajectory-identity guard (§11 split): controller state only
+        // means anything under the schedule that produced it, so the
+        // trajectory hash must match. v3 files hash the trajectory alone
+        // (topology may differ — that's a reshard, handled below); v2
+        // files hashed trajectory+topology, so they are verified against
+        // the legacy identity; v1 files (hash unknown) predate stateful
+        // schedules, so the check is vacuous.
+        if ck.schedule_hash != SPEC_HASH_UNKNOWN {
+            let is_v3 = !ck.traj_identity.is_empty() || !ck.exec_fingerprint.is_empty();
+            if is_v3 && ck.schedule_hash != self.trajectory_hash {
+                // decoded-field diagnosis: print both identity strings so
+                // the operator sees *which* knob moved (kind/params/
+                // lr/batch/budget), and both fingerprints so a trajectory
+                // conflict is never mistaken for a topology change (the
+                // latter would have been allowed).
+                bail!(
+                    "checkpoint {:?} was written under a different schedule configuration \
+                     — resuming would silently change the training trajectory.\n  \
+                     saved   trajectory: {}\n  current trajectory: {}\n  \
+                     (execution topology may differ freely and is NOT the problem here: \
+                     saved [{}] vs current [{}])\n  \
+                     restart from scratch or rerun with the original schedule configuration",
+                    path,
+                    ck.traj_identity,
+                    self.cfg.trajectory_identity(self.total_tokens),
+                    ck.exec_fingerprint,
+                    self.cfg.exec_fingerprint(),
+                );
+            }
+            if !is_v3 && ck.schedule_hash != self.legacy_hash {
+                bail!(
+                    "checkpoint {:?} (pre-v3 format) was written under a different \
+                     configuration (spec hash {:#018x}, this run is {:#018x} = {}); \
+                     pre-v3 files bind world_size and the collective into the identity, \
+                     so this is either a schedule change or a topology change — rerun \
+                     with the original configuration (elastic resumes onto a different \
+                     fleet need a v3 checkpoint), or restart from scratch",
+                    path,
+                    ck.schedule_hash,
+                    self.legacy_hash,
+                    self.cfg.legacy_schedule_identity(self.total_tokens),
+                );
+            }
+            // topology drift on a v3 file: a reshard event, not an error.
+            // The world transition itself is resharded by the first
+            // train_step (seeded through `last_world` below), so growth
+            // under an elastic policy and an operator-initiated fleet
+            // change flow through one code path.
+            if is_v3 && ck.exec_fingerprint != self.cfg.exec_fingerprint() {
+                eprintln!(
+                    "reshard: resuming under a different execution topology \
+                     (trajectory identity verified)\n  saved:   {}\n  current: {}",
+                    ck.exec_fingerprint,
+                    self.cfg.exec_fingerprint()
+                );
+            }
         }
         self.schedule
             .state_restore(&ck.schedule_state)
@@ -463,6 +608,13 @@ impl Trainer {
                 .with_context(|| format!("restoring GNS estimator state from {path:?}"))?,
             None => GnsEstimator::new(self.cfg.gns_ema()),
         };
+        // seed the reshard edge-detector with the world the checkpoint
+        // was saved at: the first resumed step compares its effective
+        // world against it and reshards on any difference (scale-out
+        // resume, or a ramp-coupled growth the interruption raced).
+        // Pre-v3 files never recorded it — leave the detector unseeded
+        // (the first step establishes the baseline silently).
+        self.last_world = (ck.world != 0).then_some(ck.world as usize);
         Ok(Some(TrainState {
             params: self.rt.from_host(&ck.params)?,
             m: self.rt.from_host(&ck.m)?,

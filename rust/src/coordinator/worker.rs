@@ -188,6 +188,26 @@ impl WorkerPool {
             self.threads.push(PoolThread::spawn(self.threads.len()));
         }
     }
+
+    /// Shrink to at most `n` threads (an elastic scale-in, DESIGN.md
+    /// §11): close the surplus threads' channels so they leave their
+    /// recv loop, join them, and drop their slots. Growth stays lazy —
+    /// the next step's [`WorkerPool::ensure`] respawns on demand — so
+    /// `resize` is cheap to call on every reshard event.
+    fn resize(&mut self, n: usize) {
+        if n >= self.threads.len() {
+            return;
+        }
+        for t in &mut self.threads[n..] {
+            t.tx = None; // close first: no surplus thread stays parked
+        }
+        for t in &mut self.threads[n..] {
+            if let Some(h) = t.handle.take() {
+                let _ = h.join();
+            }
+        }
+        self.threads.truncate(n);
+    }
 }
 
 impl Drop for WorkerPool {
@@ -478,6 +498,26 @@ impl StepEngine {
     pub fn mean_grad(&self) -> &[f32] {
         self.bufs.first().map(|b| b.as_slice()).unwrap_or(&[])
     }
+
+    /// Resize the engine for a new effective `world` (an elastic reshard,
+    /// DESIGN.md §11): drop the workers, gradient buffers and pool
+    /// threads beyond what `world` needs — a scale-*in* returns their
+    /// memory and parks nothing idle — while growth stays lazy (the next
+    /// [`StepEngine::execute`] allocates workers/buffers and spawns pool
+    /// threads on demand, exactly as on the first step). Calling this
+    /// never changes any step's results: engine state
+    /// is re-planned per step, so `resize` is purely a resource-footprint
+    /// operation and bit-exactness is untouched (pinned by
+    /// `resize_cycles_stay_bit_identical`).
+    pub fn resize(&mut self, world: usize) {
+        let world = world.max(1);
+        self.workers.truncate(world);
+        self.bufs.truncate(world);
+        let threads = self.exec.worker_threads.max(1).min(world);
+        let per = world.div_ceil(threads);
+        let n_chunks = world.div_ceil(per);
+        self.pool.resize(n_chunks);
+    }
 }
 
 #[cfg(test)]
@@ -632,6 +672,45 @@ mod tests {
                 assert_eq!(out.comm.buckets, want_buckets, "{kind:?} b={bucket_bytes}");
             }
         }
+    }
+
+    #[test]
+    fn resize_cycles_stay_bit_identical_and_shrink_the_pool() {
+        // the elastic reshard contract at engine scale: growing and
+        // shrinking the engine between steps neither changes any step's
+        // bits nor leaks pool threads — a scale-in really joins them.
+        let src = FakeSource { elems: 301 };
+        let oracle = |world: usize, n: u64| {
+            let mut e = StepEngine::new(ExecSpec { worker_threads: 4, ..ExecSpec::default() });
+            let out = e.execute(&src, world, micros(n)).unwrap();
+            (out, e.mean_grad().to_vec())
+        };
+        let mut e = StepEngine::new(ExecSpec { worker_threads: 4, ..ExecSpec::default() });
+        // ramp out: 2 → 4 → 8 workers (the RampCoupled shape)
+        for (world, n) in [(2usize, 4u64), (4, 8), (8, 16)] {
+            e.resize(world);
+            let out = e.execute(&src, world, micros(n)).unwrap();
+            let (want, want_grad) = oracle(world, n);
+            assert_eq!(out, want, "scale-out to {world}");
+            assert_eq!(e.mean_grad(), &want_grad[..], "scale-out to {world} mean grad");
+        }
+        let threads_at_peak = e.pool_threads();
+        assert!(threads_at_peak >= 2, "the 8-worker step must have spawned threads");
+        // scale back in: surplus pool threads are joined, not parked
+        e.resize(2);
+        assert!(
+            e.pool_threads() < threads_at_peak,
+            "resize(2) must shrink the pool ({} vs {threads_at_peak})",
+            e.pool_threads()
+        );
+        let out = e.execute(&src, 2, micros(4)).unwrap();
+        let (want, want_grad) = oracle(2, 4);
+        assert_eq!(out, want, "scale-in back to 2");
+        assert_eq!(e.mean_grad(), &want_grad[..]);
+        // resize is total on degenerate input
+        e.resize(0);
+        let out = e.execute(&src, 1, micros(2)).unwrap();
+        assert_eq!(out.world, 1);
     }
 
     #[test]

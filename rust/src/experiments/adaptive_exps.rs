@@ -89,7 +89,7 @@ pub fn run_schedule(
             GnsFeed::None => {}
             GnsFeed::Oracle(o) => sched.observe_gns(tokens, o(tokens)),
             GnsFeed::Measured => {
-                if let Some(gns) = measured_gns(&it, p.batch_tokens) {
+                if let Some(gns) = exact_gns(&it, p.batch_tokens) {
                     sched.observe_gns(tokens, gns);
                 }
             }
@@ -101,7 +101,9 @@ pub fn run_schedule(
 /// The recursion's exact `B_noise = tr(Σ)/‖G‖²` at batch `b`: noise terms
 /// scale as `tr(Σ)/B`, the mean term is `(1−1/B)·‖G‖²` — undo both
 /// factors to recover the ratio. `None` when the signal is non-positive.
-fn measured_gns(it: &crate::linreg::recursion::RiskIter, b: u64) -> Option<f64> {
+/// Public because the golden-trajectory suite (`tests/golden.rs`) replays
+/// exactly this feed — any drift in the decomposition trips the fixture.
+pub fn exact_gns(it: &crate::linreg::recursion::RiskIter, b: u64) -> Option<f64> {
     let g = it.grad_norm_sq(b);
     let noise_tr = (g.additive + g.iterate) * b as f64;
     let signal = if b > 1 { g.mean / (1.0 - 1.0 / b as f64) } else { g.mean };
@@ -234,7 +236,7 @@ pub fn resume_equivalence(
         tokens += p.batch_tokens;
         serial_time += wall.step_time(p.batch_tokens);
         steps += 1;
-        if let Some(gns) = measured_gns(&it, p.batch_tokens) {
+        if let Some(gns) = exact_gns(&it, p.batch_tokens) {
             sched.observe_gns(tokens, gns);
         }
         if interrupt_tokens.is_none() && cuts >= 1 {

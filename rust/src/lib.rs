@@ -11,9 +11,11 @@
 //!   data-parallel **step engine** ([`coordinator::StepEngine`]) whose
 //!   workers accumulate gradients into preallocated flat buffers on real
 //!   scoped threads and combine them through a pluggable
-//!   [`collective::Collective`] (configured by [`config::ExecSpec`]),
-//!   plus the noisy-linear-regression theory substrate that verifies
-//!   Theorem 1, Corollary 1 and Lemma 4 exactly ([`linreg`]).
+//!   [`collective::Collective`] (configured by [`config::ExecSpec`],
+//!   including the elastic [`coordinator::WorldPolicy`] that grows the
+//!   fleet with the batch ramp and reshards across resumes — DESIGN.md
+//!   §11), plus the noisy-linear-regression theory substrate that
+//!   verifies Theorem 1, Corollary 1 and Lemma 4 exactly ([`linreg`]).
 //! * **L2/L1 (python/, build-time only)** — a JAX transformer LM whose
 //!   attention / cross-entropy / AdamW hot-spots are Pallas kernels,
 //!   AOT-lowered once to HLO-text artifacts.

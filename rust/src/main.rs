@@ -5,6 +5,7 @@
 //!              [--lr 3e-3] [--batch-tokens 4096] [--total-tokens N]
 //!              [--world-size W] [--worker-threads T] [--collective ring|parallel]
 //!              [--pin-order true|false] [--overlap true|false] [--bucket-bytes N]
+//!              [--elastic fixed|ramp-coupled] [--max-world W]
 //!              [--variant ref|pallas] [--out-csv path]
 //!              [--gns-ema 0.9] [--hysteresis TOKENS]   (with --schedule adaptive)
 //!              [--checkpoint-dir DIR] [--checkpoint-every STEPS]
@@ -19,18 +20,26 @@
 //! the GNS-driven controller (needs `--world-size ≥ 2`); `seesaw exp
 //! adaptive` runs the fixed-vs-adaptive ablation on the live LM stack.
 //!
+//! `--elastic ramp-coupled` grows the effective world with the Seesaw
+//! batch ramp (per-worker microbatches stay constant, capped at
+//! `--max-world`); resuming a v3 checkpoint onto a *different* fleet is
+//! allowed — the trajectory identity is verified, the topology change
+//! is logged as a reshard event, and the GNS estimator is resharded
+//! (DESIGN.md §11, README "Elastic scale-out").
+//!
 //! With `--checkpoint-dir` the run saves `latest.ckpt` every
 //! `--checkpoint-every` steps (and at the end) and **resumes** from it on
-//! relaunch — including adaptive runs: the v2 checkpoint carries the
-//! controller's cut state and the GNS estimator's EMAs, and the resumed
-//! trajectory is bit-identical to an uninterrupted one. A checkpoint
-//! written under a different schedule configuration is rejected by a
-//! spec-hash check (see README "Preemption & resume").
+//! relaunch — including adaptive runs: the v3 checkpoint carries the
+//! controller's cut state, the GNS estimator's EMAs and the execution
+//! fingerprint, and the resumed trajectory is bit-identical to an
+//! uninterrupted one. A checkpoint written under a different *schedule*
+//! configuration is rejected with the differing fields named; a
+//! different *topology* reshards (see README "Preemption & resume").
 
 use anyhow::{anyhow, bail, Result};
 use seesaw::collective::CollectiveKind;
 use seesaw::config::{ScheduleSpec, TrainConfig};
-use seesaw::coordinator::Trainer;
+use seesaw::coordinator::{Trainer, WorldPolicy};
 use seesaw::experiments::{linreg_exps, lm_exps, Scale};
 use seesaw::runtime::ModelRuntime;
 use seesaw::util::cli::Args;
@@ -115,6 +124,39 @@ fn train(args: &Args) -> Result<()> {
         }
         cfg.exec.bucket_bytes = x as usize;
     }
+    let max_world = args.u64_opt("max-world")?;
+    if max_world == Some(0) {
+        bail!("--max-world must be positive (the fleet needs at least one worker)");
+    }
+    if let Some(s) = args.str_opt("elastic") {
+        // a CLI policy that merely restates a config-file ramp-coupled
+        // policy must not reset its cap — keep the config cap as the
+        // default and let an explicit --max-world (below) override it
+        let default_cap = match cfg.exec.elastic {
+            WorldPolicy::RampCoupled { max_world } => max_world,
+            WorldPolicy::Fixed => 64,
+        };
+        cfg.exec.elastic = WorldPolicy::parse(s, default_cap)
+            .ok_or_else(|| anyhow!("unknown elastic policy `{s}` (fixed|ramp-coupled)"))?;
+    }
+    if let Some(mw) = max_world {
+        match cfg.exec.elastic {
+            // --max-world retunes the (config- or CLI-set) cap…
+            WorldPolicy::RampCoupled { .. } => {
+                cfg.exec.elastic = WorldPolicy::RampCoupled { max_world: mw as usize };
+            }
+            // …but silently dropping it under a fixed world — whether
+            // fixed came from the config, the default, or an explicit
+            // `--elastic fixed` — would read as "elastic on" to the
+            // operator; refuse with the fix.
+            WorldPolicy::Fixed => {
+                bail!(
+                    "--max-world only applies with an elastic ramp-coupled policy \
+                     (pass --elastic ramp-coupled, or set exec.elastic in the config)"
+                )
+            }
+        }
+    }
     if let Some(p) = args.str_opt("out-csv") {
         cfg.out_csv = Some(p.into());
     }
@@ -126,12 +168,13 @@ fn train(args: &Args) -> Result<()> {
     }
     let mut t = Trainer::new(cfg)?;
     println!(
-        "model={} params={} budget={} tokens, schedule={:?}, world={}, threads={}, collective={}{}",
+        "model={} params={} budget={} tokens, schedule={:?}, world={} ({}), threads={}, collective={}{}",
         t.rt.manifest.model.name,
         t.rt.manifest.param_count,
         t.total_tokens,
         t.cfg.schedule,
         t.cfg.world_size,
+        t.cfg.exec.elastic.label(),
         t.cfg.exec.worker_threads,
         t.engine.collective_name(),
         if t.cfg.exec.overlap {

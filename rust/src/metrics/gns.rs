@@ -187,6 +187,51 @@ impl GnsEstimator {
     pub fn observations(&self) -> u64 {
         self.observations
     }
+
+    /// Carry the estimator across an **elastic reshard** — the effective
+    /// data-parallel world changing from `old_world` to `new_world`
+    /// (a ramp-coupled scale-out at a Seesaw cut, or a resume onto a
+    /// different fleet; DESIGN.md §11).
+    ///
+    /// A world change moves the estimator's small-batch operating point:
+    /// McCandlish's two-point contrast reads per-worker shards of
+    /// `B_small = B / world` tokens, so at the same global batch the
+    /// post-reshard evidence arrives at a different `(1/B_small − 1/B)`
+    /// contrast than everything already in the EMAs. The rescale that
+    /// makes the two regimes commensurable is applied **per observation**
+    /// inside [`GnsEstimator::observe`]: each step's raw norms are mapped
+    /// through the unbiased two-point solve (module docs, eq. A.2/A.3),
+    /// which divides the noise evidence by that step's own contrast —
+    /// leaving `ema_s` in per-token `tr(Σ)` units and `ema_g2` in `‖G‖²`
+    /// units, both independent of the sharding that produced them. The
+    /// cross-world rescale factor on the smoothed state is therefore
+    /// exactly **1**, and `reshard` carries the EMAs over unchanged
+    /// instead of resetting them (a reset would re-warm the controller
+    /// signal from scratch — hundreds of steps of dead GNS mid-ramp).
+    /// What would be wrong is *silently* mixing the regimes through an
+    /// estimator that smooths raw shard norms: those are in
+    /// world-dependent units (`E‖g_w‖² = ‖G‖² + trΣ/B_small`), and this
+    /// method is the seam where such state would be rescaled by the
+    /// contrast ratio. The derivation is spelled out in DESIGN.md §11;
+    /// `prop_gns_reshard_is_world_invariant` pins the behavioural
+    /// contract (a world=2-fed estimator resharded to world=4 agrees
+    /// with an all-world=4 one within EMA tolerance).
+    ///
+    /// Errors on a degenerate transition (a zero-sized world on either
+    /// side); resharding with `old_world == new_world` is a bit-exact
+    /// no-op.
+    pub fn reshard(&mut self, old_world: usize, new_world: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            old_world >= 1 && new_world >= 1,
+            "GNS reshard needs at least one worker on both sides (got {old_world} → {new_world})"
+        );
+        if old_world == new_world {
+            return Ok(()); // no geometry change — nothing to carry
+        }
+        // EMAs are already in world-invariant units (see above): the
+        // rescale factor across the contrast change is exactly 1.
+        Ok(())
+    }
 }
 
 /// Positive finite ratio `s/g2`, else `None`.
@@ -335,6 +380,42 @@ mod tests {
         // round-trip, not be rejected as corrupt
         let noisy = GnsState { ema_s: -6.0, ema_g2: -0.5, ..good };
         assert!(GnsEstimator::from_state(noisy).is_ok(), "negative EMAs are valid state");
+    }
+
+    #[test]
+    fn reshard_with_equal_worlds_is_a_bit_exact_noop() {
+        let mut e = GnsEstimator::new(0.9);
+        e.observe(&[1.0, 9.0], &[1, 1], 1, 4.0);
+        let before = e.state();
+        e.reshard(2, 2).unwrap();
+        assert_eq!(e.state(), before, "equal-world reshard must not touch a single bit");
+        // degenerate transitions are rejected
+        assert!(e.reshard(0, 2).is_err());
+        assert!(e.reshard(2, 0).is_err());
+        assert_eq!(e.state(), before, "a rejected reshard must not touch state either");
+    }
+
+    #[test]
+    fn reshard_carries_the_warm_emas_across_a_world_change() {
+        // the elastic-resume contract at estimator scale: the smoothed
+        // state survives the world change (no reset — a reset would
+        // starve the adaptive controller for hundreds of steps), and the
+        // post-reshard estimate stays defined immediately.
+        let mut e = GnsEstimator::new(0.9);
+        e.observe(&[1.0, 9.0], &[1, 1], 1, 4.0);
+        let obs_before = e.observations();
+        let gns_before = e.gns().unwrap();
+        e.reshard(2, 4).unwrap();
+        assert_eq!(e.observations(), obs_before, "evidence survives the reshard");
+        assert_eq!(
+            e.gns().unwrap().to_bits(),
+            gns_before.to_bits(),
+            "the smoothed estimate is in world-invariant units — carried exactly"
+        );
+        // and the resharded estimator keeps folding new-world evidence in
+        let raw = e.observe(&[1.0, 1.0, 9.0, 9.0], &[1, 1, 1, 1], 1, 4.0);
+        assert!(raw.is_some(), "post-reshard evidence must keep feeding the EMAs");
+        assert_eq!(e.observations(), obs_before + 1);
     }
 
     #[test]

@@ -40,6 +40,11 @@ pub struct StepRecord {
     /// > 1 under the overlapped bucketed mode (`exec.overlap`), 0 when no
     /// communication happened.
     pub comm_buckets: u32,
+    /// Effective data-parallel world this step executed with — constant
+    /// under `WorldPolicy::Fixed`, growing with the batch ramp under
+    /// `RampCoupled` (a change between consecutive steps is a reshard
+    /// event, DESIGN.md §11).
+    pub world: usize,
     /// Raw per-step gradient-noise-scale estimate `tr(Σ)/‖G‖²` in tokens
     /// (`None` when undefined — one worker, or noise swamping the signal).
     pub gns: Option<f64>,
@@ -120,12 +125,12 @@ impl RunLog {
 
 /// Column header of the per-step run CSV.
 pub const CSV_HEADER: &str =
-    "run,step,tokens,lr,batch_tokens,ce,zloss,gnorm_sq,flops,serial_time,comm_bytes,comm_buckets,gns,b_crit,cuts,val_ce";
+    "run,step,tokens,lr,batch_tokens,ce,zloss,gnorm_sq,flops,serial_time,comm_bytes,comm_buckets,world,gns,b_crit,cuts,val_ce";
 
 fn write_csv_row(f: &mut impl Write, run: &str, r: &StepRecord) -> std::io::Result<()> {
     writeln!(
         f,
-        "{},{},{},{:.6e},{},{:.6},{:.6},{:.6e},{:.6e},{:.6},{},{},{},{},{},{}",
+        "{},{},{},{:.6e},{},{:.6},{:.6},{:.6e},{:.6e},{:.6},{},{},{},{},{},{},{}",
         run,
         r.step,
         r.tokens,
@@ -138,6 +143,7 @@ fn write_csv_row(f: &mut impl Write, run: &str, r: &StepRecord) -> std::io::Resu
         r.serial_time,
         r.comm_bytes,
         r.comm_buckets,
+        r.world,
         r.gns.map(|v| format!("{v:.3}")).unwrap_or_default(),
         r.b_crit.map(|v| format!("{v:.3}")).unwrap_or_default(),
         if r.cuts > 0 { r.cuts.to_string() } else { String::new() },
@@ -199,6 +205,7 @@ mod tests {
             serial_time: step as f64,
             comm_bytes: 4096,
             comm_buckets: 1,
+            world: 2,
             gns: (step % 2 == 1).then_some(1234.5),
             b_crit: (step % 2 == 1).then_some(2345.6),
             cuts: if step == 2 { 2 } else { 0 },

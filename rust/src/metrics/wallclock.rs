@@ -94,6 +94,14 @@ impl WallClockModel {
         if comm.buckets <= 1 || comm.bytes_moved == 0 {
             return self.step_time_comm(batch_tokens, comm.bytes_moved);
         }
+        self.waves(batch_tokens) as f64 * self.wave_time_overlapped(comm)
+    }
+
+    /// One compute wave with the bucketed reduce pipelined behind it —
+    /// the `finishₖ` recurrence above, shared by the fixed
+    /// ([`WallClockModel::step_time_overlapped`]) and elastic
+    /// ([`WallClockModel::step_time_elastic_overlapped`]) charges.
+    fn wave_time_overlapped(&self, comm: &CollectiveStats) -> f64 {
         let b = comm.buckets as u64;
         // all full buckets carry the same payload; the tail takes the rest
         let full_bytes = (comm.bytes_moved - comm.tail_bytes) as f64 / (b - 1) as f64;
@@ -105,7 +113,60 @@ impl WallClockModel {
                 if k + 1 == b { comm.tail_bytes as f64 / bw } else { full_bytes / bw };
             finish = finish.max(ready) + comm_k;
         }
-        self.waves(batch_tokens) as f64 * finish
+        finish
+    }
+
+    /// Compute waves under an **elastic fleet** (DESIGN.md §11): the
+    /// cluster's capacity scales with the effective `world` relative to
+    /// `base_world` — the fleet the `devices`/`tokens_per_device` knobs
+    /// describe. At `world == base_world` this is exactly
+    /// [`WallClockModel::waves`]; a ramp-coupled world that doubles with
+    /// every batch doubling holds the wave count — and therefore the
+    /// step's compute time — constant across the whole ramp, where the
+    /// fixed-world charge doubles per cut.
+    pub fn waves_elastic(&self, batch_tokens: u64, world: usize, base_world: usize) -> u64 {
+        let capacity = (self.devices * self.tokens_per_device)
+            .saturating_mul(world.max(1) as u64)
+            / base_world.max(1) as u64;
+        batch_tokens.div_ceil(capacity.max(1)).max(1)
+    }
+
+    /// Seconds for one step on the elastic fleet, including its
+    /// allreduce: every wave is a synchronous data-parallel step paying
+    /// its own reduce of `comm_bytes` (the payload *grows* with the
+    /// world — a ring moves `2(W−1)·n·4` bytes — which is exactly the
+    /// scale-out overhead `benches/elastic_ramp.rs` charts against the
+    /// flat compute). This is the serialized compute-then-reduce charge;
+    /// with `exec.overlap` the coordinator uses
+    /// [`WallClockModel::step_time_elastic_overlapped`] instead.
+    pub fn step_time_elastic(
+        &self,
+        batch_tokens: u64,
+        world: usize,
+        base_world: usize,
+        comm_bytes: u64,
+    ) -> f64 {
+        self.waves_elastic(batch_tokens, world, base_world) as f64
+            * (self.step_latency + comm_bytes as f64 / self.comm_bytes_per_sec)
+    }
+
+    /// The elastic fleet with the §10 bucketed reduce overlapped behind
+    /// each wave's compute: elastic wave count × the overlapped per-wave
+    /// pipeline. Degrades exactly like the fixed overlapped charge — an
+    /// unsplit payload (`buckets ≤ 1`) hides nothing and falls back to
+    /// the serialized [`WallClockModel::step_time_elastic`].
+    pub fn step_time_elastic_overlapped(
+        &self,
+        batch_tokens: u64,
+        world: usize,
+        base_world: usize,
+        comm: &CollectiveStats,
+    ) -> f64 {
+        if comm.buckets <= 1 || comm.bytes_moved == 0 {
+            return self.step_time_elastic(batch_tokens, world, base_world, comm.bytes_moved);
+        }
+        self.waves_elastic(batch_tokens, world, base_world) as f64
+            * self.wave_time_overlapped(comm)
     }
 
     /// Total serial seconds of a whole `(batch_tokens per step)` history.
@@ -245,6 +306,79 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn elastic_waves_hold_flat_where_fixed_waves_double() {
+        // capacity = one base batch per wave at the base world: a ×2 ramp
+        // doubles fixed-world waves per cut, while a ramp-coupled world
+        // (world doubling with the batch) holds them at one.
+        let m = WallClockModel {
+            devices: 2,
+            tokens_per_device: 2048,
+            step_latency: 1.0,
+            comm_bytes_per_sec: 100e9,
+        };
+        let base_world = 2usize;
+        for k in 0..4u32 {
+            let batch = 4096u64 << k;
+            let world = base_world << k;
+            assert_eq!(m.waves(batch), 1u64 << k, "fixed waves double per cut");
+            assert_eq!(m.waves_elastic(batch, world, base_world), 1, "elastic waves stay flat");
+        }
+        // at the base world the elastic charge IS the fixed charge
+        assert_eq!(m.waves_elastic(4096, base_world, base_world), m.waves(4096));
+        assert_eq!(
+            m.step_time_elastic(4096, base_world, base_world, 1 << 20),
+            m.step_time_comm(4096, 1 << 20)
+        );
+    }
+
+    #[test]
+    fn elastic_overlapped_composes_waves_with_the_pipeline() {
+        // elastic × overlap: the charge is elastic wave count × the same
+        // per-wave bucketed pipeline the fixed overlapped charge uses —
+        // no silently-dropped overlap when both knobs are on.
+        let m = WallClockModel {
+            devices: 8,
+            tokens_per_device: 1024,
+            step_latency: 2.0,
+            comm_bytes_per_sec: 1e9,
+        };
+        let s = bucketed(4, 100_000_000); // per-wave pipeline = 2.1 s
+        // at the base world the elastic overlapped charge IS the fixed one
+        assert_eq!(m.step_time_elastic_overlapped(512, 8, 8, &s), m.step_time_overlapped(512, &s));
+        // 4× batch at a 4× fleet: one wave again — the pipeline, once
+        let four = m.step_time_elastic_overlapped(4 * 8 * 1024, 32, 8, &s);
+        assert!((four - 2.1).abs() < 1e-12, "{four}");
+        // …and at a capped (base) world the same batch pays 4 waves
+        assert!((m.step_time_elastic_overlapped(4 * 8 * 1024, 8, 8, &s) - 4.0 * 2.1).abs() < 1e-9);
+        // overlap beats the serialized elastic charge whenever split
+        assert!(four < m.step_time_elastic(4 * 8 * 1024, 32, 8, s.bytes_moved));
+        // unsplit payloads degrade to the serialized elastic charge
+        let one =
+            CollectiveStats { bytes_moved: 1 << 30, phases: 2, buckets: 1, tail_bytes: 1 << 30 };
+        assert_eq!(
+            m.step_time_elastic_overlapped(512, 16, 8, &one),
+            m.step_time_elastic(512, 16, 8, 1 << 30)
+        );
+    }
+
+    #[test]
+    fn elastic_step_time_charges_comm_per_wave_and_is_total() {
+        let m = WallClockModel {
+            devices: 8,
+            tokens_per_device: 1024,
+            step_latency: 2.0,
+            comm_bytes_per_sec: 1e9,
+        };
+        // a capped fleet (world stuck at base while the batch grew 4×)
+        // serializes into waves, each paying its own reduce
+        assert_eq!(m.step_time_elastic(4 * 8 * 1024, 8, 8, 2_000_000_000), 4.0 * (2.0 + 2.0));
+        // …and a 4× fleet collapses it back to one wave
+        assert_eq!(m.step_time_elastic(4 * 8 * 1024, 32, 8, 2_000_000_000), 2.0 + 2.0);
+        // degenerate worlds never divide by zero
+        assert!(m.waves_elastic(1, 0, 0) >= 1);
     }
 
     #[test]

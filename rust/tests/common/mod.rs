@@ -1,0 +1,87 @@
+//! Shared test support: hand-encoders for the **frozen** legacy
+//! checkpoint layouts (v1 = pre-tentpole, v2 = PR3/PR4 era). One copy
+//! serves every external test crate (`properties.rs`,
+//! `fault_injection.rs` — each compiles its own instance of this
+//! module), so the migration suites and the fault-injection suite can
+//! never drift apart on what the "frozen" bytes are. These are kept as
+//! byte-level encoders deliberately — pinning migration against the
+//! actual legacy wire bytes, not against `Checkpoint::save`'s current
+//! output. The in-crate unit tests (`coordinator::checkpoint`) carry
+//! their own copy: they must stay compilable without the integration
+//! test tree, and a divergence between the two shows up as one suite
+//! failing — which is the tripwire working, not a bug.
+#![allow(dead_code)] // not every test crate uses every encoder
+
+use seesaw::coordinator::Checkpoint;
+
+/// The frozen v1 layout: magic, version 1, scalars (no `phase`), then
+/// the 3 leaf groups — what every pre-checkpoint-v2 build wrote.
+pub fn v1_checkpoint_bytes(ck: &Checkpoint) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend(b"SEESAWCK");
+    out.extend(1u32.to_le_bytes());
+    for x in [ck.step, ck.tokens, ck.data_cursor] {
+        out.extend(x.to_le_bytes());
+    }
+    for x in [ck.gnorm_ema, ck.flops, ck.serial_time] {
+        out.extend(x.to_le_bytes());
+    }
+    for group in [&ck.params, &ck.m, &ck.v] {
+        out.extend((group.len() as u64).to_le_bytes());
+        for leaf in group.iter() {
+            out.extend((leaf.len() as u64).to_le_bytes());
+            for x in leaf {
+                out.extend(x.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+/// The frozen v2 layout: length-prefixed sections 1–4 (scalars incl.
+/// `phase`, leaves, schedule hash + blob, gns) and no exec section —
+/// what PR3/PR4-era builds wrote.
+pub fn v2_checkpoint_bytes(ck: &Checkpoint) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend(b"SEESAWCK");
+    out.extend(2u32.to_le_bytes());
+    // §1 scalars
+    out.extend(56u64.to_le_bytes());
+    for x in [ck.step, ck.tokens, ck.data_cursor, ck.phase] {
+        out.extend(x.to_le_bytes());
+    }
+    for x in [ck.gnorm_ema, ck.flops, ck.serial_time] {
+        out.extend(x.to_le_bytes());
+    }
+    // §2 leaves
+    let leaf_bytes =
+        |g: &[Vec<f32>]| -> u64 { 8 + g.iter().map(|l| 8 + 4 * l.len() as u64).sum::<u64>() };
+    let groups = [&ck.params, &ck.m, &ck.v];
+    let total: u64 = groups.iter().map(|g| leaf_bytes(g)).sum();
+    out.extend(total.to_le_bytes());
+    for group in groups {
+        out.extend((group.len() as u64).to_le_bytes());
+        for leaf in group.iter() {
+            out.extend((leaf.len() as u64).to_le_bytes());
+            for x in leaf {
+                out.extend(x.to_le_bytes());
+            }
+        }
+    }
+    // §3 schedule
+    out.extend((8 + ck.schedule_state.len() as u64).to_le_bytes());
+    out.extend(ck.schedule_hash.to_le_bytes());
+    out.extend(&ck.schedule_state);
+    // §4 gns
+    match &ck.gns {
+        None => out.extend(0u64.to_le_bytes()),
+        Some(g) => {
+            out.extend(32u64.to_le_bytes());
+            for x in [g.ema, g.ema_s, g.ema_g2] {
+                out.extend(x.to_le_bytes());
+            }
+            out.extend(g.observations.to_le_bytes());
+        }
+    }
+    out
+}

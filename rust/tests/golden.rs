@@ -1,0 +1,218 @@
+//! Golden-trajectory regression suite (DESIGN.md §4): two tiny committed
+//! traces on the artifact-free recursion substrate, replayed and compared
+//! **bit-for-bit** — the refactor tripwire every engine/schedule rewrite
+//! needs. Any change that moves a single bit of the `(lr, batch, ce,
+//! gnorm_sq, gns, cuts)` trajectory — a reassociated sum, a reordered
+//! reduction, a "harmless" schedule cleanup — fails here with the first
+//! diverging step, instead of surfacing three PRs later as an
+//! unexplained loss curve.
+//!
+//! Fixtures live under `tests/golden/*.trace` (text, one line per step,
+//! f64 fields as IEEE-754 bit patterns so the comparison is exact and
+//! the diff is still greppable). To regenerate after an *intentional*
+//! trajectory change:
+//!
+//! ```sh
+//! SEESAW_BLESS=1 cargo test --test golden
+//! ```
+//!
+//! …then commit the updated fixtures with a justification. The traces
+//! are chosen to avoid platform-sensitive math where possible: both run
+//! isotropic spectra (no `powf`), the adaptive trace needs only
+//! `sqrt`/`powi` (IEEE-exact / compiler-builtins integer powers), and
+//! the cosine trace adds the one `cos` call per step that the schedule
+//! itself is defined by.
+
+use seesaw::experiments::adaptive_exps::exact_gns;
+use seesaw::linreg::recursion::Problem;
+use seesaw::linreg::spectrum::Spectrum;
+use seesaw::schedule::{AdaptiveSeesaw, JointSchedule, Schedule, ScheduleKind};
+
+/// One replayed step of a golden run.
+struct Row {
+    step: u64,
+    lr: f64,
+    batch: u64,
+    /// Exact excess risk after the step — the CE stand-in.
+    ce: f64,
+    /// Exact `E‖g‖²` at the step's batch (Appendix-B total).
+    gnorm: f64,
+    /// Exact `B_noise` fed back to the schedule (`None`: signal ≤ 0).
+    gns: Option<f64>,
+    cuts: u32,
+}
+
+/// The golden step loop — deliberately the *full* feedback shape (query →
+/// risk step → exact GNS → observe), shared by both traces so the fixed
+/// trace exercises the same code path the adaptive one does.
+fn drive(sched: &mut dyn Schedule, problem: &Problem) -> Vec<Row> {
+    let total = sched.total_tokens();
+    let mut it = problem.iter();
+    let mut tokens = 0u64;
+    let mut step = 0u64;
+    let mut last_phase = 0usize;
+    let mut rows = Vec::new();
+    while tokens < total {
+        let p = sched.query(tokens);
+        let cuts = p.phase.saturating_sub(last_phase) as u32;
+        last_phase = p.phase;
+        it.step(p.lr, p.batch_tokens);
+        tokens += p.batch_tokens;
+        step += 1;
+        let gnorm = it.grad_norm_sq(p.batch_tokens).total();
+        let gns = exact_gns(&it, p.batch_tokens);
+        if let Some(v) = gns {
+            sched.observe_gns(tokens, v);
+        }
+        rows.push(Row { step, lr: p.lr, batch: p.batch_tokens, ce: it.risk(), gnorm, gns, cuts });
+        assert!(step < 100_000, "runaway golden driver");
+    }
+    rows
+}
+
+/// Trace A: the fixed cosine baseline — 200 constant-batch steps, linear
+/// warmup then cosine decay, on an isotropic problem.
+fn cosine_fixed() -> Vec<Row> {
+    let problem = Problem::new(Spectrum::Isotropic { dim: 32 }, 0.25, 4.0);
+    let mut sched =
+        JointSchedule::new(0.05, 32, 640, 6_400, ScheduleKind::CosineContinuous);
+    drive(&mut sched, &problem)
+}
+
+/// Trace B: the adaptive Seesaw controller fed the recursion's exact GNS
+/// — warmup gates the first cuts, then the measured noise scale walks up
+/// through the `B₀·2ᵏ` thresholds and the `(η/√2, B·2)` staircase fires
+/// under hysteresis.
+fn adaptive_seesaw() -> Vec<Row> {
+    let problem = Problem::new(Spectrum::Isotropic { dim: 16 }, 1.0, 16.0);
+    let mut sched =
+        AdaptiveSeesaw::new(0.05, 16, 800, 8_000, 2.0).hysteresis(400).max_cuts(6);
+    drive(&mut sched, &problem)
+}
+
+fn fixture_path(file: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(file)
+}
+
+fn render(name: &str, config: &str, rows: &[Row]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("# seesaw golden trajectory — {name}\n"));
+    out.push_str(&format!("# {config}\n"));
+    out.push_str("# columns: step,lr_bits,batch_tokens,ce_bits,gnorm_bits,gns_bits,cuts\n");
+    out.push_str(
+        "# regenerate (intentional trajectory changes only): SEESAW_BLESS=1 cargo test --test golden\n",
+    );
+    for r in rows {
+        let gns = match r.gns {
+            Some(v) => format!("{:016x}", v.to_bits()),
+            None => "-".to_string(),
+        };
+        out.push_str(&format!(
+            "{},{:016x},{},{:016x},{:016x},{},{}\n",
+            r.step,
+            r.lr.to_bits(),
+            r.batch,
+            r.ce.to_bits(),
+            r.gnorm.to_bits(),
+            gns,
+            r.cuts
+        ));
+    }
+    out
+}
+
+/// Compare the replay against the committed fixture (or regenerate it
+/// under `SEESAW_BLESS=1`), reporting the first diverging step with both
+/// bit patterns *and* decoded values.
+fn check_or_bless(file: &str, name: &str, config: &str, rows: &[Row]) {
+    let path = fixture_path(file);
+    let rendered = render(name, config, rows);
+    if std::env::var_os("SEESAW_BLESS").is_some() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &rendered).unwrap();
+        eprintln!("blessed {} ({} steps)", path.display(), rows.len());
+        return;
+    }
+    let fixture = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "golden fixture {} is missing ({e}); run `SEESAW_BLESS=1 cargo test --test \
+             golden` once and commit the result",
+            path.display()
+        )
+    });
+    let want: Vec<&str> = fixture.lines().filter(|l| !l.starts_with('#')).collect();
+    let got: Vec<&str> = rendered.lines().filter(|l| !l.starts_with('#')).collect();
+    assert_eq!(
+        want.len(),
+        got.len(),
+        "{name}: step count diverged from the fixture ({} vs {}) — the schedule \
+         quantization or budget handling changed; if intentional, re-bless",
+        want.len(),
+        got.len()
+    );
+    for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+        if w != g {
+            let decode = |line: &str| -> String {
+                let f: Vec<&str> = line.split(',').collect();
+                if f.len() != 7 {
+                    return format!("unparseable: {line}");
+                }
+                let bits = |s: &str| {
+                    u64::from_str_radix(s, 16).map(f64::from_bits).unwrap_or(f64::NAN)
+                };
+                format!(
+                    "lr={:e} batch={} ce={:.12} gnorm={:.6e} gns={} cuts={}",
+                    bits(f[1]),
+                    f[2],
+                    bits(f[3]),
+                    bits(f[4]),
+                    if f[5] == "-" { "-".to_string() } else { format!("{:.3}", bits(f[5])) },
+                    f[6]
+                )
+            };
+            panic!(
+                "{name}: trajectory diverged from the golden fixture at data line {i}\n  \
+                 fixture: {w}\n           ({})\n  replay:  {g}\n           ({})\n\
+                 every later step likely differs too. If this change is INTENTIONAL, \
+                 regenerate with `SEESAW_BLESS=1 cargo test --test golden` and commit \
+                 the new fixture with a justification; otherwise a refactor just moved \
+                 the training trajectory.",
+                decode(w),
+                decode(g)
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_cosine_fixed_trajectory() {
+    let rows = cosine_fixed();
+    assert!(rows.len() >= 150, "trace too short to be a useful tripwire: {}", rows.len());
+    assert!(rows.iter().all(|r| r.cuts == 0), "the cosine baseline never cuts");
+    check_or_bless(
+        "cosine_fixed.trace",
+        "cosine-fixed",
+        "config: isotropic d=32 sigma2=0.25 r0=4.0; cosine lr0=0.05 batch=32 warmup=640 total=6400",
+        &rows,
+    );
+}
+
+#[test]
+fn golden_adaptive_seesaw_trajectory() {
+    let rows = adaptive_seesaw();
+    assert!(rows.len() >= 100, "trace too short to be a useful tripwire: {}", rows.len());
+    let cuts: u32 = rows.iter().map(|r| r.cuts).sum();
+    assert!(
+        (2..=6).contains(&cuts),
+        "the adaptive trace must ramp mid-run to exercise the cut path (got {cuts} cuts)"
+    );
+    // warmup gates the first cut
+    assert!(rows.iter().take_while(|r| r.step * 16 <= 800).all(|r| r.cuts == 0));
+    check_or_bless(
+        "adaptive_seesaw.trace",
+        "adaptive-seesaw",
+        "config: isotropic d=16 sigma2=1.0 r0=16.0; adaptive a=2.0 lr0=0.05 batch=16 \
+         warmup=800 total=8000 hysteresis=400 max_cuts=6",
+        &rows,
+    );
+}

@@ -2,6 +2,9 @@
 //! pure substrates: schedules, collectives, dataloader, theory recursion,
 //! checkpoint format, JSON. No PJRT dependency — these run everywhere.
 
+mod common;
+
+use common::v1_checkpoint_bytes;
 use seesaw::collective::{
     mean_reference, parallel_allreduce_mean, ring_allreduce_mean, CollectiveKind,
 };
@@ -346,6 +349,126 @@ fn prop_gns_smoothed_estimate_stays_inside_raw_envelope() {
 }
 
 #[test]
+fn prop_gns_reshard_is_world_invariant() {
+    // the §11 estimator contract: at a FIXED global batch, the same
+    // per-sample gradient stream sharded at world=2 then resharded to
+    // world=4 must land within EMA tolerance of an estimator fed the
+    // identical stream at world=4 throughout. (The two-point construction
+    // normalizes each observation's small-batch contrast into
+    // world-invariant units, so `reshard` carries the EMAs exactly —
+    // this property is what makes that carry-over legitimate.)
+    use seesaw::util::prop::Gen;
+    check("gns reshard world invariance", 32, |g| {
+        let d = 4 + g.usize_in(0, 12);
+        let micro_tokens = 1 + g.u64(32);
+        let n_micro = 8u64; // global batch: 8 microbatches, shardable at 2 and 4
+        let g_true: Vec<f64> = (0..d).map(|_| 0.2 + g.f64_in(0.0, 0.8)).collect();
+        let sigma = g.f64_in(0.2, 1.5);
+        let ema = g.f64_in(0.5, 0.98);
+        // one step's per-MICROBATCH gradients — the shared underlying
+        // stream both shardings regroup
+        let draw_micro_grads = |g: &mut Gen| -> Vec<Vec<f64>> {
+            (0..n_micro)
+                .map(|_| {
+                    (0..d)
+                        .map(|k| {
+                            g_true[k]
+                                + g.normal() * sigma / (micro_tokens as f64).sqrt()
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        // regroup per-microbatch gradients into `world` round-robin shard
+        // sums and feed one observation
+        let feed = |e: &mut GnsEstimator, micros: &[Vec<f64>], world: usize| {
+            let mut sums = vec![vec![0.0f64; d]; world];
+            for (i, m) in micros.iter().enumerate() {
+                for (s, x) in sums[i % world].iter_mut().zip(m) {
+                    *s += x;
+                }
+            }
+            let sqnorms: Vec<f64> =
+                sums.iter().map(|s| s.iter().map(|x| x * x).sum()).collect();
+            let micro: Vec<u64> = (0..world as u64)
+                .map(|w| (n_micro + world as u64 - 1 - w) / world as u64)
+                .collect();
+            let global_sqnorm = (0..d)
+                .map(|k| {
+                    let m = sums.iter().map(|s| s[k]).sum::<f64>() / n_micro as f64;
+                    m * m
+                })
+                .sum::<f64>();
+            e.observe(&sqnorms, &micro, micro_tokens, global_sqnorm);
+        };
+        let steps_before = 40 + g.usize_in(0, 40);
+        let steps_after = 80;
+        let mut resharded = GnsEstimator::new(ema);
+        let mut reference = GnsEstimator::new(ema);
+        for i in 0..steps_before + steps_after {
+            let micros = draw_micro_grads(g);
+            let world_a = if i < steps_before { 2 } else { 4 };
+            feed(&mut resharded, &micros, world_a);
+            feed(&mut reference, &micros, 4);
+            if i + 1 == steps_before {
+                resharded.reshard(2, 4).expect("2 → 4 is a legal reshard");
+            }
+        }
+        let (a, b) = (resharded.gns(), reference.gns());
+        if let (Some(a), Some(b)) = (a, b) {
+            // both estimate the same B_noise from the same stream; after
+            // `steps_after` post-reshard observations the EMAs have mixed
+            // in mostly-shared evidence — agree within a loose EMA
+            // tolerance (the estimates are noisy, not biased)
+            assert!(
+                (a / b - 1.0).abs() < 0.5,
+                "resharded {a:.4} vs all-world-4 {b:.4} drifted beyond EMA tolerance"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_elastic_world_keeps_per_worker_microbatches_bounded() {
+    // the RampCoupled law over random ramps: the effective world never
+    // shrinks below base, never exceeds the cap, grows monotonically
+    // with the batch, and (until the cap binds) holds per-worker
+    // microbatches within the base allotment.
+    use seesaw::coordinator::elastic::{effective_world, WorldPolicy};
+    check("elastic world law", 64, |g| {
+        let base_world = 1 + g.usize_in(0, 8);
+        let base_micro = base_world as u64 * (1 + g.u64(4));
+        let max_world = base_world + g.usize_in(0, 64);
+        let p = WorldPolicy::RampCoupled { max_world };
+        let mut n_micro = base_micro;
+        let mut last = 0usize;
+        for _ in 0..12 {
+            let w = effective_world(p, base_world, base_micro, n_micro);
+            assert!(w >= base_world, "never below the configured world");
+            assert!(w <= max_world.max(base_world), "never beyond the fleet cap");
+            assert!(w >= last, "monotone in the batch");
+            if w < max_world {
+                // cap not binding: per-worker load stays within one base
+                // allotment of the configured per-worker share
+                let per_worker = n_micro / w as u64;
+                let base_share = base_micro / base_world as u64;
+                assert!(
+                    per_worker <= 2 * base_share,
+                    "per-worker microbatches {per_worker} drifted beyond 2× base {base_share}"
+                );
+            }
+            last = w;
+            // random ×1/×2/+1 growth — covers non-power-of-two ramps
+            n_micro = match g.usize_in(0, 3) {
+                0 => n_micro,
+                1 => n_micro * 2,
+                _ => n_micro + 1,
+            };
+        }
+    });
+}
+
+#[test]
 fn prop_adaptive_controller_never_violates_lemma4() {
     // 1) construction: any (α, β) with α < √β must be rejected;
     // 2) dynamics: for accepted pairs driven by arbitrary GNS signals,
@@ -497,37 +620,18 @@ fn prop_checkpoint_roundtrip_any_shapes() {
             } else {
                 None
             },
+            world: g.u64(64),
+            traj_identity: format!(
+                "seesaw-a2|lr={:016x}|T={}",
+                g.u64(u32::MAX as u64),
+                g.u64(1 << 30)
+            ),
+            exec_fingerprint: format!("w={}|coll=ring|elastic=fixed", 1 + g.u64(63)),
         };
         let path = dir.path().join("x.ckpt");
         ck.save(&path).unwrap();
         assert_eq!(Checkpoint::load(&path).unwrap(), ck);
     });
-}
-
-/// Hand-encode the frozen pre-v2 checkpoint layout: magic, version 1,
-/// scalars (no phase), 3 leaf groups — what every pre-tentpole build
-/// wrote. Kept in the test so the migration path is pinned against the
-/// actual legacy bytes, not against `save`'s current output.
-fn v1_checkpoint_bytes(ck: &Checkpoint) -> Vec<u8> {
-    let mut out = Vec::new();
-    out.extend(b"SEESAWCK");
-    out.extend(1u32.to_le_bytes());
-    for x in [ck.step, ck.tokens, ck.data_cursor] {
-        out.extend(x.to_le_bytes());
-    }
-    for x in [ck.gnorm_ema, ck.flops, ck.serial_time] {
-        out.extend(x.to_le_bytes());
-    }
-    for group in [&ck.params, &ck.m, &ck.v] {
-        out.extend((group.len() as u64).to_le_bytes());
-        for leaf in group.iter() {
-            out.extend((leaf.len() as u64).to_le_bytes());
-            for x in leaf {
-                out.extend(x.to_le_bytes());
-            }
-        }
-    }
-    out
 }
 
 #[test]
@@ -559,6 +663,9 @@ fn prop_v1_checkpoints_load_with_default_controller_state() {
             schedule_hash: SPEC_HASH_UNKNOWN,
             schedule_state: Vec::new(),
             gns: None,
+            world: 0,
+            traj_identity: String::new(),
+            exec_fingerprint: String::new(),
         };
         let path = dir.path().join("v1.ckpt");
         std::fs::write(&path, v1_checkpoint_bytes(&ck)).unwrap();
