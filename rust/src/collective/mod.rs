@@ -196,9 +196,11 @@ pub trait Collective: Send + Sync {
 }
 
 /// Squared L2 norm of one gradient shard, accumulated in f64 (the same
-/// precision the coordinator uses for `gnorm_sq`).
+/// precision the coordinator uses for `gnorm_sq`) via the fixed-shape
+/// tree reduction of [`crate::simd`] — bit-identical for any caller that
+/// hands the same shard, whatever the thread/bucket layout around it.
 pub fn shard_sqnorm(shard: &[f32]) -> f64 {
-    shard.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    crate::simd::sqnorm_f64(shard)
 }
 
 /// Ring-allreduce implementation of [`Collective`].
@@ -281,14 +283,9 @@ impl Collective for ParallelCollective {
                 scope.spawn(move || {
                     let chi = clo + out_chunk.len();
                     for s in rest {
-                        for (o, x) in out_chunk.iter_mut().zip(&s[clo..chi]) {
-                            *o += *x;
-                        }
+                        crate::simd::sum_into(out_chunk, &s[clo..chi]);
                     }
-                    let inv = 1.0 / w as f32;
-                    for o in out_chunk.iter_mut() {
-                        *o *= inv;
-                    }
+                    crate::simd::scale(out_chunk, 1.0 / w as f32);
                 });
             }
             // scope joins all reduction threads here (panics propagate)
@@ -366,19 +363,22 @@ pub fn ring_allreduce_mean_range(shards: &mut [Vec<f32>], lo: usize, hi: usize) 
                 continue;
             }
             let (acc, sender) = two_rows_mut(shards, c, src);
-            for i in clo..chi {
-                acc[i] += sender[i];
-            }
+            crate::simd::sum_into(&mut acc[clo..chi], &sender[clo..chi]);
             stats.bytes_moved += ((chi - clo) * 4) as u64;
         }
         stats.phases += 1;
     }
-    // normalize owned chunks to the mean
+    // normalize owned chunks to the mean — multiply by the reciprocal
+    // (what the parallel collective always did), not a per-element
+    // divide: one rounding per element either way, but the multiply
+    // vectorizes. The f32 reciprocal is exact for power-of-2 worlds.
     for c in 0..chunks {
         let (clo, chi) = chunk_bounds(c);
-        for i in clo..chi {
-            shards[c][i] /= w as f32;
+        if clo >= chi {
+            continue;
         }
+        let inv = 1.0 / w as f32;
+        crate::simd::scale(&mut shards[c][clo..chi], inv);
     }
     // all-gather: broadcast each owned chunk to every other worker.
     for phase in 0..w - 1 {
@@ -424,14 +424,9 @@ pub fn parallel_allreduce_mean(shards: &[Vec<f32>]) -> (Vec<f32>, CollectiveStat
             handles.push(scope.spawn(move || {
                 let hi = lo + out_chunk.len();
                 for s in shards {
-                    for (o, x) in out_chunk.iter_mut().zip(&s[lo..hi]) {
-                        *o += *x;
-                    }
+                    crate::simd::sum_into(out_chunk, &s[lo..hi]);
                 }
-                let inv = 1.0 / shards.len() as f32;
-                for o in out_chunk.iter_mut() {
-                    *o *= inv;
-                }
+                crate::simd::scale(out_chunk, 1.0 / shards.len() as f32);
             }));
         }
         for h in handles {
@@ -661,6 +656,41 @@ mod tests {
             let want = mean_reference(&s);
             for i in 10..40 {
                 assert!((got[0][i] - want[i]).abs() < 1e-5, "{kind:?} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_ranges_and_tiny_vectors_reduce_exactly() {
+        // Audit pin for the ring's max(lo)/min(hi) chunk∩range clip: once
+        // n < W (or a bucket is far smaller than the world) most global
+        // chunks intersect a range as zero-width — including clo > chi,
+        // not just clo == chi. Every such shape must stay in bounds,
+        // reduce to the exact mean, and leave out-of-range data alone.
+        for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
+            let coll = kind.build();
+            for &(w, n) in &[(7usize, 3usize), (5, 4), (4, 1), (3, 2), (8, 8)] {
+                let s = shards(w, n);
+                let want = mean_reference(&s);
+                for bucket in [1usize, 2, n, n + 5] {
+                    let mut b = s.clone();
+                    let mut norms = Vec::new();
+                    coll.allreduce_mean_bucketed(&mut b, bucket, &mut norms);
+                    for i in 0..n {
+                        assert!(
+                            (b[0][i] - want[i]).abs() < 1e-5,
+                            "{kind:?} w={w} n={n} bucket={bucket} idx {i}: {} vs {}",
+                            b[0][i],
+                            want[i]
+                        );
+                    }
+                }
+                // an empty range (lo == hi) is a communication-free no-op
+                let mut e = s.clone();
+                let before = e.clone();
+                let stats = coll.allreduce_mean_range(&mut e, n / 2, n / 2);
+                assert_eq!(e, before, "{kind:?} w={w} n={n}: empty range must not touch data");
+                assert_eq!(stats.bytes_moved, 0, "{kind:?} w={w} n={n}: no payload on empty range");
             }
         }
     }

@@ -328,7 +328,7 @@ impl Trainer {
             );
         }
         let mean_grad = self.engine.mean_grad();
-        let gnorm_sq: f64 = mean_grad.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        let gnorm_sq: f64 = crate::simd::sqnorm_f64(mean_grad);
 
         // --- optimizer update -------------------------------------------
         let grads = self.split_leaves(mean_grad)?;

@@ -465,18 +465,13 @@ impl StepEngine {
                 self.collective.allreduce_mean_with_sqnorms(bufs, &mut self.sqnorms)
             };
             let scale = world as f32 / n_micro as f32;
-            for x in &mut bufs[0] {
-                *x *= scale;
-            }
+            crate::simd::scale(&mut bufs[0], scale);
             stats
         } else {
             // one worker ⇒ no small-batch/large-batch contrast, so the GNS
             // estimator can't use a norm here — skip the O(n) pass entirely.
             self.sqnorms.clear();
-            let inv = 1.0 / n_micro as f32;
-            for x in &mut bufs[0] {
-                *x *= inv;
-            }
+            crate::simd::scale(&mut bufs[0], 1.0 / n_micro as f32);
             CollectiveStats::default()
         };
         let shard_micro: Vec<u64> =

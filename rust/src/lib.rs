@@ -16,6 +16,9 @@
 //!   fleet with the batch ramp and reshards across resumes — DESIGN.md
 //!   §11), plus the noisy-linear-regression theory substrate that
 //!   verifies Theorem 1, Corollary 1 and Lemma 4 exactly ([`linreg`]).
+//!   The accumulate → allreduce → sqnorm hot path runs on the
+//!   lane-chunked kernels and fixed-shape tree reductions of [`simd`]
+//!   (DESIGN.md §12) — partition-invariant by construction.
 //! * **L2/L1 (python/, build-time only)** — a JAX transformer LM whose
 //!   attention / cross-entropy / AdamW hot-spots are Pallas kernels,
 //!   AOT-lowered once to HLO-text artifacts.
@@ -41,6 +44,7 @@ pub mod linreg;
 pub mod metrics;
 pub mod runtime;
 pub mod schedule;
+pub mod simd;
 pub mod util;
 
 pub use config::{ExecSpec, TrainConfig};

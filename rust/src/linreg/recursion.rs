@@ -65,8 +65,14 @@ pub struct RiskIter {
 
 impl RiskIter {
     /// Excess risk `½⟨λ, m⟩`.
+    ///
+    /// All `Σᵢ` in this impl run through the fixed-shape tree reductions
+    /// of [`crate::simd`] (per-term products keep their original
+    /// left-to-right order; only the summation association moved). The
+    /// golden fixtures were re-blessed for this — see
+    /// `tests/golden/REBLESS_simd.md`.
     pub fn risk(&self) -> f64 {
-        0.5 * self.lambda.iter().zip(&self.m).map(|(l, m)| l * m).sum::<f64>()
+        0.5 * crate::simd::dot_f64(&self.lambda, &self.m)
     }
 
     /// Bias component of the risk: the same recursion run without the
@@ -74,13 +80,13 @@ impl RiskIter {
     /// lower proxy; the exact bias iterate is available via
     /// [`RiskIter::split_bias_variance`].
     pub fn mean_risk(&self) -> f64 {
-        0.5 * self.lambda.iter().zip(&self.e).map(|(l, e)| l * e * e).sum::<f64>()
+        0.5 * crate::simd::dot3_f64(&self.lambda, &self.e, &self.e)
     }
 
     /// One SGD step at learning rate `eta` and batch size `b` samples.
     pub fn step(&mut self, eta: f64, b: u64) {
         let bf = b as f64;
-        let lam_dot_m: f64 = self.lambda.iter().zip(&self.m).map(|(l, m)| l * m).sum();
+        let lam_dot_m: f64 = crate::simd::dot_f64(&self.lambda, &self.m);
         let coupling = eta * eta / bf * lam_dot_m;
         let noise = eta * eta * self.sigma2 / bf;
         let c2 = eta * eta * (1.0 + 1.0 / bf);
@@ -109,10 +115,10 @@ impl RiskIter {
     /// ```
     pub fn grad_norm_sq(&self, b: u64) -> GradNorm {
         let bf = b as f64;
-        let tr_h: f64 = self.lambda.iter().sum();
-        let tr_h_sigma: f64 = self.lambda.iter().zip(&self.m).map(|(l, m)| l * m).sum();
-        let tr_h2_sigma: f64 = self.lambda.iter().zip(&self.m).map(|(l, m)| l * l * m).sum();
-        let mean_term: f64 = self.lambda.iter().zip(&self.e).map(|(l, e)| l * l * e * e).sum();
+        let tr_h: f64 = crate::simd::sum_f64(&self.lambda);
+        let tr_h_sigma: f64 = crate::simd::dot_f64(&self.lambda, &self.m);
+        let tr_h2_sigma: f64 = crate::simd::dot3_f64(&self.lambda, &self.lambda, &self.m);
+        let mean_term: f64 = crate::simd::dot4_f64(&self.lambda, &self.lambda, &self.e, &self.e);
         GradNorm {
             additive: self.sigma2 * tr_h / bf,
             iterate: (2.0 * tr_h2_sigma + tr_h * tr_h_sigma) / bf,

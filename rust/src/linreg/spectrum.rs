@@ -44,8 +44,10 @@ impl Spectrum {
 
     /// Tr(H) — the quantity the Theorem 1 step-size gate `η ≤ 0.01/Tr(H)`
     /// and the Assumption 2 denominator `σ²·Tr(H)/B` are built from.
+    /// Reduced by the same fixed-shape tree as the recursion's sums so
+    /// `trace()` and `grad_norm_sq`'s `tr_h` agree to the bit.
     pub fn trace(&self) -> f64 {
-        self.eigenvalues().iter().sum()
+        crate::simd::sum_f64(&self.eigenvalues())
     }
 }
 

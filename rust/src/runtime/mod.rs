@@ -195,9 +195,7 @@ impl ModelRuntime {
         for lit in it {
             let g = lit.to_vec::<f32>().map_err(|e| anyhow!("grad to_vec: {e:?}"))?;
             ensure!(off + g.len() <= sink.len(), "grad leaves overflow sink");
-            for (d, s) in sink[off..off + g.len()].iter_mut().zip(&g) {
-                *d += *s;
-            }
+            crate::simd::sum_into(&mut sink[off..off + g.len()], &g);
             off += g.len();
         }
         ensure!(off == sink.len(), "grad leaves covered {off} of {}", sink.len());

@@ -1,0 +1,488 @@
+//! Lane-chunked SIMD kernels + fixed-shape tree reductions for the
+//! gradient hot path (DESIGN.md §12).
+//!
+//! Every inner loop of the accumulate → allreduce → sqnorm-tap path used
+//! to be a scalar fold. The element-wise loops autovectorize fine, but a
+//! sequential f64 sum is a loop-carried dependency the compiler must not
+//! reassociate under strict IEEE semantics — so `shard_sqnorm` and the
+//! recursion's `⟨λ, m⟩` sums ran at one add per ~4-cycle latency, no
+//! matter how wide the machine is. The kernels here fix that by choosing
+//! the reassociation *explicitly*, once, in the source:
+//!
+//! * **Element-wise kernels** ([`sum_into`], [`axpy_accumulate`],
+//!   [`scale`]) process [`LANES`]-wide chunks so the autovectorizer keeps
+//!   one accumulator array in vector registers. Element-wise arithmetic
+//!   has no cross-element dependency, so these are **bit-identical** to
+//!   the scalar loops they replace — pure codegen hints.
+//! * **Tree reductions** ([`sqnorm_f64`], [`sum_f64`], [`dot_f64`],
+//!   [`dot3_f64`], [`dot4_f64`]) accumulate into [`LANES`] independent
+//!   f64 lanes (breaking the dependency chain) and combine partials in a
+//!   **fixed-shape tree**: lane `j` folds the terms at in-block offsets
+//!   `≡ j (mod LANES)`, lanes combine by one balanced pairwise tree, and
+//!   [`BLOCK`]-element block partials combine by a balanced pairwise tree
+//!   over the block sequence. The shape is a function of the *element
+//!   count only* — never of thread count, bucket size, chunk boundaries,
+//!   or world partition — so any caller that hands the same elements in
+//!   the same order gets the same bits *by construction*. (Callers that
+//!   split work across threads split at element boundaries and reduce
+//!   whole sub-slices; determinism then needs no synchronization
+//!   discipline at all.)
+//!
+//! Changing a fold to a tree moves fp association, so rewiring a callsite
+//! that feeds a committed golden trajectory is a **blessed** change: the
+//! fixtures under `tests/golden/` were regenerated when this module
+//! landed, with an old-vs-new tolerance report committed alongside
+//! (`tests/golden/REBLESS_simd.md`) showing the drift is association-level
+//! (~1e-15 relative) and moves no schedule decision.
+//!
+//! `cargo bench --bench hotpath` carries the scalar-vs-kernel section and
+//! writes `BENCH_hotpath.json`; the ≥2× sqnorm speedup at 1M elements is
+//! an acceptance criterion, re-checked per PR.
+
+// Lane loops index `acc[j]`/`chunk[j]` on purpose: the j-indexed form is
+// the fixed lane structure the autovectorizer maps onto registers, and it
+// mirrors the Python fixture generator line for line.
+#![allow(clippy::needless_range_loop)]
+
+/// Accumulator lanes per reduction: 8 f64 lanes = one AVX-512 register or
+/// two AVX2 registers, and enough independent chains to cover the 4-cycle
+/// add latency on everything since Haswell.
+pub const LANES: usize = 8;
+
+/// Elements per reduction block: block partials (not raw elements) feed
+/// the pairwise combine tree, so the tree bookkeeping costs O(n/BLOCK)
+/// and the lane loop stays the only per-element work. 4096 f32 elements
+/// = 16 KiB — comfortably L1-resident alongside the destination.
+pub const BLOCK: usize = 4096;
+
+/// `dst[i] += src[i]` — the reduce-scatter / gradient-accumulate add.
+///
+/// Element-wise: bit-identical to the scalar zip loop for every input;
+/// the lane chunking only licenses vector codegen.
+pub fn sum_into(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len(), "sum_into: length mismatch");
+    let mut d = dst.chunks_exact_mut(LANES);
+    let mut s = src.chunks_exact(LANES);
+    for (cd, cs) in (&mut d).zip(&mut s) {
+        for j in 0..LANES {
+            cd[j] += cs[j];
+        }
+    }
+    for (o, x) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *o += *x;
+    }
+}
+
+/// `dst[i] += a·src[i]` — scaled accumulate (loss-weighted microbatch
+/// folds, EMA updates). Element-wise ⇒ bit-identical to the scalar loop.
+pub fn axpy_accumulate(dst: &mut [f32], a: f32, src: &[f32]) {
+    assert_eq!(dst.len(), src.len(), "axpy_accumulate: length mismatch");
+    let mut d = dst.chunks_exact_mut(LANES);
+    let mut s = src.chunks_exact(LANES);
+    for (cd, cs) in (&mut d).zip(&mut s) {
+        for j in 0..LANES {
+            cd[j] += a * cs[j];
+        }
+    }
+    for (o, x) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *o += a * *x;
+    }
+}
+
+/// `dst[i] *= a` — mean-normalize / micro-count rescale. Element-wise ⇒
+/// bit-identical to the scalar loop. (Callers that used to *divide* per
+/// element and now pass a reciprocal made a deliberate, blessed change —
+/// see the ring collective.)
+pub fn scale(dst: &mut [f32], a: f32) {
+    let mut d = dst.chunks_exact_mut(LANES);
+    for cd in &mut d {
+        for j in 0..LANES {
+            cd[j] *= a;
+        }
+    }
+    for o in d.into_remainder() {
+        *o *= a;
+    }
+}
+
+/// Balanced pairwise combine of the [`LANES`] lane partials — depth 3,
+/// fixed shape: `((a₀+a₁)+(a₂+a₃)) + ((a₄+a₅)+(a₆+a₇))`.
+#[inline(always)]
+fn combine_lanes(acc: &[f64; LANES]) -> f64 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// Balanced pairwise tree over block partials: adjacent pairs combine,
+/// an odd tail partial is carried up unchanged, repeat to the root. The
+/// shape depends only on `partials.len()`.
+fn combine_blocks(mut partials: Vec<f64>) -> f64 {
+    debug_assert!(!partials.is_empty());
+    while partials.len() > 1 {
+        let mut next = Vec::with_capacity(partials.len().div_ceil(2));
+        let mut pairs = partials.chunks_exact(2);
+        for p in &mut pairs {
+            next.push(p[0] + p[1]);
+        }
+        if let [odd] = pairs.remainder() {
+            next.push(*odd);
+        }
+        partials = next;
+    }
+    partials[0]
+}
+
+/// Shared block driver: `block(lo, hi)` must return the lane-combined
+/// partial of elements `lo..hi` (`hi − lo ≤ BLOCK`). Single-block inputs
+/// skip the partial vector entirely — the d≲4096 recursion sums allocate
+/// nothing.
+#[inline(always)]
+fn reduce_blocks(n: usize, mut block: impl FnMut(usize, usize) -> f64) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    if n <= BLOCK {
+        return block(0, n);
+    }
+    let mut partials = Vec::with_capacity(n.div_ceil(BLOCK));
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + BLOCK).min(n);
+        partials.push(block(lo, hi));
+        lo = hi;
+    }
+    combine_blocks(partials)
+}
+
+/// Expands to one lane-block pass over `LANES`-wide chunks of the given
+/// slices: full chunks accumulate lane-parallel, the (< [`LANES`]-long)
+/// block tail continues filling lanes `0..r` in element order. Keeping
+/// the tail rule identical across kernels is what lets one partition
+/// proof (see module docs) cover all of them.
+macro_rules! lane_block {
+    (($($slice:ident),+), $lo:ident, $hi:ident, |$($x:ident),+| $term:expr) => {{
+        let mut acc = [0.0f64; LANES];
+        $(let mut $slice = $slice[$lo..$hi].chunks_exact(LANES);)+
+        loop {
+            match ($($slice.next(),)+) {
+                ($(Some($x),)+) => {
+                    for j in 0..LANES {
+                        $(let $x = $x[j];)+
+                        acc[j] += $term;
+                    }
+                }
+                _ => break,
+            }
+        }
+        let mut j = 0;
+        $(let $slice = $slice.remainder();)+
+        let tail = lane_block!(@len $($slice),+);
+        while j < tail {
+            $(let $x = $slice[j];)+
+            acc[j] += $term;
+            j += 1;
+        }
+        combine_lanes(&acc)
+    }};
+    (@len $first:ident $(, $rest:ident)*) => { $first.len() };
+}
+
+/// Squared L2 norm of an f32 gradient shard, accumulated in f64 via the
+/// fixed-shape tree — the GNS tap and `gnorm_sq` reduction.
+pub fn sqnorm_f64(xs: &[f32]) -> f64 {
+    reduce_blocks(xs.len(), |lo, hi| {
+        lane_block!((xs), lo, hi, |x| {
+            let v = x as f64;
+            v * v
+        })
+    })
+}
+
+/// `Σ a[i]` via the fixed-shape tree.
+pub fn sum_f64(a: &[f64]) -> f64 {
+    reduce_blocks(a.len(), |lo, hi| lane_block!((a), lo, hi, |x| x))
+}
+
+/// `Σ a[i]·b[i]` via the fixed-shape tree.
+pub fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot_f64: length mismatch");
+    reduce_blocks(a.len(), |lo, hi| lane_block!((a, b), lo, hi, |x, y| x * y))
+}
+
+/// `Σ (a[i]·b[i])·c[i]` via the fixed-shape tree. The per-term product
+/// associates left-to-right, matching the scalar closures it replaced —
+/// only the summation shape differs.
+pub fn dot3_f64(a: &[f64], b: &[f64], c: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot3_f64: length mismatch");
+    assert_eq!(a.len(), c.len(), "dot3_f64: length mismatch");
+    reduce_blocks(a.len(), |lo, hi| {
+        lane_block!((a, b, c), lo, hi, |x, y, z| (x * y) * z)
+    })
+}
+
+/// `Σ ((a[i]·b[i])·c[i])·d[i]` via the fixed-shape tree (left-to-right
+/// per-term products).
+pub fn dot4_f64(a: &[f64], b: &[f64], c: &[f64], d: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot4_f64: length mismatch");
+    assert_eq!(a.len(), c.len(), "dot4_f64: length mismatch");
+    assert_eq!(a.len(), d.len(), "dot4_f64: length mismatch");
+    reduce_blocks(a.len(), |lo, hi| {
+        lane_block!((a, b, c, d), lo, hi, |x, y, z, w| ((x * y) * z) * w)
+    })
+}
+
+/// Scalar references for the parity tests and the `hotpath` bench
+/// baselines: the exact pre-SIMD arithmetic (sequential left folds /
+/// plain element loops), kept here so benches and tests share one source
+/// of truth for "what the seed used to do".
+pub mod scalar {
+    /// Left-fold `Σ x²` in f64 — the seed `shard_sqnorm`.
+    pub fn sqnorm_f64(xs: &[f32]) -> f64 {
+        xs.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Left-fold `Σ a[i]`.
+    pub fn sum_f64(a: &[f64]) -> f64 {
+        a.iter().sum()
+    }
+
+    /// Left-fold `Σ a[i]·b[i]`.
+    pub fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    /// Left-fold `Σ (a[i]·b[i])·c[i]`.
+    pub fn dot3_f64(a: &[f64], b: &[f64], c: &[f64]) -> f64 {
+        a.iter().zip(b).zip(c).map(|((x, y), z)| x * y * z).sum()
+    }
+
+    /// Left-fold `Σ ((a[i]·b[i])·c[i])·d[i]`.
+    pub fn dot4_f64(a: &[f64], b: &[f64], c: &[f64], d: &[f64]) -> f64 {
+        a.iter().zip(b).zip(c).zip(d).map(|(((x, y), z), w)| x * y * z * w).sum()
+    }
+
+    /// Plain element loop `dst += src` — the seed accumulate.
+    pub fn sum_into(dst: &mut [f32], src: &[f32]) {
+        for (o, x) in dst.iter_mut().zip(src) {
+            *o += *x;
+        }
+    }
+
+    /// Plain element loop `dst += a·src`.
+    pub fn axpy_accumulate(dst: &mut [f32], a: f32, src: &[f32]) {
+        for (o, x) in dst.iter_mut().zip(src) {
+            *o += a * *x;
+        }
+    }
+
+    /// Plain element loop `dst *= a`.
+    pub fn scale(dst: &mut [f32], a: f32) {
+        for o in dst.iter_mut() {
+            *o *= a;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    /// Adversarial lengths around the lane width, the block width, and a
+    /// large prime that is coprime to both.
+    const LENGTHS: &[usize] = &[
+        0,
+        1,
+        LANES - 1,
+        LANES,
+        LANES + 1,
+        BLOCK - 1,
+        BLOCK,
+        BLOCK + 1,
+        2 * BLOCK + 3,
+        10_007,
+    ];
+
+    fn f32s(n: usize, salt: u32) -> Vec<f32> {
+        (0..n).map(|i| ((i as u32).wrapping_mul(2654435761).wrapping_add(salt) % 1997) as f32 * 0.01 - 9.0).collect()
+    }
+
+    fn f64s(n: usize, salt: u32) -> Vec<f64> {
+        f32s(n, salt).into_iter().map(|x| x as f64 * 1.7).collect()
+    }
+
+    #[test]
+    fn elementwise_kernels_are_bit_identical_to_scalar() {
+        for &n in LENGTHS {
+            let src = f32s(n, 7);
+            for (name, simd_out, scalar_out) in [
+                (
+                    "sum_into",
+                    {
+                        let mut d = f32s(n, 1);
+                        sum_into(&mut d, &src);
+                        d
+                    },
+                    {
+                        let mut d = f32s(n, 1);
+                        scalar::sum_into(&mut d, &src);
+                        d
+                    },
+                ),
+                (
+                    "axpy_accumulate",
+                    {
+                        let mut d = f32s(n, 2);
+                        axpy_accumulate(&mut d, 0.37, &src);
+                        d
+                    },
+                    {
+                        let mut d = f32s(n, 2);
+                        scalar::axpy_accumulate(&mut d, 0.37, &src);
+                        d
+                    },
+                ),
+                (
+                    "scale",
+                    {
+                        let mut d = f32s(n, 3);
+                        scale(&mut d, 0.37);
+                        d
+                    },
+                    {
+                        let mut d = f32s(n, 3);
+                        scalar::scale(&mut d, 0.37);
+                        d
+                    },
+                ),
+            ] {
+                assert_eq!(
+                    simd_out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    scalar_out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "{name} at n={n} must be bit-identical to the scalar loop"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tree_reductions_match_scalar_to_association_tolerance() {
+        // trees are NOT bit-equal to left folds (that is the point);
+        // they must agree to fp-association accuracy and be exactly
+        // equal where every partial is exact (all-zeros, single term).
+        for &n in LENGTHS {
+            let xs = f32s(n, 11);
+            let (a, b, c, d) = (f64s(n, 1), f64s(n, 2), f64s(n, 3), f64s(n, 4));
+            let cases = [
+                ("sqnorm_f64", sqnorm_f64(&xs), scalar::sqnorm_f64(&xs)),
+                ("sum_f64", sum_f64(&a), scalar::sum_f64(&a)),
+                ("dot_f64", dot_f64(&a, &b), scalar::dot_f64(&a, &b)),
+                ("dot3_f64", dot3_f64(&a, &b, &c), scalar::dot3_f64(&a, &b, &c)),
+                ("dot4_f64", dot4_f64(&a, &b, &c, &d), scalar::dot4_f64(&a, &b, &c, &d)),
+            ];
+            for (name, tree, fold) in cases {
+                let tol = 1e-12 * fold.abs().max(1.0) * (n.max(1) as f64);
+                assert!(
+                    (tree - fold).abs() <= tol,
+                    "{name} at n={n}: tree {tree} vs fold {fold} exceeds association tolerance"
+                );
+            }
+        }
+        assert_eq!(sqnorm_f64(&[]), 0.0);
+        assert_eq!(sum_f64(&[]), 0.0);
+        assert_eq!(sqnorm_f64(&[3.0]), 9.0);
+        assert_eq!(dot_f64(&[2.0], &[4.0]), 8.0);
+    }
+
+    #[test]
+    fn tree_is_exact_on_power_of_two_equal_terms() {
+        // LANES equal values of 0.1: one term per lane, then every tree
+        // node adds two equal partials — a pure doubling ladder, exact at
+        // every level, so the result is exactly 8·0.1. The left fold of
+        // the same data rounds at its third add (0.2 + 0.1) and lands one
+        // ulp low — the sharpest possible demonstration that the tree is
+        // the *better-conditioned* association, not just a different one.
+        // (This is also why the golden-trace drift is ~1e-16: the
+        // isotropic fixtures sum d = 16/32 near-identical terms.)
+        let xs = vec![0.1f64; LANES];
+        assert_eq!(sum_f64(&xs).to_bits(), (0.1f64 * LANES as f64).to_bits());
+        assert_ne!(scalar::sum_f64(&xs).to_bits(), (0.1f64 * LANES as f64).to_bits());
+        // Integer-valued terms keep every intermediate exact (≤ 2⁵³), for
+        // fold and tree alike — a multi-block sanity anchor.
+        let ones = vec![1.0f64; 1 << 14];
+        assert_eq!(sum_f64(&ones), (1u64 << 14) as f64);
+        assert_eq!(scalar::sum_f64(&ones), (1u64 << 14) as f64);
+    }
+
+    #[test]
+    fn prop_tree_shape_is_partition_invariant() {
+        // THE determinism property: reducing any block-aligned partition
+        // of the input and combining sub-results through the same tree
+        // is bit-identical to one whole-slice call — the reason thread
+        // count, bucket size, and world partition cannot move the bits.
+        // Verified here the way callers actually split: whole sub-slice
+        // reductions at BLOCK-aligned boundaries, partials combined by
+        // the position-matched tree (pad-to-missing = skip, since every
+        // sub-slice partial list concatenates in element order).
+        check("tree_partition_invariance", 64, |g| {
+            let n = g.usize_in(0, 40_000);
+            let xs = f32s(n, g.u64(u32::MAX as u64) as u32);
+            let whole = sqnorm_f64(&xs);
+            // split at a random BLOCK-aligned boundary; the combined
+            // partial lists then match the whole call's exactly.
+            let blocks = n.div_ceil(BLOCK).max(1);
+            let cut = (g.usize_in(0, blocks) * BLOCK).min(n);
+            let mut partials = Vec::new();
+            for part in [&xs[..cut], &xs[cut..]] {
+                let mut lo = 0;
+                while lo < part.len() {
+                    let hi = (lo + BLOCK).min(part.len());
+                    partials.push(lane_partial(&part[lo..hi]));
+                    lo = hi;
+                }
+            }
+            let split = if partials.is_empty() { 0.0 } else { combine_blocks(partials) };
+            assert_eq!(
+                whole.to_bits(),
+                split.to_bits(),
+                "n={n} cut={cut}: block-aligned split must reproduce the whole-slice bits"
+            );
+        });
+    }
+
+    /// One block's lane partial — test-only mirror of the macro pass,
+    /// exercised against it by the partition property.
+    fn lane_partial(xs: &[f32]) -> f64 {
+        assert!(xs.len() <= BLOCK);
+        let (lo, hi) = (0, xs.len());
+        lane_block!((xs), lo, hi, |x| {
+            let v = x as f64;
+            v * v
+        })
+    }
+
+    #[test]
+    fn prop_elementwise_chunking_cannot_move_bits() {
+        // sum_into over any partition of the index space equals the
+        // whole-slice call bit-for-bit (element-wise ops have no
+        // cross-element state) — the bucketing half of the argument.
+        check("elementwise_partition_invariance", 64, |g| {
+            let n = g.usize_in(0, 10_000);
+            let src = f32s(n, g.u64(u32::MAX as u64) as u32);
+            let mut whole = f32s(n, 5);
+            sum_into(&mut whole, &src);
+            let mut split = f32s(n, 5);
+            let mut lo = 0;
+            while lo < n {
+                let step = 1 + g.usize_in(0, 700);
+                let hi = (lo + step).min(n);
+                sum_into(&mut split[lo..hi], &src[lo..hi]);
+                lo = hi;
+            }
+            assert_eq!(
+                whole.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                split.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "n={n}: arbitrary range splits must be bit-identical"
+            );
+        });
+    }
+}

@@ -1,6 +1,11 @@
 //! Micro-benchmark harness (criterion substitute): warmup, repeated
-//! timed batches, median/mean/p10/p90 over per-iteration times.
+//! timed batches, median/mean/p10/p90 over per-iteration times — plus
+//! [`JsonReport`], the machine-readable `BENCH_*.json` emitter that
+//! tracks the perf trajectory across PRs (ns/element per kernel,
+//! scalar-vs-SIMD ratios, modeled step times).
 
+use crate::util::json::Value;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -28,6 +33,57 @@ impl BenchResult {
 
     pub fn median_secs(&self) -> f64 {
         self.median.as_secs_f64()
+    }
+
+    /// JSON object for [`JsonReport`]: name, iteration count, and the
+    /// quantiles in nanoseconds.
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Value::Str(self.name.clone()));
+        m.insert("iters".into(), Value::Num(self.iters as f64));
+        let ns = |d: Duration| Value::Num(d.as_nanos() as f64);
+        m.insert("mean_ns".into(), ns(self.mean));
+        m.insert("median_ns".into(), ns(self.median));
+        m.insert("p10_ns".into(), ns(self.p10));
+        m.insert("p90_ns".into(), ns(self.p90));
+        Value::Obj(m)
+    }
+}
+
+/// Accumulates one bench run's results + derived scalar metrics and
+/// writes them as a `BENCH_<name>.json` file: `{"bench": …, "results":
+/// [BenchResult…], "metrics": {key: number…}}`. Metric keys are
+/// dot-namespaced by convention (`kernels.sqnorm.n1048576.speedup`,
+/// `model.overlapped_step_s`), so downstream tooling can diff perf
+/// across PRs without parsing human-oriented stdout.
+pub struct JsonReport {
+    bench: String,
+    results: Vec<Value>,
+    metrics: BTreeMap<String, Value>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), results: Vec::new(), metrics: BTreeMap::new() }
+    }
+
+    /// Record a timed result (call alongside pushing it to the summary list).
+    pub fn result(&mut self, r: &BenchResult) {
+        self.results.push(r.to_json());
+    }
+
+    /// Record a derived scalar (ns/element, speedup ratio, modeled seconds).
+    pub fn metric(&mut self, key: &str, value: f64) {
+        self.metrics.insert(key.to_string(), Value::Num(value));
+    }
+
+    /// Serialize and write to `path`.
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut top = BTreeMap::new();
+        top.insert("bench".into(), Value::Str(self.bench.clone()));
+        top.insert("results".into(), Value::Arr(self.results.clone()));
+        top.insert("metrics".into(), Value::Obj(self.metrics.clone()));
+        std::fs::write(path, Value::Obj(top).to_string_pretty())
     }
 }
 
@@ -98,5 +154,26 @@ mod tests {
         assert!(r.iters >= 10);
         assert!(r.p10 <= r.median && r.median <= r.p90);
         assert!(r.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn json_report_round_trips_through_the_parser() {
+        let r = bench("json-probe", Duration::from_millis(20), || {
+            black_box((0..50).sum::<u64>());
+        });
+        let mut rep = JsonReport::new("unit");
+        rep.result(&r);
+        rep.metric("kernels.sqnorm.n64.speedup", 2.5);
+        let tmp = crate::util::TempDir::new("bench-json").unwrap();
+        let path = tmp.path().join("BENCH_unit.json");
+        rep.write(&path).unwrap();
+        let v = Value::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.req("bench").unwrap().as_str().unwrap(), "unit");
+        let results = v.req("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].req("name").unwrap().as_str().unwrap(), "json-probe");
+        assert!(results[0].req("median_ns").unwrap().as_f64().unwrap() > 0.0);
+        let metrics = v.req("metrics").unwrap();
+        assert_eq!(metrics.req("kernels.sqnorm.n64.speedup").unwrap().as_f64().unwrap(), 2.5);
     }
 }

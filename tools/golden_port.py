@@ -1,0 +1,426 @@
+#!/usr/bin/env python3
+"""Cross-implementation port of the golden-trajectory arithmetic.
+
+This is the generator PR 5 described but never committed: a line-by-line
+Python port of the exact f64 arithmetic behind `rust/tests/golden.rs`
+(schedule query -> risk-recursion step -> exact GNS -> observe), used to
+(re)generate the committed fixtures in containers that ship no rust
+toolchain. CPython floats are IEEE-754 doubles and `+ - * /`, `sqrt` are
+exactly rounded, so every operation here commits to the same bits rustc
+emits; the two cross-impl risks are `cos` (both sides call this image's
+glibc libm) and `powi` (ported below as compiler_builtins' exact
+square-and-multiply ladder).
+
+Two reduction modes mirror the two generations of Rust arithmetic:
+
+* ``fold`` -- the pre-SIMD seed: every d-length sum is a sequential left
+  fold (`iter().map(..).sum::<f64>()`), matching PRs 1-5.
+* ``tree`` -- the `seesaw::simd` kernels: 8-lane partial accumulators
+  over the term stream, lanes combined by a balanced pairwise tree, block
+  partials (4096-element blocks) combined by the same pairwise tree.
+  This MUST stay in lockstep with `rust/src/simd/mod.rs`; the kernel
+  parity tests pin the Rust side, this file pins the fixtures.
+
+Usage:
+  python3 tools/golden_port.py verify          # fold-mode output == committed fixtures?
+  python3 tools/golden_port.py bless --mode tree   # rewrite fixtures with tree arithmetic
+  python3 tools/golden_port.py report          # old-vs-new tolerance report (stdout, markdown)
+"""
+
+import argparse
+import math
+import os
+import struct
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN_DIR = os.path.join(REPO, "rust", "tests", "golden")
+
+# ---------------------------------------------------------------------------
+# f64 helpers
+# ---------------------------------------------------------------------------
+
+def bits(x: float) -> str:
+    """IEEE-754 bit pattern, matching Rust's `{:016x}` of `f64::to_bits`."""
+    return f"{struct.unpack('<Q', struct.pack('<d', x))[0]:016x}"
+
+
+def powi(a: float, b: int) -> float:
+    """compiler_builtins `__powidf2`: square-and-multiply over |b|, one
+    final reciprocal for negative exponents. Rust's `f64::powi` lowers to
+    this ladder; a `math.pow` here would round differently."""
+    recip = b < 0
+    n = abs(b)
+    mul = 1.0
+    while True:
+        if n & 1:
+            mul *= a
+        n >>= 1
+        if n == 0:
+            break
+        a *= a
+    return 1.0 / mul if recip else mul
+
+
+def rust_round(x: float) -> int:
+    """`f64::round` rounds half away from zero; Python's round() banker-rounds."""
+    return int(math.floor(x + 0.5)) if x >= 0.0 else int(math.ceil(x - 0.5))
+
+
+# ---------------------------------------------------------------------------
+# Reductions: the seed left fold vs the seesaw::simd fixed-shape tree
+# ---------------------------------------------------------------------------
+
+LANES = 8      # mirrors simd::LANES
+BLOCK = 4096   # mirrors simd::BLOCK (elements per reduction block)
+
+
+def fold_reduce(n, term):
+    """`iter().map(term).sum::<f64>()` -- sequential left fold from 0.0."""
+    acc = 0.0
+    for i in range(n):
+        acc += term(i)
+    return acc
+
+
+def _lane_block(term, lo, hi):
+    """One block's lane-partial pass + balanced pairwise lane combine.
+    Mirrors simd::lane_reduce: lane j accumulates terms at block offsets
+    j, j+LANES, j+2*LANES, ...; the tail (< LANES terms) continues filling
+    lanes 0..r in order; lanes then combine as a fixed depth-3 tree."""
+    acc = [0.0] * LANES
+    i = lo
+    while i + LANES <= hi:
+        for j in range(LANES):
+            acc[j] += term(i + j)
+        i += LANES
+    j = 0
+    while i < hi:
+        acc[j] += term(i)
+        i += 1
+        j += 1
+    a01 = acc[0] + acc[1]
+    a23 = acc[2] + acc[3]
+    a45 = acc[4] + acc[5]
+    a67 = acc[6] + acc[7]
+    return (a01 + a23) + (a45 + a67)
+
+
+def tree_reduce(n, term):
+    """simd::reduce_f64: block partials combined by a balanced pairwise
+    tree whose shape depends only on n -- never on how a caller chunks,
+    threads, or buckets the input."""
+    if n == 0:
+        return 0.0
+    partials = [_lane_block(term, lo, min(lo + BLOCK, n)) for lo in range(0, n, BLOCK)]
+    while len(partials) > 1:
+        nxt = []
+        k = 0
+        while k + 1 < len(partials):
+            nxt.append(partials[k] + partials[k + 1])
+            k += 2
+        if k < len(partials):
+            nxt.append(partials[k])
+        partials = nxt
+    return partials[0]
+
+
+# ---------------------------------------------------------------------------
+# linreg::recursion (RiskIter) + experiments::adaptive_exps::exact_gns
+# ---------------------------------------------------------------------------
+
+class RiskIter:
+    """Port of `linreg::recursion::RiskIter` for an isotropic spectrum.
+
+    `reduce` is fold_reduce or tree_reduce; per-term products keep the
+    exact left-to-right multiply order of the Rust closures (`l * m`,
+    `(l * l) * m`, `((l * l) * e) * e`) in both modes -- only the SUM
+    association differs between generations.
+    """
+
+    def __init__(self, dim, sigma2, init_radius2, reduce):
+        self.lam = [1.0] * dim  # Spectrum::Isotropic
+        self.sigma2 = sigma2
+        m0 = init_radius2 / float(dim)
+        self.m = [m0] * dim
+        self.e = [math.sqrt(m0)] * dim
+        self.reduce = reduce
+
+    def risk(self):
+        d = len(self.m)
+        return 0.5 * self.reduce(d, lambda i: self.lam[i] * self.m[i])
+
+    def step(self, eta, b):
+        bf = float(b)
+        d = len(self.m)
+        lam_dot_m = self.reduce(d, lambda i: self.lam[i] * self.m[i])
+        coupling = eta * eta / bf * lam_dot_m
+        noise = eta * eta * self.sigma2 / bf
+        c2 = eta * eta * (1.0 + 1.0 / bf)
+        for i in range(d):
+            l = self.lam[i]
+            self.m[i] = (1.0 - 2.0 * eta * l + c2 * l * l) * self.m[i] + (coupling + noise) * l
+            self.e[i] *= 1.0 - eta * l
+        return self
+
+    def grad_norm_sq(self, b):
+        bf = float(b)
+        d = len(self.m)
+        tr_h = self.reduce(d, lambda i: self.lam[i])
+        tr_h_sigma = self.reduce(d, lambda i: self.lam[i] * self.m[i])
+        tr_h2_sigma = self.reduce(d, lambda i: self.lam[i] * self.lam[i] * self.m[i])
+        mean_term = self.reduce(d, lambda i: self.lam[i] * self.lam[i] * self.e[i] * self.e[i])
+        additive = self.sigma2 * tr_h / bf
+        iterate = (2.0 * tr_h2_sigma + tr_h * tr_h_sigma) / bf
+        mean = (1.0 - 1.0 / bf) * mean_term
+        return additive, iterate, mean
+
+
+def exact_gns(it, b):
+    additive, iterate, mean = it.grad_norm_sq(b)
+    noise_tr = (additive + iterate) * float(b)
+    signal = mean / (1.0 - 1.0 / float(b)) if b > 1 else mean
+    if signal > 0.0:
+        return noise_tr / signal
+    return None
+
+
+# ---------------------------------------------------------------------------
+# schedule:: (warmup_factor / assemble_point / cosine / AdaptiveSeesaw)
+# ---------------------------------------------------------------------------
+
+def warmup_factor(warmup_tokens, tokens):
+    if warmup_tokens > 0 and tokens < warmup_tokens:
+        return min(float(tokens + 1) / float(warmup_tokens), 1.0)
+    return 1.0
+
+
+def assemble_point(base_lr, base_batch, warm, decay, batch_mult, phase):
+    batch = max(rust_round(float(base_batch) * batch_mult), 1)  # no max_batch clamp in the traces
+    return (base_lr * warm * decay, batch, phase)
+
+
+class CosineSchedule:
+    """`JointSchedule { kind: CosineContinuous }`."""
+
+    def __init__(self, base_lr, base_batch, warmup_tokens, total_tokens):
+        self.base_lr = base_lr
+        self.base_batch = base_batch
+        self.warmup_tokens = warmup_tokens
+        self.total_tokens = total_tokens
+
+    def query(self, tokens):
+        warm = warmup_factor(self.warmup_tokens, tokens)
+        t = float(max(tokens - self.warmup_tokens, 0))
+        span = float(max(self.total_tokens - self.warmup_tokens, 1))
+        tau = min(max(t / span, 0.0), 1.0)
+        c = math.cos(math.pi / 2.0 * tau)
+        return assemble_point(self.base_lr, self.base_batch, warm, c, 1.0, 0)
+
+    def observe_gns(self, tokens, gns):
+        pass
+
+
+class AdaptiveSeesaw:
+    """Port of `schedule::adaptive::AdaptiveSeesaw` (the mutable core)."""
+
+    def __init__(self, base_lr, base_batch, warmup_tokens, total_tokens, a,
+                 hysteresis, max_cuts):
+        self.base_lr = base_lr
+        self.base_batch = base_batch
+        self.warmup_tokens = warmup_tokens
+        self.total_tokens = total_tokens
+        self.alpha = math.sqrt(a)
+        self.beta = a
+        self.hysteresis_tokens = hysteresis
+        self.max_cuts = max_cuts
+        self.phase = 0
+        self.last_cut_tokens = None
+        self.latest_gns = None
+        self.cut_history = []
+
+    def next_cut_threshold(self):
+        return float(self.base_batch) * powi(self.beta, self.phase + 1)
+
+    def try_cut(self, tokens):
+        if self.latest_gns is None:
+            return
+        gns = self.latest_gns
+        while self.phase < self.max_cuts and gns >= self.next_cut_threshold():
+            if self.last_cut_tokens is not None and self.hysteresis_tokens > 0 \
+                    and tokens - self.last_cut_tokens < self.hysteresis_tokens:
+                break
+            self.phase += 1
+            self.last_cut_tokens = tokens
+            self.cut_history.append(tokens)
+
+    def query(self, tokens):
+        if tokens >= self.warmup_tokens:
+            self.try_cut(tokens)
+        warm = warmup_factor(self.warmup_tokens, tokens)
+        k = self.phase
+        decay = powi(self.alpha, -k)
+        batch_mult = powi(self.beta, k)
+        return assemble_point(self.base_lr, self.base_batch, warm, decay, batch_mult, k)
+
+    def observe_gns(self, tokens, gns):
+        if math.isfinite(gns) and gns > 0.0:
+            self.latest_gns = gns
+
+
+# ---------------------------------------------------------------------------
+# tests/golden.rs drive loop + fixture rendering
+# ---------------------------------------------------------------------------
+
+def drive(sched, it, total_tokens):
+    rows = []
+    tokens = 0
+    step = 0
+    last_phase = 0
+    while tokens < total_tokens:
+        lr, batch, phase = sched.query(tokens)
+        cuts = max(phase - last_phase, 0)
+        last_phase = phase
+        it.step(lr, batch)
+        tokens += batch
+        step += 1
+        a, i_, m_ = it.grad_norm_sq(batch)
+        gnorm = (a + i_) + m_  # GradNorm::total(): additive + iterate + mean
+        gns = exact_gns(it, batch)
+        if gns is not None:
+            sched.observe_gns(tokens, gns)
+        rows.append((step, lr, batch, it.risk(), gnorm, gns, cuts))
+        assert step < 100_000, "runaway golden driver"
+    return rows
+
+
+TRACES = {
+    "cosine_fixed.trace": {
+        "name": "cosine-fixed",
+        "config": "config: isotropic d=32 sigma2=0.25 r0=4.0; cosine lr0=0.05 batch=32 warmup=640 total=6400",
+        "total": 6400,
+        "sched": lambda: CosineSchedule(0.05, 32, 640, 6400),
+        "iter": lambda reduce: RiskIter(32, 0.25, 4.0, reduce),
+    },
+    "adaptive_seesaw.trace": {
+        "name": "adaptive-seesaw",
+        "config": "config: isotropic d=16 sigma2=1.0 r0=16.0; adaptive a=2.0 lr0=0.05 batch=16 "
+                  "warmup=800 total=8000 hysteresis=400 max_cuts=6",
+        "total": 8000,
+        "sched": lambda: AdaptiveSeesaw(0.05, 16, 800, 8000, 2.0, 400, 6),
+        "iter": lambda reduce: RiskIter(16, 1.0, 16.0, reduce),
+    },
+}
+
+
+def render(name, config, rows):
+    out = [f"# seesaw golden trajectory — {name}",
+           f"# {config}",
+           "# columns: step,lr_bits,batch_tokens,ce_bits,gnorm_bits,gns_bits,cuts",
+           "# regenerate (intentional trajectory changes only): SEESAW_BLESS=1 cargo test --test golden"]
+    for (step, lr, batch, ce, gnorm, gns, cuts) in rows:
+        g = bits(gns) if gns is not None else "-"
+        out.append(f"{step},{bits(lr)},{batch},{bits(ce)},{bits(gnorm)},{g},{cuts}")
+    return "\n".join(out) + "\n"
+
+
+def generate(mode):
+    reduce = fold_reduce if mode == "fold" else tree_reduce
+    out = {}
+    for fname, spec in TRACES.items():
+        rows = drive(spec["sched"](), spec["iter"](reduce), spec["total"])
+        out[fname] = (render(spec["name"], spec["config"], rows), rows)
+    return out
+
+
+def decode(line):
+    f = line.split(",")
+    fb = lambda s: struct.unpack("<d", struct.pack("<Q", int(s, 16)))[0]
+    gns = None if f[5] == "-" else fb(f[5])
+    return int(f[0]), fb(f[1]), int(f[2]), fb(f[3]), fb(f[4]), gns, int(f[6])
+
+
+def cmd_verify(mode):
+    ok = True
+    for fname, (text, _) in generate(mode).items():
+        path = os.path.join(GOLDEN_DIR, fname)
+        committed = open(path).read()
+        cl = [l for l in committed.splitlines() if not l.startswith("#")]
+        gl = [l for l in text.splitlines() if not l.startswith("#")]
+        if cl == gl:
+            print(f"OK   {fname}: {len(gl)} data lines bit-identical ({mode} mode)")
+        else:
+            ok = False
+            n_diff = sum(1 for a, b in zip(cl, gl) if a != b) + abs(len(cl) - len(gl))
+            first = next((i for i, (a, b) in enumerate(zip(cl, gl)) if a != b), min(len(cl), len(gl)))
+            print(f"FAIL {fname}: {n_diff} differing lines (first at data line {first}, {mode} mode)")
+            if first < min(len(cl), len(gl)):
+                print(f"  committed: {cl[first]}")
+                print(f"  port:      {gl[first]}")
+    return 0 if ok else 1
+
+
+def cmd_bless(mode):
+    for fname, (text, rows) in generate(mode).items():
+        path = os.path.join(GOLDEN_DIR, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"blessed {path} ({len(rows)} steps, {mode} mode)")
+    return 0
+
+
+def cmd_report():
+    old = generate("fold")
+    new = generate("tree")
+    print("# Golden re-bless tolerance report — left-fold → simd fixed-shape tree")
+    print()
+    print("Old = PR1-5 seed arithmetic (sequential left-fold sums); "
+          "new = `seesaw::simd` 8-lane / pairwise-tree reductions.")
+    print("Per-term products are unchanged; only the summation association moved.")
+    print()
+    for fname in TRACES:
+        o_rows, n_rows = old[fname][1], new[fname][1]
+        assert len(o_rows) == len(n_rows), f"{fname}: step count moved ({len(o_rows)} vs {len(n_rows)})"
+        worst = {"ce": 0.0, "gnorm": 0.0, "gns": 0.0}
+        cuts_equal = True
+        batches_equal = True
+        lr_equal = True
+        for o, n in zip(o_rows, n_rows):
+            rel = lambda a, b: abs(a - b) / max(abs(a), abs(b), 1e-300)
+            worst["ce"] = max(worst["ce"], rel(o[3], n[3]))
+            worst["gnorm"] = max(worst["gnorm"], rel(o[4], n[4]))
+            if (o[5] is None) != (n[5] is None):
+                worst["gns"] = float("inf")
+            elif o[5] is not None:
+                worst["gns"] = max(worst["gns"], rel(o[5], n[5]))
+            cuts_equal &= o[6] == n[6]
+            batches_equal &= o[2] == n[2]
+            lr_equal &= bits(o[1]) == bits(n[1])
+        print(f"## {fname} ({len(o_rows)} steps)")
+        print()
+        print("| column | max relative delta |")
+        print("|---|---|")
+        for k in ("ce", "gnorm", "gns"):
+            print(f"| {k} | {worst[k]:.3e} |")
+        print(f"| lr | {'bit-identical' if lr_equal else 'DIVERGED'} |")
+        print(f"| batch | {'identical' if batches_equal else 'DIVERGED'} |")
+        print(f"| cut steps | {'identical' if cuts_equal else 'DIVERGED'} |")
+        print()
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("cmd", choices=["verify", "bless", "report"])
+    ap.add_argument("--mode", choices=["fold", "tree"], default="fold",
+                    help="reduction arithmetic generation (default: fold, the pre-SIMD seed)")
+    args = ap.parse_args()
+    if args.cmd == "verify":
+        return cmd_verify(args.mode)
+    if args.cmd == "bless":
+        return cmd_bless(args.mode)
+    return cmd_report()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
