@@ -19,7 +19,7 @@
 //! ```
 
 use seesaw::coordinator::elastic::{effective_world, WorldPolicy};
-use seesaw::metrics::{print_table, WallClockModel};
+use seesaw::metrics::{print_table, StragglerModel, WallClockModel};
 
 /// Canonical ring payload for a `world`-way reduce of `elems` f32s.
 fn ring_bytes(world: usize, elems: usize) -> u64 {
@@ -176,5 +176,91 @@ fn main() {
         "scale-out overhead on an 8 MB/s interconnect (ring grows with the fleet)",
         &["cut", "elastic W", "ring payload", "s/step"],
         &rows,
+    );
+
+    // --- where stragglers flip the tradeoff (DESIGN.md §13) ------------
+    // Every wave is billed at its slowest participant, and the chance of
+    // catching a straggler grows with the fleet: a 64-way elastic wave
+    // almost always carries one, the 2-way fixed wave usually doesn't.
+    // So heterogeneity taxes scale-out specifically. On a fat link the
+    // elastic lead is wide enough to absorb the tax; on a thin link the
+    // straggled fleet *loses* to staying small — the flip this table
+    // pins down. 50 steps at the deepest rung so the per-step slowest-of-
+    // world draws average out and the assertions hold for any seed.
+    let deep_batch = base_batch << 5; // rung 5: elastic W = 64 vs fixed W = 2
+    let deep_world = effective_world(policy, base_world, base_micro, deep_batch / MICRO_TOKENS);
+    let thin = WallClockModel { comm_bytes_per_sec: 2e6, ..wall };
+    const STORM_STEPS: u64 = 50;
+    let deep_ratio = |wall: &WallClockModel, prob: f64| -> f64 {
+        let strag = StragglerModel::new(7, prob);
+        let (mut elastic, mut fixed) = (0.0, 0.0);
+        for step in 0..STORM_STEPS {
+            elastic += wall.step_time_hetero_elastic(
+                deep_batch,
+                deep_world,
+                base_world,
+                ring_bytes(deep_world, ELEMS),
+                &strag,
+                step,
+            );
+            fixed += wall.step_time_hetero(
+                deep_batch,
+                ring_bytes(base_world, ELEMS),
+                &strag,
+                step,
+                base_world,
+            );
+        }
+        elastic / fixed
+    };
+    let probs = [0.0, 0.05, 0.15, 0.30];
+    let ratios: Vec<(f64, f64)> =
+        probs.iter().map(|&p| (deep_ratio(&wall, p), deep_ratio(&thin, p))).collect();
+    let rows: Vec<Vec<String>> = probs
+        .iter()
+        .zip(&ratios)
+        .map(|(&p, &(fat, thin))| {
+            let verdict = |r: f64| if r < 1.0 { "scale out" } else { "stay small" };
+            vec![
+                format!("{:.0}%", 100.0 * p),
+                format!("{fat:.3}"),
+                verdict(fat).into(),
+                format!("{thin:.3}"),
+                verdict(thin).into(),
+            ]
+        })
+        .collect();
+    print_table(
+        "straggler survival at rung 5 (elastic/fixed time ratio; < 1 ⇒ scale-out wins)",
+        &["stragglers", "100 GB/s ratio", "verdict", "2 MB/s ratio", "verdict"],
+        &rows,
+    );
+    let (healthy_fat, healthy_thin) = ratios[0];
+    assert!(
+        healthy_fat < 1.0 && healthy_thin < 1.0,
+        "a healthy fleet must favor scale-out on both links ({healthy_fat:.3}, {healthy_thin:.3})"
+    );
+    for (&p, &(fat, thin)) in probs.iter().zip(&ratios).skip(1) {
+        // The slowest-of-world draws are shared between the two links, so
+        // stragglers move both ratios by the same factor — and always
+        // against the big fleet.
+        assert!(
+            fat > healthy_fat && thin > healthy_thin,
+            "stragglers must tax scale-out at p={p}: {fat:.3} vs {healthy_fat:.3}, \
+             {thin:.3} vs {healthy_thin:.3}"
+        );
+    }
+    let (storm_fat, storm_thin) = ratios[2]; // p = 0.15
+    assert!(
+        storm_fat < 1.0,
+        "the fat link must absorb a 15% straggler tax (ratio {storm_fat:.3})"
+    );
+    assert!(
+        storm_thin > 1.0,
+        "15% stragglers on the thin link must flip the tradeoff (ratio {storm_thin:.3})"
+    );
+    println!(
+        "\nflip: at 15% stragglers scale-out still wins on 100 GB/s ({storm_fat:.2}×) and \
+         loses on 2 MB/s ({storm_thin:.2}×)"
     );
 }

@@ -2,7 +2,7 @@
 //!
 //! The coordinator shards each global batch across `world_size` simulated
 //! workers; their gradients are combined by a [`Collective`] — one trait,
-//! two implementations selected by config ([`CollectiveKind`]):
+//! three implementations selected by config ([`CollectiveKind`]):
 //!
 //! * [`RingCollective`] — a chunked **ring allreduce**, the same
 //!   2·(W−1)-phase schedule real clusters run, implemented over in-memory
@@ -10,13 +10,26 @@
 //! * [`ParallelCollective`] — a scoped-thread tree reduction that chunks
 //!   the vector across threads. Same mean (fixed per-chunk worker order),
 //!   faster at large gradient sizes.
+//! * [`TwoLevelCollective`] — the **hierarchical** schedule real
+//!   multi-node fleets run (DESIGN.md §13): reduce to a node leader
+//!   within each node (all nodes in parallel, on the intra-node fabric),
+//!   ring-allreduce across the node leaders (on the inter-node fabric),
+//!   broadcast back down. Numerically it computes the same ordered
+//!   per-element worker sum as [`ParallelCollective`] — bit-identical
+//!   for any `(nodes, workers-per-node)` split — while its
+//!   [`CollectiveStats`] account the two-level wire schedule, whose
+//!   intra/inter byte split ([`two_level_split`]) the wall-clock model
+//!   prices against separate bandwidths.
 //!
-//! Every call returns [`CollectiveStats`] — both implementations account
-//! the canonical ring payload of `2·(W−1)·n·4` bytes over `2·(W−1)` phases,
-//! so the wall-clock model can charge communication identically whichever
-//! implementation ran. Unit + property tests pin the semantics (mean of
-//! all shards, bit-exact reproducibility, byte-accounting parity, any
-//! W ≥ 1).
+//! Every call returns [`CollectiveStats`] — the ring and parallel
+//! implementations account the canonical ring payload of `2·(W−1)·n·4`
+//! bytes over `2·(W−1)` phases, so the wall-clock model can charge
+//! communication identically whichever of the two ran; the two-level
+//! implementation accounts its hierarchical schedule instead (the same
+//! substitution precedent: stats describe the wire schedule being
+//! modeled, not the in-memory arithmetic that simulates it). Unit +
+//! property tests pin the semantics (mean of all shards, bit-exact
+//! reproducibility, byte-accounting parity, any W ≥ 1).
 //!
 //! **Bucketed mode** (DESIGN.md §10): [`Collective::allreduce_mean_bucketed`]
 //! reduces the flat gradient in deterministic fixed-size buckets — the
@@ -67,6 +80,27 @@ fn whole_vector_stats(w: usize, n: usize) -> CollectiveStats {
     }
 }
 
+/// Billable payload split of one two-level reduce over `world` workers
+/// spread across `nodes` nodes, for an `elems`-element vector: bytes the
+/// **intra-node** fabric serializes (the largest node's reduce-to-leader
+/// plus broadcast-back, `2·(g−1)·elems·4` for node size `g` — nodes run
+/// in parallel, so the slowest node is what gets billed) and bytes the
+/// **inter-node** fabric serializes (the canonical leader-ring payload,
+/// `2·(m−1)·elems·4` for `m` nodes). Degenerate splits collapse to the
+/// flat ring exactly: `nodes == 1` puts everything intra, `nodes == w`
+/// everything inter, both totalling `2·(w−1)·elems·4`.
+pub fn two_level_split(world: usize, nodes: usize, elems: usize) -> (u64, u64) {
+    let w = world.max(1);
+    if w == 1 {
+        return (0, 0);
+    }
+    let m = nodes.clamp(1, w);
+    let g = w.div_ceil(m);
+    let intra = (2 * (g - 1) * elems * 4) as u64;
+    let inter = (2 * (m - 1) * elems * 4) as u64;
+    (intra, inter)
+}
+
 /// Which allreduce implementation combines worker gradients.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum CollectiveKind {
@@ -75,14 +109,24 @@ pub enum CollectiveKind {
     Ring,
     /// Scoped-thread chunked reduction.
     Parallel,
+    /// Hierarchical two-level reduce: parallel intra-node, ring across
+    /// node leaders (`nodes` nodes, workers split evenly across them).
+    TwoLevel {
+        /// Number of nodes the fleet is spread over (clamped to the
+        /// world at reduce time; 1 degenerates to a flat single fabric).
+        nodes: usize,
+    },
 }
 
 impl CollectiveKind {
-    /// Parse the config/CLI spelling (`ring` | `parallel`).
+    /// Parse the config/CLI spelling (`ring` | `parallel` | `two-level`).
+    /// `two-level` defaults to 2 nodes; the `nodes` knob (config key /
+    /// `--nodes`) overrides it after parsing.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "ring" => Some(Self::Ring),
             "parallel" => Some(Self::Parallel),
+            "two-level" | "two_level" => Some(Self::TwoLevel { nodes: 2 }),
             _ => None,
         }
     }
@@ -91,6 +135,7 @@ impl CollectiveKind {
         match self {
             Self::Ring => "ring",
             Self::Parallel => "parallel",
+            Self::TwoLevel { .. } => "two-level",
         }
     }
 
@@ -100,6 +145,7 @@ impl CollectiveKind {
         match self {
             Self::Ring => Box::new(RingCollective),
             Self::Parallel => Box::new(ParallelCollective::default()),
+            Self::TwoLevel { nodes } => Box::new(TwoLevelCollective::new(nodes)),
         }
     }
 }
@@ -262,35 +308,124 @@ impl Collective for ParallelCollective {
         lo: usize,
         hi: usize,
     ) -> CollectiveStats {
-        let w = shards.len();
-        assert!(w > 0, "need at least one worker");
-        if w == 1 {
-            return CollectiveStats::default();
+        if ordered_worker_mean_range(shards, lo, hi, self.max_threads) {
+            whole_vector_stats(shards.len(), hi - lo)
+        } else {
+            CollectiveStats::default()
         }
-        let n = shards[0].len();
-        assert!(shards.iter().all(|s| s.len() == n), "shards must be congruent");
-        assert!(lo <= hi && hi <= n, "range {lo}..{hi} out of bounds for {n}");
-        let (first, rest) = shards.split_first_mut().expect("w > 1");
-        let rest: &[Vec<f32>] = rest;
-        let span = hi - lo;
-        // at least 64k elements per chunk to amortize thread spawn
-        // (chunk floor of 1 keeps chunks_mut happy on empty ranges)
-        let threads = (span / 65_536).clamp(1, self.max_threads.max(1));
-        let chunk = span.div_ceil(threads).max(1);
-        std::thread::scope(|scope| {
-            for (ci, out_chunk) in first[lo..hi].chunks_mut(chunk).enumerate() {
-                let clo = lo + ci * chunk;
-                scope.spawn(move || {
-                    let chi = clo + out_chunk.len();
-                    for s in rest {
-                        crate::simd::sum_into(out_chunk, &s[clo..chi]);
-                    }
-                    crate::simd::scale(out_chunk, 1.0 / w as f32);
-                });
-            }
-            // scope joins all reduction threads here (panics propagate)
-        });
-        whole_vector_stats(w, span)
+    }
+}
+
+/// The ordered per-element worker mean `((s₀+s₁)+…)·W⁻¹` over the range
+/// `lo..hi`, thread-chunked across elements — the shared numerical core
+/// of [`ParallelCollective`] and [`TwoLevelCollective`] (which differ
+/// only in the wire schedule their stats account). Returns `false` when
+/// a single shard made the reduce a communication-free no-op.
+fn ordered_worker_mean_range(
+    shards: &mut [Vec<f32>],
+    lo: usize,
+    hi: usize,
+    max_threads: usize,
+) -> bool {
+    let w = shards.len();
+    assert!(w > 0, "need at least one worker");
+    if w == 1 {
+        return false;
+    }
+    let n = shards[0].len();
+    assert!(shards.iter().all(|s| s.len() == n), "shards must be congruent");
+    assert!(lo <= hi && hi <= n, "range {lo}..{hi} out of bounds for {n}");
+    let (first, rest) = shards.split_first_mut().expect("w > 1");
+    let rest: &[Vec<f32>] = rest;
+    let span = hi - lo;
+    // at least 64k elements per chunk to amortize thread spawn
+    // (chunk floor of 1 keeps chunks_mut happy on empty ranges)
+    let threads = (span / 65_536).clamp(1, max_threads.max(1));
+    let chunk = span.div_ceil(threads).max(1);
+    std::thread::scope(|scope| {
+        for (ci, out_chunk) in first[lo..hi].chunks_mut(chunk).enumerate() {
+            let clo = lo + ci * chunk;
+            scope.spawn(move || {
+                let chi = clo + out_chunk.len();
+                for s in rest {
+                    crate::simd::sum_into(out_chunk, &s[clo..chi]);
+                }
+                crate::simd::scale(out_chunk, 1.0 / w as f32);
+            });
+        }
+        // scope joins all reduction threads here (panics propagate)
+    });
+    true
+}
+
+/// Hierarchical two-level implementation of [`Collective`] (DESIGN.md
+/// §13): the wire schedule is reduce-to-leader within each node (all
+/// nodes in parallel on their intra-node fabrics), a ring allreduce
+/// across the node leaders (inter-node fabric), then broadcast back down
+/// — what real multi-node fleets run when the intra-node interconnect is
+/// an order of magnitude faster than the spine.
+///
+/// **Numerics:** identical to [`ParallelCollective`] — the ordered
+/// per-element worker sum — so the trajectory is bit-identical for any
+/// `(nodes, workers-per-node)` split, any thread count, and any bucket
+/// size (the range contract holds for the same reason). Only
+/// [`CollectiveStats`] change: they account the hierarchical schedule's
+/// billable payloads ([`two_level_split`]), which the wall-clock model
+/// prices against split intra/inter bandwidths
+/// ([`crate::metrics::WallClockModel::step_time_two_level`]). This is
+/// the same substitution precedent the parallel collective set by
+/// accounting the canonical ring payload it replaces.
+#[derive(Debug, Clone, Copy)]
+pub struct TwoLevelCollective {
+    /// Nodes the fleet is spread over (clamped to the world per call).
+    pub nodes: usize,
+    /// Cap on reduction threads (chunks of ≥64k elements each).
+    pub max_threads: usize,
+}
+
+impl TwoLevelCollective {
+    pub fn new(nodes: usize) -> Self {
+        Self { nodes: nodes.max(1), max_threads: 8 }
+    }
+
+    /// Stats of one two-level reduce over `w` shards spanning `span`
+    /// elements: [`two_level_split`]'s billable bytes over
+    /// `2(g−1) + 2(m−1)` phases (intra reduce+broadcast of the largest
+    /// node, plus the leader ring).
+    fn stats(&self, w: usize, span: usize) -> CollectiveStats {
+        let m = self.nodes.clamp(1, w);
+        let g = w.div_ceil(m);
+        let (intra, inter) = two_level_split(w, self.nodes, span);
+        CollectiveStats {
+            bytes_moved: intra + inter,
+            phases: (2 * (g - 1) + 2 * (m - 1)) as u32,
+            buckets: 1,
+            tail_bytes: intra + inter,
+        }
+    }
+}
+
+impl Collective for TwoLevelCollective {
+    fn name(&self) -> &'static str {
+        "two-level"
+    }
+
+    fn allreduce_mean(&self, shards: &mut [Vec<f32>]) -> CollectiveStats {
+        let n = shards.first().map(|s| s.len()).unwrap_or(0);
+        self.allreduce_mean_range(shards, 0, n)
+    }
+
+    fn allreduce_mean_range(
+        &self,
+        shards: &mut [Vec<f32>],
+        lo: usize,
+        hi: usize,
+    ) -> CollectiveStats {
+        if ordered_worker_mean_range(shards, lo, hi, self.max_threads) {
+            self.stats(shards.len(), hi - lo)
+        } else {
+            CollectiveStats::default()
+        }
     }
 }
 
@@ -574,10 +709,15 @@ mod tests {
     #[test]
     fn bucketed_reduce_is_bit_identical_to_whole_vector() {
         // the §10 contract: any bucket size reproduces the unbucketed
-        // reduce to the bit — mean AND sqnorm tap — for both collectives,
+        // reduce to the bit — mean AND sqnorm tap — for every collective,
         // including bucket sizes that don't divide n, exceed n, or
         // degenerate to one element per bucket.
-        for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
+        for kind in [
+            CollectiveKind::Ring,
+            CollectiveKind::Parallel,
+            CollectiveKind::TwoLevel { nodes: 2 },
+            CollectiveKind::TwoLevel { nodes: 3 },
+        ] {
             let coll = kind.build();
             for &(w, n) in &[(2usize, 64usize), (3, 100), (4, 128), (5, 8191), (7, 1000)] {
                 let s = shards(w, n);
@@ -634,7 +774,11 @@ mod tests {
         // single worker: no communication at all
         let mut one = shards(1, 16);
         let mut norms = Vec::new();
-        for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
+        for kind in [
+            CollectiveKind::Ring,
+            CollectiveKind::Parallel,
+            CollectiveKind::TwoLevel { nodes: 2 },
+        ] {
             let stats = kind.build().allreduce_mean_bucketed(&mut one, 4, &mut norms);
             assert_eq!(stats, CollectiveStats::default(), "{kind:?}");
             assert_eq!(norms.len(), 1, "{kind:?}: tap still reads the lone shard");
@@ -667,7 +811,11 @@ mod tests {
         // chunks intersect a range as zero-width — including clo > chi,
         // not just clo == chi. Every such shape must stay in bounds,
         // reduce to the exact mean, and leave out-of-range data alone.
-        for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
+        for kind in [
+            CollectiveKind::Ring,
+            CollectiveKind::Parallel,
+            CollectiveKind::TwoLevel { nodes: 3 },
+        ] {
             let coll = kind.build();
             for &(w, n) in &[(7usize, 3usize), (5, 4), (4, 1), (3, 2), (8, 8)] {
                 let s = shards(w, n);
@@ -699,7 +847,97 @@ mod tests {
     fn kind_parses_config_spellings() {
         assert_eq!(CollectiveKind::parse("ring"), Some(CollectiveKind::Ring));
         assert_eq!(CollectiveKind::parse("parallel"), Some(CollectiveKind::Parallel));
+        assert_eq!(
+            CollectiveKind::parse("two-level"),
+            Some(CollectiveKind::TwoLevel { nodes: 2 })
+        );
+        assert_eq!(
+            CollectiveKind::parse("two_level"),
+            Some(CollectiveKind::TwoLevel { nodes: 2 })
+        );
         assert_eq!(CollectiveKind::parse("bogus"), None);
         assert_eq!(CollectiveKind::default(), CollectiveKind::Ring);
+        assert_eq!(CollectiveKind::TwoLevel { nodes: 4 }.name(), "two-level");
+    }
+
+    #[test]
+    fn two_level_split_degenerates_to_the_flat_ring() {
+        let n = 1000usize;
+        for w in [2usize, 3, 4, 8, 17] {
+            let flat = whole_vector_stats(w, n).bytes_moved;
+            // one node: everything intra, exactly the flat ring payload
+            let (intra, inter) = two_level_split(w, 1, n);
+            assert_eq!((intra, inter), (flat, 0), "w={w} nodes=1");
+            // one worker per node: everything inter, same total
+            let (intra, inter) = two_level_split(w, w, n);
+            assert_eq!((intra, inter), (0, flat), "w={w} nodes=w");
+            // a real hierarchy serializes strictly fewer billable bytes
+            for nodes in 2..w {
+                let (intra, inter) = two_level_split(w, nodes, n);
+                assert!(intra > 0 && inter > 0, "w={w} nodes={nodes}");
+                assert!(intra + inter <= flat, "w={w} nodes={nodes}");
+            }
+            // nodes beyond the world clamp to one worker per node
+            assert_eq!(two_level_split(w, 10 * w, n), two_level_split(w, w, n));
+        }
+        // single worker: nothing moves
+        assert_eq!(two_level_split(1, 4, n), (0, 0));
+    }
+
+    #[test]
+    fn two_level_mean_is_bit_identical_to_parallel_on_any_grid() {
+        // the §13 numerics contract: the hierarchical schedule is an
+        // accounting overlay — the reduced mean (and the pre-reduce
+        // sqnorm tap) is bit-identical to the ordered worker sum the
+        // parallel collective computes, for every (nodes × workers)
+        // split, and the tap is bit-identical across all three kinds.
+        let par = CollectiveKind::Parallel.build();
+        let ring = CollectiveKind::Ring.build();
+        for &(w, n) in &[(2usize, 64usize), (3, 100), (4, 128), (6, 1000), (8, 8191)] {
+            let s = shards(w, n);
+            let mut want = s.clone();
+            let mut want_norms = Vec::new();
+            par.allreduce_mean_with_sqnorms(&mut want, &mut want_norms);
+            let mut ring_norms = Vec::new();
+            ring.allreduce_mean_with_sqnorms(&mut s.clone(), &mut ring_norms);
+            for nodes in 1..=w + 1 {
+                let coll = CollectiveKind::TwoLevel { nodes }.build();
+                assert_eq!(coll.name(), "two-level");
+                let mut got = s.clone();
+                let mut norms = Vec::new();
+                let stats = coll.allreduce_mean_with_sqnorms(&mut got, &mut norms);
+                assert_eq!(
+                    got[0], want[0],
+                    "w={w} n={n} nodes={nodes}: mean must be bit-identical to parallel"
+                );
+                assert_eq!(norms, want_norms, "w={w} n={n} nodes={nodes}: tap vs parallel");
+                assert_eq!(norms, ring_norms, "w={w} n={n} nodes={nodes}: tap vs ring");
+                let (intra, inter) = two_level_split(w, nodes, n);
+                assert_eq!(stats.bytes_moved, intra + inter, "w={w} n={n} nodes={nodes}");
+            }
+        }
+    }
+
+    #[test]
+    fn two_level_stats_account_the_hierarchical_schedule() {
+        // 8 workers over 4 nodes of 2: intra = reduce+broadcast within a
+        // 2-worker node (2 phases), inter = the 4-leader ring (6 phases).
+        let coll = TwoLevelCollective::new(4);
+        let mut s = shards(8, 1000);
+        let stats = coll.allreduce_mean(&mut s);
+        assert_eq!(stats.phases, 2 * (2 - 1) + 2 * (4 - 1));
+        let (intra, inter) = two_level_split(8, 4, 1000);
+        assert_eq!(intra, 2 * 1000 * 4);
+        assert_eq!(inter, 2 * 3 * 1000 * 4);
+        assert_eq!(stats.bytes_moved, intra + inter);
+        assert_eq!(stats.buckets, 1);
+        assert_eq!(stats.tail_bytes, stats.bytes_moved);
+        // degenerate single-node accounting matches the flat ring's
+        let mut s = shards(4, 128);
+        let one = TwoLevelCollective::new(1).allreduce_mean(&mut s);
+        let mut r = shards(4, 128);
+        let flat = ring_allreduce_mean(&mut r);
+        assert_eq!(one.bytes_moved, flat.bytes_moved);
+        assert_eq!(one.phases, flat.phases);
     }
 }

@@ -48,6 +48,24 @@ pub struct ExecSpec {
     /// microbatches stay constant (capped at its `max_world`). World
     /// transitions surface as reshard events in the coordinator.
     pub elastic: WorldPolicy,
+    /// Straggler probability of the modeled fleet (DESIGN.md §13): each
+    /// worker straggles on each step with this probability, drawn
+    /// deterministically from `(seed, step, worker)`
+    /// ([`crate::metrics::StragglerModel`]), and every wave is billed at
+    /// its slowest participant. `0.0` (default) is the homogeneous
+    /// fleet — the wall-clock charge is bit-identical to the
+    /// pre-straggler model. Pure wall-clock: never touches gradients,
+    /// schedules, or the trajectory identity.
+    pub stragglers: f64,
+    /// Intra-node bandwidth (bytes/s) for pricing the two-level
+    /// collective's NVLink-class first hop. Only meaningful with
+    /// `collective = "two-level"`; `0.0` (default) prices the two-level
+    /// payload against the flat `comm_bytes_per_sec` like any other
+    /// collective. Set together with [`ExecSpec::inter_bw`].
+    pub intra_bw: f64,
+    /// Inter-node bandwidth (bytes/s) for the two-level collective's
+    /// leader ring. See [`ExecSpec::intra_bw`].
+    pub inter_bw: f64,
 }
 
 impl Default for ExecSpec {
@@ -61,6 +79,9 @@ impl Default for ExecSpec {
             // datacenter-order granularity on real ones.
             bucket_bytes: 1 << 20,
             elastic: WorldPolicy::Fixed,
+            stragglers: 0.0,
+            intra_bw: 0.0,
+            inter_bw: 0.0,
         }
     }
 }
@@ -348,8 +369,17 @@ impl TrainConfig {
     /// different shard partition or collective reduces the gradient in a
     /// different floating-point order).
     pub fn exec_fingerprint(&self) -> String {
+        // `coll=` names the kind; the two-level hierarchy's node count
+        // and the heterogeneity/pricing knobs (all pure wall-clock) get
+        // their own segments — floats as IEEE-754 bit patterns, like the
+        // trajectory identity renders its own.
+        let nodes = match self.exec.collective {
+            CollectiveKind::TwoLevel { nodes } => nodes,
+            _ => 0,
+        };
         format!(
-            "w={}|coll={}|threads={}|pin={}|overlap={}|bucket={}|elastic={}",
+            "w={}|coll={}|threads={}|pin={}|overlap={}|bucket={}|elastic={}\
+             |strag={:016x}|nodes={nodes}|ibw={:016x}|xbw={:016x}",
             self.world_size,
             self.exec.collective.name(),
             self.exec.worker_threads,
@@ -357,6 +387,9 @@ impl TrainConfig {
             self.exec.overlap,
             self.exec.bucket_bytes,
             self.exec.elastic.label(),
+            self.exec.stragglers.to_bits(),
+            self.exec.intra_bw.to_bits(),
+            self.exec.inter_bw.to_bits(),
         )
     }
 
@@ -431,14 +464,50 @@ impl TrainConfig {
 
 fn parse_exec(v: &Value) -> Result<ExecSpec> {
     let d = ExecSpec::default();
-    let collective = match v.get("collective") {
+    let mut collective = match v.get("collective") {
         Some(k) => {
             let s = k.as_str()?;
             CollectiveKind::parse(s)
-                .ok_or_else(|| anyhow!("unknown collective `{s}` (ring|parallel)"))?
+                .ok_or_else(|| anyhow!("unknown collective `{s}` (ring|parallel|two-level)"))?
         }
         None => d.collective,
     };
+    // node count for the two-level hierarchy: `nodes` overrides the
+    // parse default. Anywhere else it would be silently dead config —
+    // refused, like `max_world` without a ramp-coupled policy below.
+    if let Some(n) = v.get("nodes") {
+        let n = n.as_u64()? as usize;
+        if n == 0 {
+            bail!("exec.nodes must be positive (the hierarchy needs at least one node)");
+        }
+        match &mut collective {
+            CollectiveKind::TwoLevel { nodes } => *nodes = n,
+            _ => bail!("exec.nodes only applies with exec.collective = \"two-level\""),
+        }
+    }
+    // split-fabric bandwidths price the two-level schedule; either one
+    // alone (or without the two-level collective) would never be read
+    let intra_bw = v.f64_or("intra_bw", d.intra_bw)?;
+    let inter_bw = v.f64_or("inter_bw", d.inter_bw)?;
+    if intra_bw < 0.0 || inter_bw < 0.0 {
+        bail!("exec.intra_bw/inter_bw must be non-negative bytes/s");
+    }
+    if (intra_bw > 0.0) != (inter_bw > 0.0) {
+        bail!(
+            "exec.intra_bw and exec.inter_bw must be set together — the two-level \
+             pricing needs both fabrics (leave both unset to charge the flat bandwidth)"
+        );
+    }
+    if intra_bw > 0.0 && !matches!(collective, CollectiveKind::TwoLevel { .. }) {
+        bail!(
+            "exec.intra_bw/inter_bw only apply with exec.collective = \"two-level\" \
+             (flat collectives are priced against wallclock.comm_bytes_per_sec)"
+        );
+    }
+    let stragglers = v.f64_or("stragglers", d.stragglers)?;
+    if !(0.0..=1.0).contains(&stragglers) {
+        bail!("exec.stragglers is a probability — must be in [0, 1] (got {stragglers})");
+    }
     let pin_order = match v.get("pin_order") {
         Some(p) => p.as_bool()?,
         None => d.pin_order,
@@ -479,6 +548,9 @@ fn parse_exec(v: &Value) -> Result<ExecSpec> {
         overlap,
         bucket_bytes,
         elastic,
+        stragglers,
+        intra_bw,
+        inter_bw,
     })
 }
 
@@ -587,6 +659,9 @@ mod tests {
                 overlap: true,
                 bucket_bytes: 65_536,
                 elastic: WorldPolicy::RampCoupled { max_world: 16 },
+                stragglers: 0.0,
+                intra_bw: 0.0,
+                inter_bw: 0.0,
             }
         );
         let d = TrainConfig::from_json("{}").unwrap();
@@ -597,6 +672,8 @@ mod tests {
         assert!(!d.exec.overlap, "overlap is opt-in");
         assert_eq!(d.exec.bucket_bytes, 1 << 20);
         assert_eq!(d.exec.elastic, WorldPolicy::Fixed, "elastic scale-out is opt-in");
+        assert_eq!(d.exec.stragglers, 0.0, "the fleet is homogeneous by default");
+        assert_eq!((d.exec.intra_bw, d.exec.inter_bw), (0.0, 0.0), "flat pricing by default");
         // ramp-coupled without an explicit cap takes the 64-worker default
         let e = TrainConfig::from_json(r#"{"exec": {"elastic": "ramp-coupled"}}"#).unwrap();
         assert_eq!(e.exec.elastic, WorldPolicy::RampCoupled { max_world: 64 });
@@ -612,6 +689,47 @@ mod tests {
         assert!(TrainConfig::from_json(r#"{"exec": {"max_world": 8}}"#).is_err());
         assert!(TrainConfig::from_json(
             r#"{"exec": {"elastic": "fixed", "max_world": 8}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn heterogeneity_knobs_parse_and_refuse_dead_config() {
+        // the full two-level + straggler topology round-trips
+        let c = TrainConfig::from_json(
+            r#"{"exec": {"collective": "two-level", "nodes": 4, "stragglers": 0.1,
+                         "intra_bw": 4e11, "inter_bw": 2.5e10}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.exec.collective, CollectiveKind::TwoLevel { nodes: 4 });
+        assert_eq!(c.exec.stragglers, 0.1);
+        assert_eq!((c.exec.intra_bw, c.exec.inter_bw), (4e11, 2.5e10));
+        // nodes defaults from the kind's parse when the key is omitted
+        let d = TrainConfig::from_json(r#"{"exec": {"collective": "two_level"}}"#).unwrap();
+        assert_eq!(d.exec.collective, CollectiveKind::TwoLevel { nodes: 2 });
+        // stragglers apply to any collective — a probability in [0, 1]
+        let s = TrainConfig::from_json(r#"{"exec": {"stragglers": 1.0}}"#).unwrap();
+        assert_eq!(s.exec.stragglers, 1.0);
+        assert!(TrainConfig::from_json(r#"{"exec": {"stragglers": 1.5}}"#).is_err());
+        assert!(TrainConfig::from_json(r#"{"exec": {"stragglers": -0.1}}"#).is_err());
+        // hierarchy knobs without the two-level collective are dead
+        // config — refused, like max_world without ramp-coupled
+        assert!(TrainConfig::from_json(r#"{"exec": {"nodes": 4}}"#).is_err());
+        assert!(TrainConfig::from_json(
+            r#"{"exec": {"collective": "ring", "intra_bw": 4e11, "inter_bw": 2.5e10}}"#
+        )
+        .is_err());
+        // …as is half a fabric pair, an empty hierarchy, or a negative bw
+        assert!(TrainConfig::from_json(
+            r#"{"exec": {"collective": "two-level", "intra_bw": 4e11}}"#
+        )
+        .is_err());
+        assert!(TrainConfig::from_json(
+            r#"{"exec": {"collective": "two-level", "nodes": 0}}"#
+        )
+        .is_err());
+        assert!(TrainConfig::from_json(
+            r#"{"exec": {"collective": "two-level", "intra_bw": -1.0, "inter_bw": 1.0}}"#
         )
         .is_err());
     }
@@ -731,6 +849,24 @@ mod tests {
         j.exec.elastic = WorldPolicy::RampCoupled { max_world: 8 };
         assert_eq!(traj, j.trajectory_identity(1_000_000));
         assert_ne!(fp, j.exec_fingerprint());
+        // the heterogeneity knobs are pure wall-clock topology: stragglers
+        // must never leak into the trajectory identity (the satellite
+        // invariant behind `prop_stragglers_are_trajectory_neutral`), and
+        // the two-level hierarchy/pricing discriminate the fingerprint —
+        // including the node count `coll=two-level` alone would hide
+        let mut k = c.clone();
+        k.exec.stragglers = 0.25;
+        assert_eq!(traj, k.trajectory_identity(1_000_000), "stragglers are not identity");
+        assert_ne!(fp, k.exec_fingerprint(), "…but the fingerprint records them");
+        let mut l = c.clone();
+        l.exec.collective = CollectiveKind::TwoLevel { nodes: 2 };
+        l.exec.intra_bw = 4e11;
+        l.exec.inter_bw = 2.5e10;
+        assert_eq!(traj, l.trajectory_identity(1_000_000));
+        assert_ne!(fp, l.exec_fingerprint());
+        let mut m = l.clone();
+        m.exec.collective = CollectiveKind::TwoLevel { nodes: 4 };
+        assert_ne!(l.exec_fingerprint(), m.exec_fingerprint(), "node count discriminates");
         // and the legacy (v2) identity is exactly trajectory + topology —
         // the pre-split string old checkpoints hashed
         assert_eq!(

@@ -30,6 +30,20 @@
 //! resharded ([`crate::metrics::GnsEstimator::reshard`]) and the step
 //! engine resizes its worker/buffer/pool state
 //! ([`super::StepEngine::resize`]).
+//!
+//! **Preemption / scale-in** (DESIGN.md §13): when workers die mid-run
+//! the surviving fleet is a *capacity* the policy's desired world is
+//! clamped to — [`effective_world_capped`]. The coordinator tracks the
+//! capacity ([`super::Trainer::preempt`]) and the next step's world drop
+//! flows through the **same** reshard-event edge as growth: GNS EMAs are
+//! carried across by the world-invariant
+//! [`crate::metrics::GnsEstimator::reshard`], surplus pool threads are
+//! joined via [`super::StepEngine::resize_checked`] (which refuses,
+//! loudly, scale-ins that would under-shard an adaptive run), and the
+//! event is logged like any other reshard. The trajectory does not care:
+//! `lr`/`batch`/`cuts`/`ce` stay bit-identical across the kill, per the
+//! §11 continuity table — `tests/preemption_storm.rs` kills a worker at
+//! every step offset to pin exactly that.
 
 /// How the effective data-parallel world follows the batch ramp.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -99,6 +113,27 @@ pub fn effective_world(
     }
 }
 
+/// [`effective_world`] under a surviving-fleet **capacity** (DESIGN.md
+/// §13): the world the policy wants, clamped to the workers that still
+/// exist. `capacity` is what preemption shrinks — `usize::MAX` (or
+/// anything ≥ the policy's cap) means a healthy fleet and reproduces
+/// [`effective_world`] exactly; a capacity of 0 is floored to one
+/// worker (the coordinator's own guards decide whether one worker is
+/// *enough* — this stays a total, pure function like its parent).
+///
+/// The clamp applies to [`WorldPolicy::Fixed`] too: a fixed-world run
+/// that loses a worker reshards down rather than deadlocking on a fleet
+/// it no longer has.
+pub fn effective_world_capped(
+    policy: WorldPolicy,
+    base_world: usize,
+    base_micro: u64,
+    n_micro: u64,
+    capacity: usize,
+) -> usize {
+    effective_world(policy, base_world, base_micro, n_micro).min(capacity.max(1))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,6 +190,27 @@ mod tests {
         let p = WorldPolicy::RampCoupled { max_world: 64 };
         assert_eq!(effective_world(p, 2, 4, 6), 2);
         assert_eq!(effective_world(p, 2, 4, 9), 4);
+    }
+
+    #[test]
+    fn capacity_caps_both_policies_and_a_full_fleet_changes_nothing() {
+        let ramp = WorldPolicy::RampCoupled { max_world: 64 };
+        // healthy fleet: the capped world IS the policy world
+        for n_micro in [4u64, 8, 16, 256] {
+            assert_eq!(
+                effective_world_capped(ramp, 2, 4, n_micro, usize::MAX),
+                effective_world(ramp, 2, 4, n_micro)
+            );
+        }
+        // a preempted fleet clamps the ramp's desired growth…
+        assert_eq!(effective_world(ramp, 2, 4, 32), 16);
+        assert_eq!(effective_world_capped(ramp, 2, 4, 32, 3), 3, "scale-in to survivors");
+        // …and even scales *in* below the configured base world
+        assert_eq!(effective_world_capped(ramp, 4, 4, 4, 2), 2);
+        assert_eq!(effective_world_capped(WorldPolicy::Fixed, 4, 4, 8, 3), 3);
+        // capacity 0 is floored: the pure function stays total, the
+        // coordinator's guards own the "is one worker enough" question
+        assert_eq!(effective_world_capped(WorldPolicy::Fixed, 4, 4, 8, 0), 1);
     }
 
     #[test]

@@ -49,9 +49,10 @@ pub use checkpoint::{fnv1a64, Checkpoint, SPEC_HASH_UNKNOWN};
 pub use elastic::WorldPolicy;
 pub use worker::{GradSource, Microbatch, MicroStats, StepEngine, StepOutput, Worker};
 
+use crate::collective::{CollectiveKind, CollectiveStats};
 use crate::config::{OptimizerKind, ScheduleSpec, TrainConfig};
 use crate::data::{Corpus, Loader};
-use crate::metrics::{GnsEstimator, RunLog, StepRecord, WallClockModel};
+use crate::metrics::{GnsEstimator, RunLog, StepRecord, StragglerModel, WallClockModel};
 use crate::runtime::ModelRuntime;
 use crate::schedule::Schedule;
 use anyhow::{bail, ensure, Context, Result};
@@ -160,6 +161,14 @@ pub struct Trainer {
     /// step (or when resuming a pre-v3 checkpoint that predates the
     /// recorded world).
     last_world: Option<usize>,
+    /// Surviving-fleet **capacity** (DESIGN.md §13): `usize::MAX` while
+    /// the fleet is healthy. [`Trainer::preempt`] shrinks it when
+    /// workers die mid-run; the next step's effective world is clamped
+    /// to it ([`elastic::effective_world_capped`]) and the drop flows
+    /// through the same reshard-event edge as ramp growth — GNS EMAs
+    /// carried by the world-invariant reshard, surplus pool threads
+    /// joined, the transition logged.
+    fleet_capacity: usize,
 }
 
 impl Trainer {
@@ -232,7 +241,53 @@ impl Trainer {
             legacy_hash,
             base_micro,
             last_world: None,
+            fleet_capacity: usize::MAX,
         })
+    }
+
+    /// Report `lost` workers preempted (DESIGN.md §13): the surviving
+    /// fleet becomes a **capacity** the next step's effective world is
+    /// clamped to, so the scale-*in* reshard flows through the standard
+    /// reshard-event edge in [`Trainer::train_step`] — nothing else in
+    /// the loop changes, and the optimizer trajectory does not care
+    /// (world is execution topology, outside the §11 identity split).
+    ///
+    /// Fails loudly — before touching any state — when the survivors
+    /// cannot sustain the run: a dead fleet has no one to take the next
+    /// step, and an adaptive schedule needs ≥ 2 workers for the GNS
+    /// shard contrast (the same invariant
+    /// [`StepEngine::resize_checked`] guards at the engine layer).
+    pub fn preempt(&mut self, lost: usize) -> Result<()> {
+        let current = self
+            .fleet_capacity
+            .min(self.last_world.unwrap_or_else(|| self.cfg.world_size.max(1)));
+        let survivors = current.saturating_sub(lost);
+        ensure!(
+            survivors >= 1,
+            "preemption killed the whole fleet ({lost} worker(s) lost of {current}): \
+             no survivor can take the next step — restore capacity before resuming"
+        );
+        if matches!(self.cfg.schedule, ScheduleSpec::Adaptive { .. }) {
+            ensure!(
+                survivors >= 2,
+                "preemption left {survivors} worker(s) ({lost} lost of {current}), but the \
+                 adaptive schedule needs ≥ 2 for the GNS estimator's small-/large-batch \
+                 contrast — keep two survivors or fall back to a fixed schedule"
+            );
+        }
+        self.fleet_capacity = survivors;
+        eprintln!("preemption: {lost} worker(s) lost, fleet capacity now {survivors}");
+        Ok(())
+    }
+
+    /// Lift the preemption clamp after the fleet heals: the policy's
+    /// full world applies again from the next step, which scales back
+    /// *out* through the same reshard edge the scale-in used.
+    pub fn restore_capacity(&mut self) {
+        if self.fleet_capacity != usize::MAX {
+            eprintln!("preemption: fleet healed, capacity restored");
+            self.fleet_capacity = usize::MAX;
+        }
     }
 
     /// Fresh state (params from the `init` executable).
@@ -267,15 +322,18 @@ impl Trainer {
         // step's effective world from the planned batch — a pure function
         // of the (restored) schedule state, so resume re-derives it
         // identically. A transition against the previous step's world
-        // (ramp-coupled growth, or an operator resuming onto a different
-        // fleet) is a reshard event: the GNS estimator carries its EMAs
-        // across the new shard geometry explicitly and the engine frees
-        // resources the smaller side no longer needs.
-        let world = elastic::effective_world(
+        // (ramp-coupled growth, an operator resuming onto a different
+        // fleet, or a preemption clamping the fleet capacity) is a
+        // reshard event: the GNS estimator carries its EMAs across the
+        // new shard geometry explicitly and the engine frees resources
+        // the smaller side no longer needs — scale-out and scale-in
+        // share this one edge.
+        let world = elastic::effective_world_capped(
             self.cfg.exec.elastic,
             self.cfg.world_size.max(1),
             self.base_micro,
             n_micro,
+            self.fleet_capacity,
         );
         if let Some(prev) = self.last_world {
             if prev != world {
@@ -283,7 +341,10 @@ impl Trainer {
                     .gns
                     .reshard(prev, world)
                     .with_context(|| format!("resharding GNS estimator {prev} → {world}"))?;
-                self.engine.resize(world);
+                let gns_live = matches!(self.cfg.schedule, ScheduleSpec::Adaptive { .. });
+                self.engine
+                    .resize_checked(world, n_micro as usize, gns_live)
+                    .with_context(|| format!("resharding step engine {prev} → {world}"))?;
                 eprintln!(
                     "reshard: world {prev} → {world} at step {} \
                      ({n_micro} microbatches, {} per worker)",
@@ -390,23 +451,63 @@ impl Trainer {
         // pipelines the bucketed reduce behind each wave's compute —
         // every (elastic × overlap) combination charges exactly what the
         // engine actually ran, so the CSV's `comm_buckets` and the
-        // modeled time never contradict each other.
-        state.serial_time += match (self.cfg.exec.elastic, self.cfg.exec.overlap) {
-            (WorldPolicy::RampCoupled { .. }, true) => self.wall.step_time_elastic_overlapped(
-                batch_tokens,
-                out.world,
-                self.cfg.world_size.max(1),
-                &out.comm,
-            ),
-            (WorldPolicy::RampCoupled { .. }, false) => self.wall.step_time_elastic(
-                batch_tokens,
-                out.world,
-                self.cfg.world_size.max(1),
-                out.comm.bytes_moved,
-            ),
-            (WorldPolicy::Fixed, true) => self.wall.step_time_overlapped(batch_tokens, &out.comm),
-            (WorldPolicy::Fixed, false) => {
-                self.wall.step_time_comm(batch_tokens, out.comm.bytes_moved)
+        // modeled time never contradict each other. A two-level
+        // collective re-prices its payload against the split intra/inter
+        // bandwidths first (`priced_comm`), and an active straggler
+        // distribution swaps in the hetero arms that bill every wave at
+        // its slowest participant — both pure wall-clock concerns; the
+        // logged `comm_bytes` below stays the raw wire measurement.
+        let comm = self.priced_comm(out.world, &out.comm);
+        let strag = StragglerModel::new(self.cfg.seed, self.cfg.exec.stragglers);
+        let base_world = self.cfg.world_size.max(1);
+        state.serial_time += if strag.active() {
+            match (self.cfg.exec.elastic, self.cfg.exec.overlap) {
+                (WorldPolicy::RampCoupled { .. }, true) => self.wall.step_time_hetero_elastic_overlapped(
+                    batch_tokens,
+                    out.world,
+                    base_world,
+                    &comm,
+                    &strag,
+                    state.step,
+                ),
+                (WorldPolicy::RampCoupled { .. }, false) => self.wall.step_time_hetero_elastic(
+                    batch_tokens,
+                    out.world,
+                    base_world,
+                    comm.bytes_moved,
+                    &strag,
+                    state.step,
+                ),
+                (WorldPolicy::Fixed, true) => self.wall.step_time_hetero_overlapped(
+                    batch_tokens,
+                    &comm,
+                    &strag,
+                    state.step,
+                    out.world,
+                ),
+                (WorldPolicy::Fixed, false) => self.wall.step_time_hetero(
+                    batch_tokens,
+                    comm.bytes_moved,
+                    &strag,
+                    state.step,
+                    out.world,
+                ),
+            }
+        } else {
+            match (self.cfg.exec.elastic, self.cfg.exec.overlap) {
+                (WorldPolicy::RampCoupled { .. }, true) => self
+                    .wall
+                    .step_time_elastic_overlapped(batch_tokens, out.world, base_world, &comm),
+                (WorldPolicy::RampCoupled { .. }, false) => self.wall.step_time_elastic(
+                    batch_tokens,
+                    out.world,
+                    base_world,
+                    comm.bytes_moved,
+                ),
+                (WorldPolicy::Fixed, true) => self.wall.step_time_overlapped(batch_tokens, &comm),
+                (WorldPolicy::Fixed, false) => {
+                    self.wall.step_time_comm(batch_tokens, comm.bytes_moved)
+                }
             }
         };
         // feed the smoothed GNS back at the *end-of-step* token count —
@@ -472,6 +573,39 @@ impl Trainer {
             log.write_csv(path)?;
         }
         Ok(log)
+    }
+
+    /// The step's collective stats as the wall-clock charge arms should
+    /// price them. Flat-fabric collectives (ring, parallel) pass through
+    /// untouched. A two-level collective with split bandwidths
+    /// configured (`exec.intra_bw`/`exec.inter_bw` > 0) has its
+    /// hierarchical schedule priced per fabric
+    /// ([`WallClockModel::two_level_comm_seconds`]) and converted back
+    /// into *equivalent flat-fabric bytes* — `eq_bytes / comm_bytes_per_sec
+    /// == intra/intra_bw + inter/inter_bw` — so every downstream charge
+    /// arm (serialized, overlapped, elastic, hetero) keeps its
+    /// one-bandwidth shape; bucketed stats scale `tail_bytes`
+    /// proportionally so the overlap pipeline keeps its geometry. With
+    /// the split bandwidths unset the two-level payload is charged flat,
+    /// like any other collective. Pricing never rewrites the logged
+    /// measurement — `StepRecord::comm_bytes` reports the raw stats.
+    fn priced_comm(&self, world: usize, comm: &CollectiveStats) -> CollectiveStats {
+        let CollectiveKind::TwoLevel { nodes } = self.cfg.exec.collective else {
+            return *comm;
+        };
+        let (intra_bw, inter_bw) = (self.cfg.exec.intra_bw, self.cfg.exec.inter_bw);
+        if intra_bw <= 0.0 || inter_bw <= 0.0 || comm.bytes_moved == 0 {
+            return *comm;
+        }
+        let elems = self.rt.manifest.total_elements();
+        let sec = self.wall.two_level_comm_seconds(world, nodes, elems, intra_bw, inter_bw);
+        let eq_bytes = (sec * self.wall.comm_bytes_per_sec).round().max(0.0);
+        let ratio = eq_bytes / comm.bytes_moved as f64;
+        CollectiveStats {
+            bytes_moved: eq_bytes as u64,
+            tail_bytes: (comm.tail_bytes as f64 * ratio).round() as u64,
+            ..*comm
+        }
     }
 
     fn split_leaves(&self, flat: &[f32]) -> Result<Vec<Vec<f32>>> {

@@ -513,6 +513,34 @@ impl StepEngine {
         let n_chunks = world.div_ceil(per);
         self.pool.resize(n_chunks);
     }
+
+    /// [`StepEngine::resize`] behind the scale-in guard (DESIGN.md §13):
+    /// a preemption or elastic scale-in that would leave the run
+    /// under-sharded must fail **loudly** — like the PR-4 world-clamp
+    /// guard — instead of silently degrading. Refuses when the next
+    /// step's plan has fewer microbatches than the requested world
+    /// (`n_micro < world`: the execute clamp would quietly shard below
+    /// it) or when a live GNS estimator would lose its small-/large-batch
+    /// contrast (`world < 2` starves the two-point estimator, DESIGN.md
+    /// §8). The raw [`StepEngine::resize`] stays total for callers that
+    /// manage their own invariants.
+    pub fn resize_checked(&mut self, world: usize, n_micro: usize, gns_live: bool) -> Result<()> {
+        ensure!(world >= 1, "reshard to world 0: a fleet needs at least one worker");
+        ensure!(
+            n_micro >= world,
+            "reshard to world {world} under-shards the run: the step plans only {n_micro} \
+             microbatch(es), so the engine would clamp below the requested world — shrink the \
+             world further or raise the batch"
+        );
+        ensure!(
+            !gns_live || world >= 2,
+            "reshard to world {world} starves the GNS estimator: an adaptive run needs world ≥ 2 \
+             for the small-/large-batch contrast — keep at least two workers or run a fixed \
+             schedule"
+        );
+        self.resize(world);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -557,7 +585,11 @@ mod tests {
     #[test]
     fn parallel_engine_is_bit_identical_to_sequential() {
         for world in [1usize, 2, 4] {
-            for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
+            for kind in [
+                CollectiveKind::Ring,
+                CollectiveKind::Parallel,
+                CollectiveKind::TwoLevel { nodes: 2 },
+            ] {
                 let run = |threads: usize| {
                     let mut e = StepEngine::new(ExecSpec {
                         worker_threads: threads,
@@ -641,7 +673,11 @@ mod tests {
         // §10 contract at engine level: overlap on, any bucket size ⇒
         // identical (stats, sqnorms, mean grad) bits; only the comm
         // bucket accounting differs.
-        for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
+        for kind in [
+            CollectiveKind::Ring,
+            CollectiveKind::Parallel,
+            CollectiveKind::TwoLevel { nodes: 3 },
+        ] {
             let src = FakeSource { elems: 1031 };
             let mut base = StepEngine::new(ExecSpec { collective: kind, ..ExecSpec::default() });
             let out_base = base.execute(&src, 4, micros(8)).unwrap();
@@ -706,6 +742,37 @@ mod tests {
         e.resize(0);
         let out = e.execute(&src, 1, micros(2)).unwrap();
         assert_eq!(out.world, 1);
+    }
+
+    #[test]
+    fn checked_resize_refuses_undersharded_scale_in() {
+        // the §13 scale-in guard: shrinking under the microbatch plan, or
+        // under world 2 while the GNS estimator is live, must error loudly
+        // — and a refused resize must leave the engine untouched.
+        let src = FakeSource { elems: 129 };
+        let mut e = StepEngine::new(ExecSpec { worker_threads: 4, ..ExecSpec::default() });
+        e.execute(&src, 4, micros(8)).unwrap();
+
+        let err = e.resize_checked(0, 8, false).unwrap_err();
+        assert!(err.to_string().contains("world 0"), "{err}");
+        let err = e.resize_checked(6, 4, false).unwrap_err();
+        assert!(err.to_string().contains("under-shards"), "{err}");
+        let err = e.resize_checked(1, 8, true).unwrap_err();
+        assert!(err.to_string().contains("GNS"), "{err}");
+
+        // refusals left the engine exactly where it was: same bits as a
+        // fresh engine on the same plan
+        let out = e.execute(&src, 4, micros(8)).unwrap();
+        let mut fresh = StepEngine::new(ExecSpec { worker_threads: 4, ..ExecSpec::default() });
+        let want = fresh.execute(&src, 4, micros(8)).unwrap();
+        assert_eq!(out, want, "a refused resize must not perturb the engine");
+
+        // the legal scale-in path still works — and without a live GNS
+        // estimator a single-worker world is fine
+        e.resize_checked(2, 8, true).unwrap();
+        assert_eq!(e.execute(&src, 2, micros(8)).unwrap().world, 2);
+        e.resize_checked(1, 2, false).unwrap();
+        assert_eq!(e.execute(&src, 1, micros(2)).unwrap().world, 1);
     }
 
     #[test]

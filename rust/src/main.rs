@@ -3,7 +3,9 @@
 //! ```text
 //! seesaw train [--config run.json] [--model s] [--schedule seesaw] [--alpha 1.1]
 //!              [--lr 3e-3] [--batch-tokens 4096] [--total-tokens N]
-//!              [--world-size W] [--worker-threads T] [--collective ring|parallel]
+//!              [--world-size W] [--worker-threads T]
+//!              [--collective ring|parallel|two-level] [--nodes N]
+//!              [--intra-bw BYTES/S] [--inter-bw BYTES/S] [--stragglers P]
 //!              [--pin-order true|false] [--overlap true|false] [--bucket-bytes N]
 //!              [--elastic fixed|ramp-coupled] [--max-world W]
 //!              [--variant ref|pallas] [--out-csv path]
@@ -19,6 +21,14 @@
 //! `--schedule adaptive` replaces the precomputed Seesaw staircase with
 //! the GNS-driven controller (needs `--world-size ≥ 2`); `seesaw exp
 //! adaptive` runs the fixed-vs-adaptive ablation on the live LM stack.
+//!
+//! `--collective two-level` reduces hierarchically (parallel intra-node,
+//! ring across `--nodes` node leaders) — bit-identical gradients, priced
+//! against split `--intra-bw`/`--inter-bw` fabrics when both are set.
+//! `--stragglers P` makes each modeled worker straggle each step with
+//! probability P (deterministic in seed/step/worker): the wall-clock
+//! charge bills every wave at its slowest participant, the trajectory
+//! is untouched (DESIGN.md §13).
 //!
 //! `--elastic ramp-coupled` grows the effective world with the Seesaw
 //! batch ramp (per-worker microbatches stay constant, capped at
@@ -114,7 +124,42 @@ fn train(args: &Args) -> Result<()> {
     }
     if let Some(s) = args.str_opt("collective") {
         cfg.exec.collective = CollectiveKind::parse(s)
-            .ok_or_else(|| anyhow!("unknown collective `{s}` (ring|parallel)"))?;
+            .ok_or_else(|| anyhow!("unknown collective `{s}` (ring|parallel|two-level)"))?;
+    }
+    if let Some(n) = args.u64_opt("nodes")? {
+        if n == 0 {
+            bail!("--nodes must be positive (the hierarchy needs at least one node)");
+        }
+        match &mut cfg.exec.collective {
+            CollectiveKind::TwoLevel { nodes } => *nodes = n as usize,
+            // a node count on a flat collective would be silently dead —
+            // same refusal shape as --max-world without ramp-coupled
+            _ => bail!("--nodes only applies with --collective two-level"),
+        }
+    }
+    if let Some(bw) = args.f64_opt("intra-bw")? {
+        cfg.exec.intra_bw = bw;
+    }
+    if let Some(bw) = args.f64_opt("inter-bw")? {
+        cfg.exec.inter_bw = bw;
+    }
+    if cfg.exec.intra_bw < 0.0 || cfg.exec.inter_bw < 0.0 {
+        bail!("--intra-bw/--inter-bw must be non-negative bytes/s");
+    }
+    if (cfg.exec.intra_bw > 0.0) != (cfg.exec.inter_bw > 0.0) {
+        bail!(
+            "--intra-bw and --inter-bw must be set together — two-level pricing \
+             needs both fabrics (omit both to charge the flat bandwidth)"
+        );
+    }
+    if cfg.exec.intra_bw > 0.0 && !matches!(cfg.exec.collective, CollectiveKind::TwoLevel { .. }) {
+        bail!("--intra-bw/--inter-bw only apply with --collective two-level");
+    }
+    if let Some(p) = args.f64_opt("stragglers")? {
+        if !(0.0..=1.0).contains(&p) {
+            bail!("--stragglers is a probability — must be in [0, 1] (got {p})");
+        }
+        cfg.exec.stragglers = p;
     }
     cfg.exec.pin_order = args.bool_or("pin-order", cfg.exec.pin_order)?;
     cfg.exec.overlap = args.bool_or("overlap", cfg.exec.overlap)?;
@@ -168,7 +213,7 @@ fn train(args: &Args) -> Result<()> {
     }
     let mut t = Trainer::new(cfg)?;
     println!(
-        "model={} params={} budget={} tokens, schedule={:?}, world={} ({}), threads={}, collective={}{}",
+        "model={} params={} budget={} tokens, schedule={:?}, world={} ({}), threads={}, collective={}{}{}",
         t.rt.manifest.model.name,
         t.rt.manifest.param_count,
         t.total_tokens,
@@ -179,6 +224,11 @@ fn train(args: &Args) -> Result<()> {
         t.engine.collective_name(),
         if t.cfg.exec.overlap {
             format!(" (overlapped, {} B buckets)", t.cfg.exec.bucket_bytes)
+        } else {
+            String::new()
+        },
+        if t.cfg.exec.stragglers > 0.0 {
+            format!(", stragglers={}", t.cfg.exec.stragglers)
         } else {
             String::new()
         }

@@ -6,7 +6,7 @@ mod gns;
 mod wallclock;
 
 pub use gns::{GnsEstimator, GnsState};
-pub use wallclock::WallClockModel;
+pub use wallclock::{StragglerModel, WallClockModel};
 
 use std::io::Write;
 use std::path::Path;

@@ -22,8 +22,18 @@
 //!   (double-buffering: one bucket accumulating while one is in flight),
 //!   so per-wave time is the pipeline's finish — at best
 //!   `max(compute, comm)` plus the exposed non-overlappable tail bucket.
+//!
+//! **Heterogeneous fleets** (DESIGN.md §13): real clusters straggle. A
+//! [`StragglerModel`] draws a deterministic per-`(seed, step, worker)`
+//! speed factor ≥ 1, and the `step_time_hetero*` charges bill every wave
+//! at its **slowest participating worker** — a synchronous data-parallel
+//! wave (compute *and* its collective, which is gated by the slowest
+//! participant at every transfer) finishes when the last worker does.
+//! The factors live entirely on the wall-clock side: they never touch
+//! gradients, schedules, or the trajectory identity.
 
 use crate::collective::CollectiveStats;
+use crate::util::rng::Rng;
 
 /// The modeled cluster: device count/capacity, per-step latency and
 /// interconnect bandwidth (see module docs).
@@ -48,6 +58,74 @@ impl Default for WallClockModel {
         // devices are available" premise (§4.1). Bandwidth is a round
         // 100 GB/s — datacenter-interconnect order of magnitude.
         Self { devices: 64, tokens_per_device: 4096, step_latency: 1.0, comm_bytes_per_sec: 100e9 }
+    }
+}
+
+/// Deterministic straggler distribution over a heterogeneous fleet
+/// (DESIGN.md §13): worker `w` at step `s` is a straggler with
+/// probability `prob`, and a straggler's speed factor is uniform in
+/// `[1, slowdown]`. Factors are sampled from `(seed, step, worker)`
+/// through [`Rng::for_key`], so they are reproducible across runs and
+/// independent of world size, wave count, or anything else the
+/// execution layer retunes — a pure wall-clock input, never a
+/// trajectory one.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StragglerModel {
+    /// Stream seed — the run seed, so the same run sees the same fleet.
+    pub seed: u64,
+    /// Probability a given worker straggles on a given step, in [0, 1].
+    /// `0.0` is the homogeneous fleet: every factor is exactly 1.0 and
+    /// every hetero charge degrades bit-identically to its homogeneous
+    /// counterpart.
+    pub prob: f64,
+    /// Worst-case slowdown multiplier (factor is uniform in
+    /// `[1, slowdown]` when a worker straggles).
+    pub slowdown: f64,
+}
+
+impl StragglerModel {
+    /// Default worst-case slowdown: a straggler runs up to 4× slower.
+    pub const DEFAULT_SLOWDOWN: f64 = 4.0;
+
+    /// Fleet with straggler probability `prob` and the default 4×
+    /// worst-case slowdown.
+    pub fn new(seed: u64, prob: f64) -> Self {
+        Self { seed, prob, slowdown: Self::DEFAULT_SLOWDOWN }
+    }
+
+    /// The homogeneous fleet (probability 0 — every factor is 1.0).
+    pub fn off() -> Self {
+        Self::new(0, 0.0)
+    }
+
+    /// Whether any wave can straggle at all.
+    pub fn active(&self) -> bool {
+        self.prob > 0.0
+    }
+
+    /// Speed factor of `worker` at `step`: 1.0 for a healthy worker,
+    /// uniform in `[1, slowdown]` for a straggler. Deterministic in
+    /// `(seed, step, worker)` — two calls always agree.
+    pub fn speed_factor(&self, step: u64, worker: usize) -> f64 {
+        if !self.active() {
+            return 1.0;
+        }
+        // split the stream per step, then per worker, so neither index
+        // can alias the other (and `(seed, step, worker)` fully keys it)
+        let step_seed = Rng::for_key(self.seed, step).next_u64();
+        let mut rng = Rng::for_key(step_seed, worker as u64);
+        let straggles = rng.chance(self.prob);
+        if straggles {
+            1.0 + rng.f64() * (self.slowdown - 1.0).max(0.0)
+        } else {
+            1.0
+        }
+    }
+
+    /// Factor of the slowest of the `world` participating workers at
+    /// `step` — what a synchronous wave is billed at.
+    pub fn slowest(&self, step: u64, world: usize) -> f64 {
+        (0..world.max(1)).map(|w| self.speed_factor(step, w)).fold(1.0, f64::max)
     }
 }
 
@@ -167,6 +245,131 @@ impl WallClockModel {
         }
         self.waves_elastic(batch_tokens, world, base_world) as f64
             * self.wave_time_overlapped(comm)
+    }
+
+    /// Serialized compute-then-reduce charge on a **heterogeneous
+    /// fleet**: every wave is billed at the slowest of the `world`
+    /// participating workers for `step` — the straggler stretches its
+    /// wave's compute *and* its collective (a synchronous allreduce is
+    /// gated by its slowest participant at every transfer). With an
+    /// inactive [`StragglerModel`] every factor is exactly 1.0 and this
+    /// is bit-identical to [`WallClockModel::step_time_comm`].
+    pub fn step_time_hetero(
+        &self,
+        batch_tokens: u64,
+        comm_bytes: u64,
+        strag: &StragglerModel,
+        step: u64,
+        world: usize,
+    ) -> f64 {
+        self.waves(batch_tokens) as f64
+            * (strag.slowest(step, world)
+                * (self.step_latency + comm_bytes as f64 / self.comm_bytes_per_sec))
+    }
+
+    /// The §10 overlapped charge on a heterogeneous fleet: the slowest
+    /// participant stretches the whole per-wave pipeline (its leaves
+    /// feed every bucket late, and it gates every bucket's reduce), so
+    /// each wave is the homogeneous pipeline × the wave's slowest
+    /// factor. Unsplit payloads degrade to
+    /// [`WallClockModel::step_time_hetero`], exactly like the
+    /// homogeneous pair; an inactive model reproduces
+    /// [`WallClockModel::step_time_overlapped`] bit-for-bit.
+    pub fn step_time_hetero_overlapped(
+        &self,
+        batch_tokens: u64,
+        comm: &CollectiveStats,
+        strag: &StragglerModel,
+        step: u64,
+        world: usize,
+    ) -> f64 {
+        if comm.buckets <= 1 || comm.bytes_moved == 0 {
+            return self.step_time_hetero(batch_tokens, comm.bytes_moved, strag, step, world);
+        }
+        self.waves(batch_tokens) as f64
+            * (strag.slowest(step, world) * self.wave_time_overlapped(comm))
+    }
+
+    /// [`WallClockModel::step_time_elastic`] on a heterogeneous fleet:
+    /// elastic wave count, every wave billed at the slowest of the
+    /// *participating* (elastic) world — scale-out recruits more
+    /// workers per wave, so the straggler tax grows with the fleet even
+    /// as the wave count shrinks; `benches/elastic_ramp.rs` charts
+    /// where that flips the scale-out-vs-compression tradeoff.
+    /// Inactive model ⇒ bit-identical to the homogeneous elastic charge.
+    pub fn step_time_hetero_elastic(
+        &self,
+        batch_tokens: u64,
+        world: usize,
+        base_world: usize,
+        comm_bytes: u64,
+        strag: &StragglerModel,
+        step: u64,
+    ) -> f64 {
+        self.waves_elastic(batch_tokens, world, base_world) as f64
+            * (strag.slowest(step, world)
+                * (self.step_latency + comm_bytes as f64 / self.comm_bytes_per_sec))
+    }
+
+    /// Elastic × overlapped × heterogeneous: elastic wave count × the
+    /// bucketed per-wave pipeline × the wave's slowest-participant
+    /// factor. Degrades along every axis exactly like its three parents.
+    pub fn step_time_hetero_elastic_overlapped(
+        &self,
+        batch_tokens: u64,
+        world: usize,
+        base_world: usize,
+        comm: &CollectiveStats,
+        strag: &StragglerModel,
+        step: u64,
+    ) -> f64 {
+        if comm.buckets <= 1 || comm.bytes_moved == 0 {
+            return self.step_time_hetero_elastic(
+                batch_tokens,
+                world,
+                base_world,
+                comm.bytes_moved,
+                strag,
+                step,
+            );
+        }
+        self.waves_elastic(batch_tokens, world, base_world) as f64
+            * (strag.slowest(step, world) * self.wave_time_overlapped(comm))
+    }
+
+    /// Seconds one wave's **two-level** reduce costs with split fabrics
+    /// (DESIGN.md §13): the intra-node stage (reduce to the node leader
+    /// + broadcast back, all nodes in parallel — the slowest/largest
+    /// node is billed) at `intra_bw`, the inter-node leader ring at
+    /// `inter_bw`. Byte split comes from
+    /// [`crate::collective::two_level_split`].
+    pub fn two_level_comm_seconds(
+        &self,
+        world: usize,
+        nodes: usize,
+        grad_elems: usize,
+        intra_bw: f64,
+        inter_bw: f64,
+    ) -> f64 {
+        let (intra, inter) = crate::collective::two_level_split(world, nodes, grad_elems);
+        intra as f64 / intra_bw + inter as f64 / inter_bw
+    }
+
+    /// Serialized step charge for the two-level collective with split
+    /// intra/inter bandwidths: every wave pays compute plus the
+    /// hierarchical reduce of [`WallClockModel::two_level_comm_seconds`].
+    pub fn step_time_two_level(
+        &self,
+        batch_tokens: u64,
+        world: usize,
+        nodes: usize,
+        grad_elems: usize,
+        intra_bw: f64,
+        inter_bw: f64,
+    ) -> f64 {
+        self.waves(batch_tokens) as f64
+            * (self.step_latency
+                + self.two_level_comm_seconds(world, nodes, grad_elems, intra_bw, inter_bw))
     }
 
     /// Total serial seconds of a whole `(batch_tokens per step)` history.
@@ -379,6 +582,114 @@ mod tests {
         assert_eq!(m.step_time_elastic(4 * 8 * 1024, 32, 8, 2_000_000_000), 2.0 + 2.0);
         // degenerate worlds never divide by zero
         assert!(m.waves_elastic(1, 0, 0) >= 1);
+    }
+
+    #[test]
+    fn straggler_factors_are_deterministic_and_bounded() {
+        let s = StragglerModel::new(42, 0.3);
+        for step in [0u64, 1, 17, 1_000_003] {
+            for worker in 0..64usize {
+                let a = s.speed_factor(step, worker);
+                let b = StragglerModel::new(42, 0.3).speed_factor(step, worker);
+                assert_eq!(a.to_bits(), b.to_bits(), "step {step} worker {worker}");
+                assert!((1.0..=s.slowdown).contains(&a), "step {step} worker {worker}: {a}");
+            }
+            let slow = s.slowest(step, 64);
+            assert!(
+                (0..64).all(|w| s.speed_factor(step, w) <= slow),
+                "slowest must dominate every participant"
+            );
+        }
+        // a different seed is a different fleet
+        let t = StragglerModel::new(43, 0.3);
+        assert!(
+            (0..256u64).any(|k| s.speed_factor(k, 0).to_bits() != t.speed_factor(k, 0).to_bits())
+        );
+        // at prob 0.3, 64 workers: some step both straggles and doesn't
+        assert!((0..64).any(|w| s.speed_factor(5, w) > 1.0));
+        assert!((0..64).any(|w| s.speed_factor(5, w) == 1.0));
+    }
+
+    #[test]
+    fn inactive_stragglers_degrade_bit_identically() {
+        // prob 0 ⇒ factor exactly 1.0 ⇒ every hetero charge reproduces
+        // its homogeneous counterpart to the bit (×1.0 is exact in fp).
+        let m = WallClockModel {
+            devices: 8,
+            tokens_per_device: 1024,
+            step_latency: 2.0,
+            comm_bytes_per_sec: 1e9,
+        };
+        let off = StragglerModel::off();
+        assert!(!off.active());
+        let s = bucketed(4, 100_000_000);
+        for step in [0u64, 3, 99] {
+            let h = m.step_time_hetero(3 * 8 * 1024, 1 << 30, &off, step, 16);
+            assert_eq!(h.to_bits(), m.step_time_comm(3 * 8 * 1024, 1 << 30).to_bits());
+            let ho = m.step_time_hetero_overlapped(512, &s, &off, step, 16);
+            assert_eq!(ho.to_bits(), m.step_time_overlapped(512, &s).to_bits());
+            let he = m.step_time_hetero_elastic(4 * 8 * 1024, 32, 8, 1 << 20, &off, step);
+            assert_eq!(he.to_bits(), m.step_time_elastic(4 * 8 * 1024, 32, 8, 1 << 20).to_bits());
+            let heo = m.step_time_hetero_elastic_overlapped(4 * 8 * 1024, 32, 8, &s, &off, step);
+            assert_eq!(
+                heo.to_bits(),
+                m.step_time_elastic_overlapped(4 * 8 * 1024, 32, 8, &s).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn hetero_waves_bill_the_slowest_participant() {
+        let m = WallClockModel {
+            devices: 8,
+            tokens_per_device: 1024,
+            step_latency: 2.0,
+            comm_bytes_per_sec: 1e9,
+        };
+        // prob 1 pins every worker to a straggler draw, so the wave's
+        // factor is the max of `world` uniform draws in [1, 4]
+        let strag = StragglerModel::new(7, 1.0);
+        for step in 0..16u64 {
+            let f = strag.slowest(step, 8);
+            assert!(f > 1.0, "with prob 1 somebody straggles");
+            let base = m.step_time_comm(512, 1 << 30);
+            let het = m.step_time_hetero(512, 1 << 30, &strag, step, 8);
+            assert!((het - f * base).abs() <= 1e-9 * base, "{het} vs {}", f * base);
+            // hetero never undercuts the homogeneous charge…
+            assert!(het >= base);
+            // …and a bigger fleet can only straggle harder at this step
+            assert!(strag.slowest(step, 64) >= f);
+        }
+        // overlapped: the stretched pipeline still dominates its parent
+        let s = bucketed(4, 1_000_000_000);
+        let f = strag.slowest(3, 8);
+        let ho = m.step_time_hetero_overlapped(512, &s, &strag, 3, 8);
+        assert!((ho - f * m.step_time_overlapped(512, &s)).abs() < 1e-9 * ho);
+    }
+
+    #[test]
+    fn two_level_pricing_splits_fabrics() {
+        let m = WallClockModel {
+            devices: 8,
+            tokens_per_device: 1024,
+            step_latency: 2.0,
+            comm_bytes_per_sec: 1e9,
+        };
+        let elems = 1_000_000usize;
+        // one node: everything is intra — inter bandwidth is irrelevant
+        let one = m.step_time_two_level(512, 8, 1, elems, 1e9, 1e-30);
+        let (intra, inter) = crate::collective::two_level_split(8, 1, elems);
+        assert_eq!(inter, 0);
+        assert!((one - (2.0 + intra as f64 / 1e9)).abs() < 1e-9, "{one}");
+        // a slower inter-node fabric only makes it slower
+        let fast = m.step_time_two_level(512, 8, 4, elems, 100e9, 100e9);
+        let slow = m.step_time_two_level(512, 8, 4, elems, 100e9, 1e9);
+        assert!(slow > fast);
+        // waves multiply the whole hierarchical charge
+        assert_eq!(
+            m.step_time_two_level(3 * 8 * 1024, 8, 4, elems, 1e9, 1e9),
+            3.0 * m.step_time_two_level(512, 8, 4, elems, 1e9, 1e9)
+        );
     }
 
     #[test]

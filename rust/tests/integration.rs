@@ -330,7 +330,7 @@ fn parallel_engine_trajectory_is_bit_identical_to_sequential() {
         (recs, params)
     };
     for world in [1usize, 2, 4] {
-        for collective in ["ring", "parallel"] {
+        for collective in ["ring", "parallel", "two-level"] {
             let (seq, p_seq) = run(world, 1, collective);
             let (par, p_par) = run(world, 4, collective);
             assert_eq!(seq.len(), par.len(), "world {world} {collective}: step counts differ");

@@ -1,0 +1,332 @@
+//! Preemption storm: kill a worker after **every** step offset of a
+//! mid-ramp adaptive run and prove the survivors' trajectory is
+//! bit-identical to the uninterrupted fleet's.
+//!
+//! The harness is a miniature trainer over the exact linear-regression
+//! risk recursion: an [`AdaptiveSeesaw`] controller fed the closed-form
+//! GNS, a ramp-coupled elastic [`StepEngine`] running a two-level
+//! collective on a straggled fleet, and a live [`GnsEstimator`] riding
+//! the engine's shard taps. A "preemption" after step `k` is the full
+//! scale-in path: the controller survives only through its
+//! `state_save`/`state_restore` blob, the estimator through its
+//! checkpoint snapshot, the engine is rebuilt from scratch, and the
+//! fleet capacity drops by one so every later step runs short-handed
+//! (`effective_world_capped` + `resize_checked`, DESIGN.md §13).
+//!
+//! Because the sweep hits **every** offset, it necessarily covers the
+//! nasty ones: the step a cut fires, the step a ramp reshard lands, and
+//! (via the back-to-back sweep) the first step after a resume — which is
+//! itself a reshard step, so the second kill lands *during* a reshard.
+//!
+//! Invariants per ISSUE 7: surviving `(lr, batch, cuts)` bit-identical,
+//! `ce` bit-identical (pin-order stat reduction is world-independent),
+//! fed GNS within 1e-12 relative, risk recursion bit-identical.
+
+use seesaw::collective::CollectiveKind;
+use seesaw::config::ExecSpec;
+use seesaw::coordinator::elastic::effective_world_capped;
+use seesaw::coordinator::{GradSource, Microbatch, MicroStats, StepEngine, WorldPolicy};
+use seesaw::experiments::adaptive_exps::exact_gns;
+use seesaw::linreg::{Problem, Spectrum};
+use seesaw::metrics::GnsEstimator;
+use seesaw::schedule::{AdaptiveSeesaw, Schedule};
+
+/// Flat gradient length of the synthetic model.
+const ELEMS: usize = 256;
+/// Tokens per microbatch: `batch_tokens / MICRO_TOKENS` microbatches.
+const MICRO_TOKENS: u64 = 16;
+/// Warmup-phase global batch, tokens.
+const BASE_BATCH: u64 = 64;
+/// Training budget, tokens — sized for a ~14-step run (the sweep is
+/// quadratic in steps, so the bed must stay small).
+const TOTAL_TOKENS: u64 = 6_000;
+/// Cut spacing, tokens: with the GNS parked far above every threshold
+/// (see [`problem`]), hysteresis alone paces the ramp, which spreads the
+/// cuts deterministically across the run instead of firing them all in
+/// one catch-up query.
+const HYSTERESIS: u64 = 600;
+const MAX_CUTS: usize = 5;
+const STEP_FACTOR: f64 = 2.0;
+/// Healthy fleet at the base batch.
+const BASE_WORLD: usize = 4;
+/// Ramp-coupled fleet cap — reached mid-run, so the sweep kills workers
+/// both while scaling out and after the ramp saturates.
+const MAX_WORLD: usize = 16;
+
+/// The storm bed: the §4 power-law testbed with the additive noise
+/// cranked to σ² = 50. That parks the exact GNS near 2 350 tokens —
+/// above the deepest cut threshold `BASE_BATCH · 2^MAX_CUTS = 2 048`
+/// and slowly *rising* (the mean-gradient signal decays as the iterate
+/// converges), so every cut fires as soon as hysteresis allows and the
+/// run's shape is a pure function of the token clock.
+fn problem() -> Problem {
+    Problem::new(Spectrum::PowerLaw { dim: 64, exponent: 1.0 }, 50.0, 4.0)
+}
+
+fn fresh_schedule(lr0: f64) -> AdaptiveSeesaw {
+    AdaptiveSeesaw::new(lr0, BASE_BATCH, 0, TOTAL_TOKENS, STEP_FACTOR)
+        .hysteresis(HYSTERESIS)
+        .max_cuts(MAX_CUTS)
+}
+
+/// Every heterogeneity knob at once: pooled workers, two-level
+/// collective with split bandwidths, overlapped buckets, ramp-coupled
+/// elasticity, and a 25 % straggler rate. None of it may leak into the
+/// trajectory — the storm asserts identity *through* all of it.
+fn spec() -> ExecSpec {
+    ExecSpec {
+        worker_threads: 2,
+        collective: CollectiveKind::TwoLevel { nodes: 2 },
+        pin_order: true,
+        overlap: true,
+        bucket_bytes: 256,
+        elastic: WorldPolicy::RampCoupled { max_world: MAX_WORLD },
+        stragglers: 0.25,
+        intra_bw: 4.0e11,
+        inter_bw: 2.5e10,
+    }
+}
+
+/// Deterministic synthetic gradients keyed off each microbatch's data.
+struct StormGrad;
+
+impl GradSource for StormGrad {
+    fn grad_elements(&self) -> usize {
+        ELEMS
+    }
+
+    fn accumulate(
+        &self,
+        tokens: &[i32],
+        targets: &[i32],
+        sink: &mut [f32],
+    ) -> anyhow::Result<MicroStats> {
+        let a = tokens.first().copied().unwrap_or(1) as f32;
+        let b = targets.first().copied().unwrap_or(2) as f32;
+        for (k, x) in sink.iter_mut().enumerate() {
+            *x += (a * 0.31 + b * 0.17 + k as f32 * 0.41).sin();
+        }
+        Ok(MicroStats { ce: (a - b).abs() * 0.013 + 0.5, zsq: (a + b).abs() * 0.007 })
+    }
+}
+
+/// One step of the surviving trajectory — everything a preemption must
+/// not move, plus the world it ran at (which a preemption *must* move).
+#[derive(Debug, Clone, Copy)]
+struct Row {
+    lr_bits: u64,
+    batch: u64,
+    cuts: u32,
+    world: usize,
+    ce_bits: u64,
+    gns_fed: f64,
+    risk_bits: u64,
+}
+
+/// Run the storm bed to completion, killing one worker after each step
+/// listed in `kills` (1-based step indices, ascending).
+fn run(kills: &[u64]) -> Vec<Row> {
+    let problem = problem();
+    let lr0 = 0.5 * problem.eta_max();
+    let mut sched: Box<dyn Schedule> = Box::new(fresh_schedule(lr0));
+    let mut it = problem.iter();
+    let mut engine = StepEngine::new(spec());
+    let mut est = GnsEstimator::new(0.9);
+    let src = StormGrad;
+
+    let mut tokens = 0u64;
+    let mut phase = 0usize;
+    let mut step = 0u64;
+    let mut capacity = usize::MAX;
+    let mut last_world: Option<usize> = None;
+    let mut rows = Vec::new();
+
+    while tokens < TOTAL_TOKENS {
+        step += 1;
+        let p = sched.query(tokens);
+        let cuts = (p.phase - phase) as u32;
+        phase = p.phase;
+        let n_micro = (p.batch_tokens / MICRO_TOKENS).max(1);
+        let world = effective_world_capped(
+            spec().elastic,
+            BASE_WORLD,
+            BASE_BATCH / MICRO_TOKENS,
+            n_micro,
+            capacity,
+        );
+        if let Some(prev) = last_world {
+            if prev != world {
+                est.reshard(prev, world).expect("EMA carry across the world edge");
+                engine
+                    .resize_checked(world, n_micro as usize, true)
+                    .expect("checked reshard at the world edge");
+            }
+        }
+        last_world = Some(world);
+
+        let micro: Vec<Microbatch> = (0..n_micro)
+            .map(|i| Microbatch {
+                index: i,
+                tokens: vec![(step as i32) * 31 + (i as i32) * 7; 4],
+                targets: vec![(i as i32) * 3 - 1; 4],
+            })
+            .collect();
+        let out = engine.execute(&src, world, micro).expect("storm step executes");
+        assert_eq!(out.world, world, "engine ran the planned world");
+        assert_eq!(out.n_micro, n_micro, "engine saw the planned microbatches");
+
+        // Keep the live estimator riding the engine's shard taps across
+        // every reshard. Diagnostic only: its estimate legitimately
+        // depends on the shard partition, so it is asserted sane here
+        // and never compared across differently-sized fleets.
+        let gnorm_sq: f64 = engine.mean_grad().iter().map(|&x| (x as f64) * (x as f64)).sum();
+        if let Some(g) = est.observe(&out.shard_sqnorms, &out.shard_micro, MICRO_TOKENS, gnorm_sq) {
+            assert!(g.is_finite() && g > 0.0, "live GNS estimate degenerate: {g}");
+        }
+
+        it.step(p.lr, p.batch_tokens);
+        tokens += p.batch_tokens;
+        let fed = exact_gns(&it, p.batch_tokens).expect("exact GNS defined on the storm bed");
+        sched.observe_gns(tokens, fed);
+
+        rows.push(Row {
+            lr_bits: p.lr.to_bits(),
+            batch: p.batch_tokens,
+            cuts,
+            world,
+            ce_bits: out.ce_sum.to_bits(),
+            gns_fed: fed,
+            risk_bits: it.risk().to_bits(),
+        });
+
+        if kills.contains(&step) {
+            // Preemption: one of the `world` live workers dies. The
+            // controller and estimator survive only through their
+            // checkpoint blobs; the engine (worker pool, buffers,
+            // collective) is rebuilt from nothing; model state is the
+            // risk iterate, whose checkpoint restore is bit-exact by
+            // construction. The shrunken capacity clamps every later
+            // step's world until the fleet heals (it never does here).
+            let survivors = world - 1;
+            assert!(
+                survivors >= 2,
+                "storm parameters must keep the GNS small-/large-batch contrast alive"
+            );
+            capacity = survivors;
+            let blob = sched.state_save();
+            let mut resumed = fresh_schedule(lr0);
+            resumed.state_restore(&blob).expect("controller state round-trips");
+            sched = Box::new(resumed);
+            est = GnsEstimator::from_state(est.state()).expect("estimator snapshot round-trips");
+            engine = StepEngine::new(spec());
+        }
+    }
+    rows
+}
+
+/// Assert a killed run's surviving trajectory matches the reference.
+/// `first_kill` is the 1-based step the first preemption followed:
+/// row indices `>= first_kill` must run strictly short-handed, rows
+/// before it must match the reference world exactly.
+fn assert_survives(reference: &[Row], survived: &[Row], first_kill: usize, label: &str) {
+    assert_eq!(reference.len(), survived.len(), "{label}: step count drifted");
+    for (i, (r, s)) in reference.iter().zip(survived).enumerate() {
+        let step = i + 1;
+        assert_eq!(r.lr_bits, s.lr_bits, "{label}: lr diverged at step {step}");
+        assert_eq!(r.batch, s.batch, "{label}: batch diverged at step {step}");
+        assert_eq!(r.cuts, s.cuts, "{label}: cut schedule diverged at step {step}");
+        assert_eq!(
+            r.ce_bits, s.ce_bits,
+            "{label}: ce_sum not bit-identical at step {step} — pin-order stat reduction \
+             must be world-independent"
+        );
+        assert_eq!(r.risk_bits, s.risk_bits, "{label}: risk recursion diverged at step {step}");
+        let rel = (r.gns_fed - s.gns_fed).abs() / r.gns_fed.abs().max(f64::MIN_POSITIVE);
+        assert!(
+            rel <= 1e-12,
+            "{label}: fed GNS drifted at step {step}: {} vs {} (rel {rel:e})",
+            r.gns_fed,
+            s.gns_fed
+        );
+        if i >= first_kill {
+            assert!(
+                s.world < r.world,
+                "{label}: step {step} should run short-handed (got world {}, reference {})",
+                s.world,
+                r.world
+            );
+        } else {
+            assert_eq!(s.world, r.world, "{label}: pre-kill world drifted at step {step}");
+        }
+    }
+}
+
+/// The uninterrupted reference must be a genuine mid-ramp bed — cuts
+/// spread across the run, reshard edges, a saturated ramp — or the
+/// sweep's "every offset" claim is vacuous.
+fn assert_storm_bed_shape(rows: &[Row]) {
+    let n = rows.len();
+    assert!(
+        (10..=40).contains(&n),
+        "storm bed must stay sweepable (quadratic in steps): got {n} steps"
+    );
+    let total_cuts: u32 = rows.iter().map(|r| r.cuts).sum();
+    assert!(
+        total_cuts >= 4 && total_cuts as usize <= MAX_CUTS,
+        "the GNS ladder should fire most of the {MAX_CUTS} cuts, got {total_cuts}"
+    );
+    let cut_steps = rows.iter().filter(|r| r.cuts > 0).count();
+    assert!(cut_steps >= 3, "cuts must be spread across the run, got {cut_steps} cut step(s)");
+    let reshard_edges = rows.windows(2).filter(|w| w[1].world != w[0].world).count();
+    assert!(reshard_edges >= 2, "ramp must reshard mid-run, got {reshard_edges} edge(s)");
+    assert!(
+        rows.iter().any(|r| r.world == MAX_WORLD),
+        "ramp must saturate the {MAX_WORLD}-worker fleet"
+    );
+    // At least one offset where a kill lands on a step that both fired a
+    // cut and resharded — the single sweep then covers "kill at a cut"
+    // and "kill at a reshard" at once.
+    assert!(
+        (1..n).any(|i| rows[i].cuts > 0 && rows[i].world != rows[i - 1].world),
+        "bed must contain a cut-and-reshard step"
+    );
+    assert!(
+        rows.last().unwrap().batch >= BASE_BATCH * 16,
+        "batch ramp should reach deep levels, topped out at {}",
+        rows.last().unwrap().batch
+    );
+}
+
+#[test]
+fn reference_run_is_a_genuine_mid_ramp_storm_bed() {
+    let reference = run(&[]);
+    assert_storm_bed_shape(&reference);
+    // The bed reruns deterministically — the sweep's baseline is stable.
+    let again = run(&[]);
+    assert_survives(&reference, &again, reference.len() + 1, "rerun");
+}
+
+#[test]
+fn a_preemption_after_every_step_offset_is_invisible_to_the_trajectory() {
+    let reference = run(&[]);
+    assert_storm_bed_shape(&reference);
+    let n = reference.len();
+    for k in 1..=n {
+        let survived = run(&[k as u64]);
+        assert_survives(&reference, &survived, k, &format!("kill after step {k}"));
+    }
+}
+
+#[test]
+fn back_to_back_preemptions_hit_the_post_resume_reshard_step() {
+    let reference = run(&[]);
+    let n = reference.len();
+    // Killing at k and again at k+1 makes the second preemption land on
+    // the first step after a resume — which is itself a reshard step
+    // (the capacity clamp moved the world), so the second kill strikes
+    // *during* a reshard.
+    for k in 1..n {
+        let survived = run(&[k as u64, k as u64 + 1]);
+        assert_survives(&reference, &survived, k, &format!("kills after steps {k} and {}", k + 1));
+    }
+}

@@ -6,7 +6,7 @@ mod common;
 
 use common::v1_checkpoint_bytes;
 use seesaw::collective::{
-    mean_reference, parallel_allreduce_mean, ring_allreduce_mean, CollectiveKind,
+    mean_reference, parallel_allreduce_mean, ring_allreduce_mean, two_level_split, CollectiveKind,
 };
 use seesaw::config::ExecSpec;
 use seesaw::coordinator::{
@@ -162,7 +162,12 @@ fn prop_step_engine_trajectory_invariant_under_threads() {
         let elems = 1 + g.usize_in(0, 2000);
         let n_micro = 1 + g.u64(12);
         let world = *g.pick(&[1usize, 2, 4]);
-        let kind = if g.bool() { CollectiveKind::Ring } else { CollectiveKind::Parallel };
+        let kind = *g.pick(&[
+            CollectiveKind::Ring,
+            CollectiveKind::Parallel,
+            CollectiveKind::TwoLevel { nodes: 2 },
+            CollectiveKind::TwoLevel { nodes: 3 },
+        ]);
         let pin = g.bool();
         let micro = |seed: u64| -> Vec<Microbatch> {
             (0..n_micro)
@@ -210,7 +215,12 @@ fn prop_engine_overlap_is_bit_exact_for_any_bucket_size() {
         let elems = 1 + g.usize_in(0, 3000);
         let n_micro = 1 + g.u64(12);
         let world = *g.pick(&[2usize, 3, 4, 7]);
-        let kind = if g.bool() { CollectiveKind::Ring } else { CollectiveKind::Parallel };
+        let kind = *g.pick(&[
+            CollectiveKind::Ring,
+            CollectiveKind::Parallel,
+            CollectiveKind::TwoLevel { nodes: 2 },
+            CollectiveKind::TwoLevel { nodes: 4 },
+        ]);
         let seed = g.u64(1 << 30);
         let micro = |seed: u64| -> Vec<Microbatch> {
             (0..n_micro)
@@ -303,6 +313,171 @@ fn prop_engine_world_beyond_microbatches_surfaces_the_clamp() {
         } else {
             assert_eq!(out.shard_sqnorms.len(), out.world, "norms track the effective world");
         }
+    });
+}
+
+#[test]
+fn prop_stragglers_are_trajectory_neutral() {
+    // the DESIGN.md §13 satellite invariant, over random shapes:
+    // straggler speed factors are a pure function of (seed, step,
+    // worker), bounded in [1, slowdown] — and they are *wall-clock
+    // only*. An engine whose ExecSpec carries the straggler/pricing
+    // knobs produces bit-identical (stats, GNS tap, mean grad); the
+    // hetero charges only ever add time, and an inactive model charges
+    // bit-identically to the homogeneous arms.
+    use std::sync::atomic::{AtomicU32, Ordering};
+    static SLOWED: AtomicU32 = AtomicU32::new(0);
+    check("straggler trajectory neutrality", 32, |g| {
+        let seed = g.u64(1 << 40);
+        let prob = g.f64_in(0.2, 1.0);
+        let strag = seesaw::metrics::StragglerModel::new(seed, prob);
+        for _ in 0..8 {
+            let step = g.u64(1 << 20);
+            let worker = g.usize_in(0, 64);
+            let f = strag.speed_factor(step, worker);
+            assert_eq!(
+                f.to_bits(),
+                seesaw::metrics::StragglerModel::new(seed, prob)
+                    .speed_factor(step, worker)
+                    .to_bits(),
+                "factor must be a pure function of (seed, step, worker)"
+            );
+            assert!((1.0..=strag.slowdown).contains(&f), "factor {f} out of [1, slowdown]");
+        }
+        // engine layer: the knobs must never reach the gradient path
+        let elems = 1 + g.usize_in(0, 1200);
+        let n_micro = 1 + g.u64(8);
+        let world = *g.pick(&[2usize, 3, 4]);
+        let kind = *g.pick(&[
+            CollectiveKind::Ring,
+            CollectiveKind::Parallel,
+            CollectiveKind::TwoLevel { nodes: 2 },
+        ]);
+        let mseed = g.u64(1 << 30);
+        let micro = |seed: u64| -> Vec<Microbatch> {
+            (0..n_micro)
+                .map(|i| Microbatch {
+                    index: i,
+                    tokens: vec![(seed.wrapping_mul(61) as i32).wrapping_add(i as i32 * 13); 3],
+                    targets: vec![(i as i32).wrapping_mul(7) - 3; 3],
+                })
+                .collect()
+        };
+        let src = SyntheticGrad { elems };
+        let mut plain = StepEngine::new(ExecSpec { collective: kind, ..ExecSpec::default() });
+        let mut degraded = StepEngine::new(ExecSpec {
+            collective: kind,
+            stragglers: prob,
+            intra_bw: 4e11,
+            inter_bw: 2.5e10,
+            ..ExecSpec::default()
+        });
+        let a = plain.execute(&src, world, micro(mseed)).unwrap();
+        let b = degraded.execute(&src, world, micro(mseed)).unwrap();
+        assert_eq!(a, b, "straggler/pricing knobs must not reach the gradient path");
+        assert!(
+            plain.mean_grad().iter().zip(degraded.mean_grad()).all(|(x, y)| x.to_bits()
+                == y.to_bits()),
+            "mean grad must be bit-identical with stragglers configured"
+        );
+        // wall-clock layer: inactive ⇒ bit-identical, active ⇒ only up
+        let wall = seesaw::metrics::WallClockModel {
+            devices: 1 + g.u64(8),
+            tokens_per_device: 256 * (1 + g.u64(8)),
+            step_latency: g.f64_in(0.1, 2.0),
+            comm_bytes_per_sec: 1e9,
+        };
+        let batch = 1 + g.u64(1 << 16);
+        let bytes = g.u64(1 << 20);
+        let step = g.u64(1 << 20);
+        let off = seesaw::metrics::StragglerModel::off();
+        assert_eq!(
+            wall.step_time_hetero(batch, bytes, &off, step, world).to_bits(),
+            wall.step_time_comm(batch, bytes).to_bits(),
+            "an inactive straggler model must charge bit-identically"
+        );
+        let slowest = strag.slowest(step, world);
+        if slowest > 1.0 {
+            assert!(
+                wall.step_time_hetero(batch, bytes, &strag, step, world)
+                    > wall.step_time_comm(batch, bytes),
+                "a straggled wave only ever takes longer"
+            );
+            SLOWED.fetch_add(1, Ordering::Relaxed);
+        }
+    });
+    assert!(
+        SLOWED.load(Ordering::Relaxed) > 0,
+        "the sweep never sampled a straggler — the property is vacuous"
+    );
+}
+
+#[test]
+fn prop_two_level_engine_matches_flat_collectives_on_any_grid() {
+    // the hierarchical-collective satellite, over any (nodes ×
+    // workers-per-node, bucket_bytes) grid — ragged last nodes
+    // included: the two-level allreduce's numerics are the ordered
+    // worker-major sum, bit-identical to the parallel collective for
+    // ANY hierarchy split; the pre-reduce GNS tap (shard_sqnorms) is
+    // bit-identical across all three kinds (taps read worker sums
+    // before any reduction order applies); and the byte accounting is
+    // exactly the hierarchical split of the payload, bucketing-invariant.
+    check("two-level engine grid", 32, |g| {
+        let nodes = 1 + g.usize_in(0, 4);
+        let wpn = 1 + g.usize_in(0, 3);
+        let world = (nodes * wpn + g.usize_in(0, 2)).max(2); // +0..1: ragged last node
+        let elems = 1 + g.usize_in(0, 2500);
+        let n_micro = world as u64 + g.u64(8);
+        let bucket_bytes = *g.pick(&[4usize, 64, 1024, 1 << 20]);
+        let overlap = g.bool();
+        let threads = *g.pick(&[1usize, 2, 4]);
+        let seed = g.u64(1 << 30);
+        let micro = |seed: u64| -> Vec<Microbatch> {
+            (0..n_micro)
+                .map(|i| Microbatch {
+                    index: i,
+                    tokens: vec![(seed.wrapping_mul(97) as i32).wrapping_add(i as i32 * 11); 3],
+                    targets: vec![(i as i32).wrapping_mul(2) + 1; 3],
+                })
+                .collect()
+        };
+        let src = SyntheticGrad { elems };
+        let run = |kind: CollectiveKind| {
+            let mut e = StepEngine::new(ExecSpec {
+                worker_threads: threads,
+                collective: kind,
+                overlap,
+                bucket_bytes,
+                ..ExecSpec::default()
+            });
+            let out = e.execute(&src, world, micro(seed)).unwrap();
+            let grad = e.mean_grad().to_vec();
+            (out, grad)
+        };
+        let (tl, tl_g) = run(CollectiveKind::TwoLevel { nodes });
+        let (pa, pa_g) = run(CollectiveKind::Parallel);
+        let (ri, _) = run(CollectiveKind::Ring);
+        let tag = format!("nodes {nodes} wpn {wpn} world {world} bucket {bucket_bytes}");
+        assert!(
+            tl_g.iter().zip(&pa_g).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "two-level mean grad must be bit-identical to parallel ({tag})"
+        );
+        assert_eq!(tl.ce_sum.to_bits(), pa.ce_sum.to_bits(), "ce vs parallel ({tag})");
+        assert_eq!(tl.ce_sum.to_bits(), ri.ce_sum.to_bits(), "ce vs ring ({tag})");
+        assert_eq!(tl.world, pa.world, "worlds agree ({tag})");
+        assert_eq!(tl.shard_sqnorms.len(), pa.shard_sqnorms.len(), "tap count ({tag})");
+        for (k, ((a, b), c)) in
+            tl.shard_sqnorms.iter().zip(&pa.shard_sqnorms).zip(&ri.shard_sqnorms).enumerate()
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "GNS tap {k} vs parallel ({tag})");
+            assert_eq!(a.to_bits(), c.to_bits(), "GNS tap {k} vs ring ({tag})");
+        }
+        let (intra, inter) = two_level_split(tl.world, nodes, elems);
+        assert_eq!(
+            tl.comm.bytes_moved,
+            intra + inter,
+            "two-level bytes must be the hierarchical split ({tag})"
+        );
     });
 }
 
