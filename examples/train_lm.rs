@@ -70,6 +70,8 @@ fn main() -> Result<()> {
             batch,
             world
         );
+        // real wall-clock throughput reporting is the point of this example
+        #[allow(clippy::disallowed_methods)]
         let t0 = std::time::Instant::now();
         let mut log = t.run()?;
         log.name = label.clone();

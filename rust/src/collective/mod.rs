@@ -42,6 +42,8 @@
 //! it moves [`CollectiveStats`]'s bucket accounting and the modeled
 //! overlap window, never the trajectory.
 
+#![forbid(unsafe_code)] // R3: outside the audit.toml unsafe registry (DESIGN.md §14)
+
 /// Statistics from one collective call.
 ///
 /// A bucketed call ([`Collective::allreduce_mean_bucketed`]) accounts

@@ -7,6 +7,8 @@
 //! config set alone. (Parsing uses the from-scratch [`crate::util::json`]
 //! module; the build has no serde.)
 
+#![forbid(unsafe_code)] // R3: outside the audit.toml unsafe registry (DESIGN.md §14)
+
 use crate::collective::CollectiveKind;
 use crate::coordinator::elastic::WorldPolicy;
 use crate::metrics::WallClockModel;

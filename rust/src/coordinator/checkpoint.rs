@@ -49,6 +49,8 @@
 //! directory — a crash at any point leaves either the old complete
 //! checkpoint or the new complete checkpoint, never a torn file.
 
+#![forbid(unsafe_code)] // R3: outside the audit.toml unsafe registry (DESIGN.md §14)
+
 use crate::metrics::GnsState;
 use anyhow::{anyhow, ensure, Result};
 use std::io::{BufWriter, Write};
@@ -238,11 +240,15 @@ impl Checkpoint {
                 w.write_all(&(group.len() as u64).to_le_bytes())?;
                 for leaf in group.iter() {
                     w.write_all(&(leaf.len() as u64).to_le_bytes())?;
-                    // bulk-copy the f32 payload
-                    let bytes: &[u8] = unsafe {
-                        std::slice::from_raw_parts(leaf.as_ptr() as *const u8, leaf.len() * 4)
-                    };
-                    w.write_all(bytes)?;
+                    // f32 payload, element-wise through the BufWriter: the
+                    // same bytes the old raw-parts cast produced on
+                    // little-endian, but explicitly LE (the cast silently
+                    // wrote native order, which the LE reader would have
+                    // mis-read on a BE host) — and it lets this file forbid
+                    // unsafe_code outright.
+                    for x in leaf.iter() {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
                 }
             }
 

@@ -45,6 +45,8 @@
 //! §11 continuity table — `tests/preemption_storm.rs` kills a worker at
 //! every step offset to pin exactly that.
 
+#![forbid(unsafe_code)] // R3: outside the audit.toml unsafe registry (DESIGN.md §14)
+
 /// How the effective data-parallel world follows the batch ramp.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum WorldPolicy {

@@ -109,6 +109,10 @@ struct StepCtx<'a> {
 // thread boundary — the scoped-thread path is only entered on explicit
 // opt-in, and the trajectory is bit-identical either way).
 unsafe impl Send for StepCtx<'_> {}
+// SAFETY: same argument as `Send` above — `&StepCtx` only permits `&self`
+// calls into the thread-safe PJRT client over read-only literals, so
+// sharing references across the pool's scoped threads is sound under the
+// same caveat about the vendored wrapper's internals.
 unsafe impl Sync for StepCtx<'_> {}
 
 impl GradSource for StepCtx<'_> {
@@ -543,6 +547,8 @@ impl Trainer {
         for i in 0..n {
             let (tokens, targets) = self.loader.val_batch(i, b);
             let (ce, _) = self.rt.eval_step(&state.params, &tokens, &targets)?;
+            // audit:allow(R1): eval-only mean over the fixed val-batch index
+            // order; never feeds the training trajectory
             sum += ce as f64;
         }
         Ok(sum / n as f64)

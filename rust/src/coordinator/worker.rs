@@ -120,11 +120,14 @@ unsafe impl Send for Job {}
 
 impl Job {
     fn run(&self) -> Result<()> {
-        // SAFETY: `count` workers/buffers starting at the chunk pointers
-        // were exclusively borrowed for this job by `execute`, which does
-        // not reuse them (or return) until `done` is signalled; sibling
-        // jobs cover disjoint chunks (`chunks_mut`).
+        // SAFETY: `count` workers starting at the chunk pointer were
+        // exclusively borrowed for this job by `execute`, which does not
+        // reuse them (or return) until `done` is signalled; sibling jobs
+        // cover disjoint chunks (`chunks_mut`).
         let workers = unsafe { std::slice::from_raw_parts_mut(self.workers, self.count) };
+        // SAFETY: same drain-before-return contract for the buffer chunk —
+        // `bufs` was split by the same `chunks_mut` walk as `workers`, so
+        // the `count` buffers here are exclusively this job's until `done`.
         let bufs = unsafe { std::slice::from_raw_parts_mut(self.bufs, self.count) };
         for (w, buf) in workers.iter_mut().zip(bufs.iter_mut()) {
             w.run_shard(self.src, buf)?;
@@ -357,12 +360,13 @@ impl StepEngine {
             let per = world.div_ceil(threads);
             let n_chunks = world.div_ceil(per);
             self.pool.ensure(n_chunks);
-            // SAFETY: only the *lifetime* is erased; the reference stays a
-            // plain `&S`. Every job that holds it signals `done` (or drops
-            // the sender) before `execute` returns — enforced by the drain
-            // loop below — so no pool thread can touch `src` (or the
-            // worker/buffer chunks) after this call ends.
             let src_dyn: &dyn GradSource = src;
+            // SAFETY: only the *lifetime* is erased; the reference stays a
+            // plain `&dyn GradSource`. Every job that holds it signals
+            // `done` (or drops the sender) before `execute` returns —
+            // enforced by the drain loop below — so no pool thread can
+            // touch `src` (or the worker/buffer chunks) after this call
+            // ends.
             let src_static: &'static dyn GradSource =
                 unsafe { std::mem::transmute::<&dyn GradSource, &'static dyn GradSource>(src_dyn) };
             let (done_tx, done_rx) = mpsc::channel::<Result<()>>();
@@ -430,6 +434,9 @@ impl StepEngine {
             slots.sort_by_key(|&(i, _)| i);
             let mut ce = 0f64;
             let mut zsq = 0f64;
+            // audit:allow(R1): THE canonical reduction — global microbatch
+            // order after the sort above, bit-exact with the sequential
+            // engine (pinned by the thread-invariance property)
             for (_, s) in slots {
                 ce += s.ce as f64;
                 zsq += s.zsq as f64;
@@ -440,6 +447,10 @@ impl StepEngine {
             // assignment, but a different fp rounding order.
             let mut ce = 0f64;
             let mut zsq = 0f64;
+            // audit:allow(R1): worker-major order is fixed by worker id and
+            // the per-worker slot sequence — deterministic for a given
+            // assignment, and explicitly a *different* sanctioned rounding
+            // order than pin_order (documented in DESIGN.md §7)
             for w in active.iter() {
                 for (_, s) in &w.stats {
                     ce += s.ce as f64;

@@ -13,6 +13,8 @@
 //! the same token stream as the cosine baseline — the equal-FLOPs,
 //! equal-data comparison Figure 1 requires.
 
+#![forbid(unsafe_code)] // R3: outside the audit.toml unsafe registry (DESIGN.md §14)
+
 mod markov;
 
 pub use markov::MarkovCorpus;

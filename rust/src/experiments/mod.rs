@@ -6,6 +6,8 @@
 //! the full three-layer stack through [`crate::coordinator::Trainer`].
 //! Every harness writes a CSV under `results/` and prints its table.
 
+#![forbid(unsafe_code)] // R3: outside the audit.toml unsafe registry (DESIGN.md §14)
+
 pub mod adaptive_exps;
 pub mod linreg_exps;
 pub mod lm_exps;

@@ -34,6 +34,9 @@
 // harnesses, tests) — suppress the lint that rewrites that into one
 // struct literal.
 #![allow(clippy::field_reassign_with_default)]
+// R3 hygiene: even inside registered unsafe fns (none today), each
+// unsafe operation must sit in its own block with its own SAFETY note.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod collective;
 pub mod config;

@@ -10,6 +10,8 @@
 //! of Appendix B and the past-CBS failure of Figure 3 ([`nsgd`]), and the
 //! 1-D NGD stable-cycle toy of §4.2 ([`ngd_toy`]).
 
+#![forbid(unsafe_code)] // R3: outside the audit.toml unsafe registry (DESIGN.md §14)
+
 pub mod ngd_toy;
 pub mod nsgd;
 pub mod recursion;

@@ -46,6 +46,8 @@
 //! configuration is rejected with the differing fields named; a
 //! different *topology* reshards (see README "Preemption & resume").
 
+#![forbid(unsafe_code)] // R3: outside the audit.toml unsafe registry (DESIGN.md §14)
+
 use anyhow::{anyhow, bail, Result};
 use seesaw::collective::CollectiveKind;
 use seesaw::config::{ScheduleSpec, TrainConfig};

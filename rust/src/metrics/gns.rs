@@ -138,6 +138,10 @@ impl GnsEstimator {
         let mut s_sum = 0.0f64;
         let mut g2_sum = 0.0f64;
         let mut used = 0u32;
+        // audit:allow(R1): per-shard fold in fixed worker-index order — the
+        // shard slices arrive ordered by worker id from the engine, so this
+        // accumulation order is identical on every replay and across any
+        // world partition (prop_gns_reshard_is_world_invariant pins it)
         for (&sqnorm, &n_w) in shard_sum_sqnorms.iter().zip(shard_micro) {
             let small = n_w * micro_tokens;
             if n_w == 0 || small >= big {

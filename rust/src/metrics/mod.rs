@@ -2,6 +2,8 @@
 //! the online gradient-noise-scale estimator ([`GnsEstimator`]) and the
 //! wall-clock model that renders the paper's "serial runtime" axis.
 
+#![forbid(unsafe_code)] // R3: outside the audit.toml unsafe registry (DESIGN.md §14)
+
 mod gns;
 mod wallclock;
 

@@ -19,6 +19,8 @@
 //! steps (the CPU PJRT client copies host↔device per call; §Perf in
 //! EXPERIMENTS.md quantifies this and the buffer-resident alternative).
 
+#![forbid(unsafe_code)] // R3: outside the audit.toml unsafe registry (DESIGN.md §14)
+
 mod manifest;
 
 pub use manifest::{Manifest, ParamSpec};
@@ -203,6 +205,8 @@ impl ModelRuntime {
     }
 
     /// One AdamW update; returns `(params', m', v')` literals.
+    // ten positional tensor groups mirror the XLA computation's parameter
+    // list one-to-one; bundling them into a struct would just relabel them
     #[allow(clippy::too_many_arguments)]
     pub fn adamw_step(
         &self,

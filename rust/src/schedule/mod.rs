@@ -26,6 +26,8 @@
 //!   stateful controller that fires the same `(η/√a, B·a)` cut whenever
 //!   the *measured* gradient-noise scale crosses the next batch size.
 
+#![forbid(unsafe_code)] // R3: outside the audit.toml unsafe registry (DESIGN.md §14)
+
 pub mod adaptive;
 pub mod seesaw;
 

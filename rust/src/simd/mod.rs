@@ -39,6 +39,8 @@
 //! writes `BENCH_hotpath.json`; the ≥2× sqnorm speedup at 1M elements is
 //! an acceptance criterion, re-checked per PR.
 
+#![forbid(unsafe_code)] // R3: outside the audit.toml unsafe registry (DESIGN.md §14)
+
 // Lane loops index `acc[j]`/`chunk[j]` on purpose: the j-indexed form is
 // the fixed lane structure the autovectorizer maps onto registers, and it
 // mirrors the Python fixture generator line for line.

@@ -103,6 +103,9 @@ fn fmt(d: Duration) -> String {
 /// Run `f` repeatedly: a warmup phase, then timed samples until
 /// `target_time` elapses (minimum `min_samples`). Returns stats over
 /// per-call durations.
+// util::bench is the one sanctioned home for wall-clock timing (R2): it
+// measures the host, and its output never feeds a trajectory.
+#[allow(clippy::disallowed_methods)]
 pub fn bench(name: &str, target_time: Duration, mut f: impl FnMut()) -> BenchResult {
     // warmup: ~10% of budget
     let warm_until = Instant::now() + target_time / 10;

@@ -11,6 +11,8 @@
 //! * [`prop`] — property-based test driver (seeded generators + failure
 //!   reporting), substituting for proptest on coordinator invariants.
 
+#![forbid(unsafe_code)] // R3: outside the audit.toml unsafe registry (DESIGN.md §14)
+
 pub mod bench;
 pub mod cli;
 pub mod json;
@@ -23,6 +25,9 @@ pub struct TempDir {
 }
 
 impl TempDir {
+    // the wall-clock here only salts a temp-dir *name* (uniqueness across
+    // concurrent test processes); nothing trajectory-visible depends on it
+    #[allow(clippy::disallowed_methods)]
     pub fn new(tag: &str) -> std::io::Result<Self> {
         use std::time::{SystemTime, UNIX_EPOCH};
         let nanos = SystemTime::now().duration_since(UNIX_EPOCH).unwrap().as_nanos();

@@ -1,0 +1,652 @@
+#!/usr/bin/env python3
+"""Toolchain-less validator for tools/seesaw-audit.
+
+This is a line-for-line Python mirror of the Rust scanner's documented
+semantics (strip -> lex -> structural pass -> rules R1-R4). The build
+container has no cargo/rustc, so this mirror is how a PR checks that:
+
+  1. the repo tree passes the audit (selfcheck.rs will pass in CI), and
+  2. every corpus snippet fires exactly as corpus_test.rs asserts.
+
+If the Rust scanner and this mirror ever disagree in CI, the Rust side
+is authoritative; fix the mirror.
+
+Usage:  python3 tools/audit_selfcheck.py [--root DIR]
+Exit 0 = mirror agrees with all expectations; nonzero otherwise.
+"""
+
+import os
+import re
+import sys
+
+RULE_IDS = ("R1", "R2", "R3", "R4")
+
+# ---------------------------------------------------------------- strip
+
+def strip(src):
+    code_lines, comment_lines = [], []
+    cur_code, cur_comment = [], []
+    st = ("code",)  # code | line | block(depth) | str | raw(hashes)
+    chars = list(src)
+    i, n = 0, len(chars)
+
+    def isident(c):
+        return c.isalnum() and c.isascii() or c == "_"
+
+    while i < n:
+        c = chars[i]
+        if c == "\n":
+            if st[0] == "line":
+                st = ("code",)
+            code_lines.append("".join(cur_code))
+            comment_lines.append("".join(cur_comment))
+            cur_code, cur_comment = [], []
+            i += 1
+            continue
+        if st[0] == "code":
+            nxt = chars[i + 1] if i + 1 < n else ""
+            if c == "/" and nxt == "/":
+                st = ("line",)
+                cur_comment.append(" ")  # marker: lone `//` != blank line
+                i += 2
+                continue
+            if c == "/" and nxt == "*":
+                st = ("block", 1)
+                cur_code.append(" ")
+                i += 2
+                continue
+            if c == '"':
+                st = ("str",)
+                cur_code.append('"')
+                i += 1
+                continue
+            prev_ident = i > 0 and isident(chars[i - 1])
+            if not prev_ident and (c == "r" or (c == "b" and nxt == "r")):
+                j = i + 2 if c == "b" else i + 1
+                hashes = 0
+                while j < n and chars[j] == "#":
+                    hashes += 1
+                    j += 1
+                if j < n and chars[j] == '"':
+                    st = ("raw", hashes)
+                    cur_code.append('"')
+                    i = j + 1
+                    continue
+            if c == "'":
+                j = i + 1
+                if j < n and chars[j] == "\\":
+                    j += 2
+                    while j < n and chars[j] not in ("'", "\n"):
+                        j += 1
+                elif j < n:
+                    j += 1
+                if j < n and chars[j] == "'" and not (i + 1 < n and chars[i + 1] == "'"):
+                    cur_code.append("' '")
+                    i = j + 1
+                    continue
+                cur_code.append("'")
+                i += 1
+                continue
+            cur_code.append(c)
+            i += 1
+        elif st[0] == "line":
+            cur_comment.append(c)
+            i += 1
+        elif st[0] == "block":
+            nxt = chars[i + 1] if i + 1 < n else ""
+            if c == "/" and nxt == "*":
+                st = ("block", st[1] + 1)
+                i += 2
+            elif c == "*" and nxt == "/":
+                st = ("code",) if st[1] == 1 else ("block", st[1] - 1)
+                i += 2
+            else:
+                cur_comment.append(c)
+                i += 1
+        elif st[0] == "str":
+            if c == "\\":
+                i += 2
+            elif c == '"':
+                st = ("code",)
+                cur_code.append('"')
+                i += 1
+            else:
+                i += 1
+        else:  # raw
+            hashes = st[1]
+            if c == '"' and all(
+                i + 1 + k < n and chars[i + 1 + k] == "#" for k in range(hashes)
+            ):
+                st = ("code",)
+                cur_code.append('"')
+                i += 1 + hashes
+            else:
+                i += 1
+    code_lines.append("".join(cur_code))
+    comment_lines.append("".join(cur_comment))
+    return code_lines, comment_lines
+
+# ------------------------------------------------------------------ lex
+
+TOKEN_RE = re.compile(r"[A-Za-z_][A-Za-z0-9_]*|\d[\dA-Za-z_]*(?:\.\d[\dA-Za-z_]*)*|::|\+=|.", re.S)
+
+def lex(code_lines):
+    toks = []
+    for lineno, text in enumerate(code_lines):
+        i, m = 0, len(text)
+        while i < m:
+            c = text[i]
+            if c.isspace() or c in "\"'":
+                i += 1
+                continue
+            if c.isalpha() or c == "_":
+                j = i
+                while j < m and (text[j].isalnum() and text[j].isascii() or text[j] == "_"):
+                    j += 1
+                toks.append((text[i:j], lineno))
+                i = j
+                continue
+            if c.isdigit():
+                j = i + 1
+                while j < m:
+                    d = text[j]
+                    if d.isalnum() and d.isascii() or d == "_":
+                        j += 1
+                    elif d == "." and j + 1 < m and text[j + 1].isdigit():
+                        j += 1
+                    else:
+                        break
+                toks.append((text[i:j], lineno))
+                i = j
+                continue
+            nxt = text[i + 1] if i + 1 < m else ""
+            if (c == ":" and nxt == ":") or (c == "+" and nxt == "="):
+                toks.append((c + nxt, lineno))
+                i += 2
+                continue
+            toks.append((c, lineno))
+            i += 1
+    return toks
+
+def is_float_literal(t):
+    return bool(t) and t[0].isdigit() and ("." in t or t.endswith("f32") or t.endswith("f64"))
+
+# --------------------------------------------------------------- config
+
+def parse_config(text):
+    cfg = {"trajectory": [], "blessed": [], "unsafe_files": [], "allow": {}}
+    section = None
+    pending = ""
+
+    def closed(s):
+        in_str, opens, seen = False, 0, False
+        for ch in s:
+            if ch == '"':
+                in_str = not in_str
+            elif ch == "[" and not in_str:
+                opens += 1
+                seen = True
+            elif ch == "]" and not in_str:
+                opens -= 1
+        return seen and opens == 0
+
+    for raw in text.splitlines():
+        in_str, line = False, []
+        for ch in raw:
+            if ch == '"':
+                in_str = not in_str
+            if ch == "#" and not in_str:
+                break
+            line.append(ch)
+        line = "".join(line).strip()
+        if not line:
+            continue
+        if pending:
+            pending += " " + line
+            if not closed(pending):
+                continue
+            line, pending = pending, ""
+        if line.startswith("["):
+            section = line.strip("[]").strip()
+            continue
+        key, _, val = line.partition("=")
+        key, val = key.strip(), val.strip()
+        if not closed(val):
+            pending = line
+            continue
+        items = re.findall(r'"([^"]*)"', val)
+        if section == "scope" and key == "trajectory":
+            cfg["trajectory"] = items
+        elif section == "scope" and key == "blessed-reductions":
+            cfg["blessed"] = items
+        elif section == "unsafe-registry" and key == "files":
+            cfg["unsafe_files"] = items
+        elif section == "allow" and key in RULE_IDS:
+            cfg["allow"][key] = items
+        else:
+            raise ValueError(f"unknown config key [{section}] {key}")
+    return cfg
+
+def path_matches(path, pat):
+    if pat.endswith("/"):
+        return path == pat[:-1] or path.startswith(pat)
+    return path == pat
+
+def any_match(path, pats):
+    return any(path_matches(path, p) for p in pats)
+
+# ------------------------------------------------------------- scan_file
+
+def scan_file(rel, src, cfg):
+    code, comment = strip(src)
+    toks = lex(code)
+    nlines = len(code)
+
+    def tt(i):
+        return toks[i][0] if 0 <= i < len(toks) else ""
+
+    # structural pass
+    end_depth = [None] * nlines
+    depth = 0
+    loop_pending = False
+    scope_is_loop = []
+    test_ranges = []
+    armed = "no"  # no | attr | mod
+    test_stack = []
+    tok_in_loop = [False] * len(toks)
+
+    for ti, (t, line) in enumerate(toks):
+        if t == "{":
+            scope_is_loop.append(loop_pending)
+            loop_pending = False
+            if armed == "mod":
+                test_stack.append((depth, line))
+                armed = "no"
+            depth += 1
+        elif t == "}":
+            depth = max(0, depth - 1)
+            if scope_is_loop:
+                scope_is_loop.pop()
+            if test_stack and depth == test_stack[-1][0]:
+                _, start = test_stack.pop()
+                test_ranges.append((start, line))
+        elif t in ("for", "while", "loop"):
+            loop_pending = True
+        elif t == ";":
+            loop_pending = False
+            if armed == "mod":
+                armed = "no"
+        if (
+            t == "#"
+            and tt(ti + 1) == "["
+            and tt(ti + 2) == "cfg"
+            and tt(ti + 3) == "("
+            and tt(ti + 4) == "test"
+            and tt(ti + 5) == ")"
+            and tt(ti + 6) == "]"
+        ):
+            armed = "attr"
+        elif armed == "attr" and t == "mod":
+            armed = "mod"
+        elif armed == "attr" and t in ("fn", "use", "struct", "impl", "enum", "const", "static"):
+            armed = "no"
+        tok_in_loop[ti] = any(scope_is_loop)
+        end_depth[line] = depth
+    for _, start in test_stack:
+        test_ranges.append((start, nlines - 1))
+    last = 0
+    for idx in range(nlines):
+        if end_depth[idx] is None:
+            end_depth[idx] = last
+        else:
+            last = end_depth[idx]
+
+    def in_test(line):
+        return any(s <= line <= e for s, e in test_ranges)
+
+    def float_var_live(name, at):
+        live = []
+        d = 0
+        for ti in range(min(at, len(toks))):
+            t = toks[ti][0]
+            if t == "{":
+                d += 1
+            elif t == "}":
+                d = max(0, d - 1)
+                live = [(nm, dd) for nm, dd in live if dd <= d]
+            elif t == "let" and tt(ti + 1) == "mut":
+                j = ti + 2
+                nm = tt(j)
+                if nm and (nm[0].isalpha() or nm[0] == "_"):
+                    j += 1
+                    isf = False
+                    if tt(j) == ":":
+                        if tt(j + 1) in ("f32", "f64"):
+                            isf = True
+                        while j < len(toks) and tt(j) not in ("=", ";"):
+                            j += 1
+                    if tt(j) == "=" and is_float_literal(tt(j + 1)):
+                        isf = True
+                    if isf:
+                        live.append((nm, d))
+        return any(nm == name for nm, _ in live)
+
+    # waivers
+    waivers, bad_waivers = [], []
+    for line, c in enumerate(comment):
+        pos = c.find("audit:allow(")
+        if pos < 0:
+            continue
+        rest = c[pos + len("audit:allow("):]
+        close = rest.find(")")
+        if close < 0:
+            bad_waivers.append((line, "malformed audit:allow waiver (missing `)`)"))
+            continue
+        rule = rest[:close].strip()
+        if rule not in RULE_IDS:
+            bad_waivers.append((line, f"audit:allow names unknown rule `{rule}`"))
+            continue
+        after = rest[close + 1:].lstrip()
+        reason = after[1:].strip() if after.startswith(":") else ""
+        if not reason:
+            bad_waivers.append((line, f"audit:allow({rule}) without a reason"))
+            continue
+        waivers.append((rule, line, not code[line].strip()))
+
+    coverage = {}
+    for wi, (rule, wline, standalone) in enumerate(waivers):
+        if not standalone:
+            continue
+        wdepth = 0 if wline == 0 else end_depth[wline]
+        end = wline
+        for mline in range(wline + 1, nlines):
+            trimmed = code[mline].rstrip()
+            if not trimmed.strip():
+                continue
+            end = mline
+            if end_depth[mline] <= wdepth and (trimmed.endswith(";") or trimmed.endswith("}")):
+                break
+        coverage[wi] = (wline + 1, end)
+
+    def waived(rule, line):
+        for wi, (r, wline, standalone) in enumerate(waivers):
+            if r != rule:
+                continue
+            if not standalone:
+                if wline == line:
+                    return True
+            else:
+                s, e = coverage[wi]
+                if s <= line <= e:
+                    return True
+        return False
+
+    traj = any_match(rel, cfg["trajectory"])
+    r1 = traj and not any_match(rel, cfg["blessed"]) and not any_match(rel, cfg["allow"].get("R1", []))
+    r2 = traj and not any_match(rel, cfg["allow"].get("R2", []))
+
+    findings = []
+
+    def push(rule, line0, msg):
+        f = (rule, rel, line0 + 1, msg)
+        if f not in findings:
+            findings.append(f)
+
+    for line, msg in bad_waivers:
+        push("R4", line, msg)
+
+    if r1 or r2:
+        for i, (t, line) in enumerate(toks):
+            if in_test(line):
+                continue
+            if r1 and not waived("R1", line):
+                if t == "sum" and tt(i + 1) == "::" and tt(i + 2) == "<" and tt(i + 3) in ("f32", "f64"):
+                    push("R1", line, f"sum::<{tt(i+3)}>() turbofish")
+                if t == "sum" and tt(i + 1) == "(" and tt(i + 2) == ")" and i > 0 and tt(i - 1) == ".":
+                    j, ascribed = i, False
+                    while j > 0:
+                        p = tt(j - 1)
+                        if p in (";", "{", "}"):
+                            break
+                        if p == ":" and tt(j) in ("f32", "f64"):
+                            ascribed = True
+                        j -= 1
+                    if ascribed:
+                        push("R1", line, "float-typed .sum()")
+                if t == "fold" and tt(i + 1) == "(" and is_float_literal(tt(i + 2)):
+                    push("R1", line, "float-seeded fold")
+                if t == "+=" and tok_in_loop[i] and i >= 1:
+                    lhs = tt(i - 1)
+                    simple = bool(lhs) and (lhs[0].isalpha() or lhs[0] == "_") and (
+                        i < 2 or tt(i - 2) not in (".", "]")
+                    )
+                    if simple:
+                        floaty = float_var_live(lhs, i)
+                        if not floaty:
+                            j = i + 1
+                            while j < len(toks) and tt(j) != ";" and j < i + 48:
+                                if is_float_literal(tt(j)) or (
+                                    tt(j) == "as" and tt(j + 1) in ("f32", "f64")
+                                ):
+                                    floaty = True
+                                    break
+                                j += 1
+                        if floaty:
+                            push("R1", line, f"float accumulation `{lhs} += ...` in a loop")
+            if r2 and not waived("R2", line):
+                if t in ("HashMap", "HashSet", "Instant", "SystemTime", "thread_rng"):
+                    push("R2", line, f"`{t}` in trajectory code")
+                elif t == "env" and tt(i + 1) == "::" and tt(i + 2) in ("var", "var_os", "vars"):
+                    push("R2", line, f"env::{tt(i+2)} in trajectory code")
+
+    # R3
+    def has_safety(line):
+        j = line
+        while j > 0:
+            prev = code[j - 1].strip()
+            if not prev:
+                break
+            if prev.endswith(";") or prev.endswith("{") or prev.endswith("}"):
+                break
+            if prev.startswith("#"):
+                j -= 1
+                continue
+            j -= 1
+        k = j
+        while k > 0:
+            ca, cc = code[k - 1].strip(), comment[k - 1]  # cc untrimmed
+            if not ca and cc:
+                if "SAFETY:" in cc:
+                    return True
+                k -= 1
+                continue
+            if ca.startswith("#") and not cc.strip():
+                k -= 1
+                continue
+            return False
+        return False
+
+    unsafe_lines = []
+    for t, line in toks:
+        if t == "unsafe" and line not in unsafe_lines:
+            unsafe_lines.append(line)
+    registered = any_match(rel, cfg["unsafe_files"])
+    for line in unsafe_lines:
+        if not registered:
+            push("R3", line, "unsafe outside registry")
+        if not has_safety(line):
+            push("R3", line, "unsafe without SAFETY comment")
+
+    # R4
+    def is_doc(body):
+        return body.startswith("/") or body.startswith("!")
+
+    def allow_has_reason(line):
+        trailing = comment[line].strip()
+        if trailing and not is_doc(trailing):
+            return True
+        k = line
+        while k > 0:
+            ca, cc = code[k - 1].strip(), comment[k - 1].strip()
+            if ca.startswith("#") and not cc:
+                k -= 1
+                continue
+            if not ca and cc:
+                return not is_doc(cc)
+            return False
+        return False
+
+    for i, (t, line) in enumerate(toks):
+        if t != "#":
+            continue
+        j = i + 1
+        if tt(j) == "!":
+            j += 1
+        if tt(j) == "[" and tt(j + 1) == "allow" and tt(j + 2) == "(" and not allow_has_reason(line):
+            push("R4", line, "#[allow(...)] without a reason")
+
+    return findings
+
+# ----------------------------------------------------------------- main
+
+SCAN_ROOTS = ("rust/src", "rust/tests", "rust/benches")
+
+def audit_repo(root, cfg):
+    findings = []
+    for sub in SCAN_ROOTS:
+        base = os.path.join(root, sub)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames.sort()
+            for fname in sorted(filenames):
+                if not fname.endswith(".rs"):
+                    continue
+                path = os.path.join(dirpath, fname)
+                rel = os.path.relpath(path, root).replace(os.sep, "/")
+                with open(path, encoding="utf-8") as fh:
+                    findings.extend(scan_file(rel, fh.read(), cfg))
+    return sorted(findings, key=lambda f: (f[1], f[2]))
+
+def expect(cond, label, detail=""):
+    status = "ok" if cond else "FAIL"
+    print(f"  [{status}] {label}" + (f" — {detail}" if detail and not cond else ""))
+    return cond
+
+def main():
+    root = "."
+    args = sys.argv[1:]
+    if args[:1] == ["--root"]:
+        root = args[1]
+    with open(os.path.join(root, "audit.toml"), encoding="utf-8") as fh:
+        cfg = parse_config(fh.read())
+
+    ok = True
+    print("repo tree:")
+    findings = audit_repo(root, cfg)
+    ok &= expect(
+        not findings,
+        "repo tree passes its own audit",
+        "\n".join(f"{f[1]}:{f[2]}: [{f[0]}] {f[3]}" for f in findings),
+    )
+    if findings:
+        for f in findings:
+            print(f"    {f[1]}:{f[2]}: [{f[0]}] {f[3]}")
+
+    corpus_dir = os.path.join(root, "tools/seesaw-audit/tests/corpus")
+    tcfg = {
+        "trajectory": ["traj/"],
+        "blessed": ["traj/simd/"],
+        "unsafe_files": ["traj/registered.rs"],
+        "allow": {},
+    }
+
+    def corpus(name):
+        with open(os.path.join(corpus_dir, name), encoding="utf-8") as fh:
+            return fh.read()
+
+    print("corpus (mirrors corpus_test.rs):")
+    f = scan_file("traj/r1_bad.rs", corpus("r1_bad.rs"), tcfg)
+    ok &= expect([x[2] for x in f] == [5, 9, 14, 20] and all(x[0] == "R1" for x in f),
+                 "r1_bad fires at 5,9,14,20", str(f))
+    f = scan_file("traj/simd/r1_bad.rs", corpus("r1_bad.rs"), tcfg)
+    ok &= expect(not f, "r1_bad silent on blessed path", str(f))
+    f = scan_file("util/r1_bad.rs", corpus("r1_bad.rs"), tcfg)
+    ok &= expect(not f, "r1_bad silent outside trajectory", str(f))
+    f = scan_file("traj/r2_bad.rs", corpus("r2_bad.rs"), tcfg)
+    ok &= expect([x[2] for x in f] == [5, 13, 18, 23, 27] and all(x[0] == "R2" for x in f),
+                 "r2_bad fires at 5,13,18,23,27", str(f))
+    f = scan_file("traj/r3_bad.rs", corpus("r3_bad.rs"), tcfg)
+    ok &= expect([x[2] for x in f] == [7, 7] and all(x[0] == "R3" for x in f),
+                 "r3_bad fires twice at 7", str(f))
+    f = scan_file("traj/registered.rs", corpus("r3_bad.rs"), tcfg)
+    ok &= expect(len(f) == 1 and f[0][0] == "R3" and "SAFETY" in f[0][3],
+                 "r3_bad registered still needs SAFETY", str(f))
+    f = scan_file("traj/r4_bad.rs", corpus("r4_bad.rs"), tcfg)
+    ok &= expect([x[2] for x in f] == [5] and f[0][0] == "R4", "r4_bad fires at 5", str(f))
+    f = scan_file("traj/clean.rs", corpus("clean.rs"), tcfg)
+    ok &= expect(not f, "clean fixture is clean", str(f))
+
+    print("inline semantics (mirrors corpus_test.rs):")
+    src = (
+        "pub fn first(xs: &[u32]) -> u32 {\n"
+        "    // SAFETY: caller guarantees xs is non-empty (checked at pool entry).\n"
+        "    unsafe { *xs.get_unchecked(0) }\n"
+        "}\n"
+    )
+    ok &= expect(not scan_file("traj/registered.rs", src, tcfg), "SAFETY comment satisfies R3")
+    src = (
+        "pub fn pair(xs: &[u32]) -> (u32, u32) {\n"
+        "    // SAFETY: caller guarantees len >= 2.\n"
+        "    let a = unsafe { *xs.get_unchecked(0) };\n"
+        "    let b = unsafe { *xs.get_unchecked(1) };\n"
+        "    (a, b)\n"
+        "}\n"
+    )
+    f = scan_file("traj/registered.rs", src, tcfg)
+    ok &= expect([x[2] for x in f] == [4], "sibling unsafe needs its own SAFETY", str(f))
+    src = (
+        "pub fn widen(src: &dyn std::fmt::Debug) -> u32 {\n"
+        "    // SAFETY: only the lifetime is erased; the drain loop below keeps\n"
+        "    // the borrow alive until every worker acks the done channel.\n"
+        "    let _src_static: &'static dyn std::fmt::Debug =\n"
+        "        unsafe { std::mem::transmute(src) };\n"
+        "    0\n"
+        "}\n"
+    )
+    ok &= expect(not scan_file("traj/registered.rs", src, tcfg),
+                 "SAFETY attaches across a multi-line statement")
+    src = "pub fn s(xs: &[f32]) -> f32 {\n    xs.iter().sum::<f32>() // audit:allow(R1)\n}\n"
+    f = scan_file("traj/w.rs", src, tcfg)
+    rules = {x[0] for x in f}
+    ok &= expect(rules == {"R1", "R4"}, "reasonless waiver: R1 still fires + R4 reported", str(f))
+    src = (
+        "pub fn s(xs: &[f32]) -> (f32, f32) {\n"
+        "    // audit:allow(R1): fixed lane order pinned by the caller\n"
+        "    let a: f32 = xs.iter().sum();\n"
+        "    let b: f32 = xs.iter().sum();\n"
+        "    (a, b)\n"
+        "}\n"
+    )
+    f = scan_file("traj/w.rs", src, tcfg)
+    ok &= expect([x[2] for x in f] == [4], "standalone waiver covers exactly one statement", str(f))
+    src = (
+        "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n"
+        "        let mut m = std::collections::HashMap::new();\n"
+        "        m.insert(1u32, 1u32);\n"
+        "        let s: f64 = [1.0f64].iter().sum();\n"
+        "        assert!(s > 0.0 && m.len() == 1);\n    }\n}\n"
+    )
+    ok &= expect(not scan_file("traj/t.rs", src, tcfg), "cfg(test) modules exempt from R1/R2")
+    trailing = "#[allow(dead_code)] // exercised only by the fixture generator\nfn x() {}\n"
+    preceding = "// exercised only by the fixture generator\n#[allow(dead_code)]\nfn x() {}\n"
+    ok &= expect(
+        not scan_file("traj/ok.rs", trailing, tcfg) and not scan_file("traj/ok.rs", preceding, tcfg),
+        "R4 passes with trailing or preceding plain comment",
+    )
+
+    print("overall:", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1135 @@
+//! seesaw-audit: the repo's determinism & soundness contract as a
+//! machine-checked source scan.
+//!
+//! Every claim the `seesaw` crate makes — golden traces, thread/bucket/
+//! world partition invariance, bit-exact preemption recovery — rests on
+//! floating-point reductions happening in one pinned order and on the
+//! worker pool's lifetime-erased `unsafe` staying inside its drain-
+//! before-return contract. Runtime tests check trajectories; this pass
+//! checks the *source patterns* that could silently break them, so the
+//! pattern cannot merge even when no test happens to cover it.
+//!
+//! Rules (see [`explain`] for the full rationale text):
+//!
+//! - **R1** — no ad-hoc float reductions (`sum::<f32/f64>()`, float-typed
+//!   `.sum()`, float-seeded `fold`, float `+=` loops) in trajectory
+//!   modules outside the blessed `simd/` tree kernels.
+//! - **R2** — no `HashMap`/`HashSet`, `Instant`, `SystemTime`,
+//!   `thread_rng`, or `env::var*` in trajectory modules.
+//! - **R3** — every `unsafe` carries a `// SAFETY:` comment directly
+//!   above its statement and lives in a file registered in `audit.toml`.
+//! - **R4** — every `#[allow(...)]` carries a plain-comment reason
+//!   (doc comments don't count: they document the item, not the waiver).
+//!
+//! The scanner is deliberately token-aware but not a parser: it strips
+//! comments/strings, lexes identifiers and the handful of operators the
+//! rules need, tracks brace depth for loop/test-module scoping, and
+//! works line-by-line for comment adjacency. Known limitations are
+//! documented in DESIGN.md §14 (e.g. R1's `+=` detector only tracks
+//! simple identifiers, not field projections).
+//!
+//! Waivers: `// audit:allow(R1): <reason>` on the offending line
+//! suppresses that line; on its own line it covers the next statement
+//! or block (through the first line that closes back to the waiver's
+//! brace depth and ends with `;` or `}`). An empty reason is itself a
+//! finding (R4): a waiver without a why is how contracts rot.
+
+#![forbid(unsafe_code)]
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------------------
+// Findings
+// ---------------------------------------------------------------------------
+
+/// One rule violation at a source location. `line` is 1-based.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+pub const RULE_IDS: [&str; 4] = ["R1", "R2", "R3", "R4"];
+
+/// Rationale text for `--explain RULE`.
+pub fn explain(rule: &str) -> Option<&'static str> {
+    match rule {
+        "R1" => Some(
+            "R1 — pinned-order float reductions only.\n\
+             \n\
+             The LR<->batch equivalence (Seesaw / Smith et al. 2017) is validated\n\
+             by bit-exact replay: golden traces, partition-invariance properties,\n\
+             and preemption recovery all compare f32 bit patterns. Float addition\n\
+             is not associative, so ANY reduction whose order is chosen ad hoc\n\
+             (iterator `.sum()`, a float-seeded `fold`, a `+=` accumulation loop)\n\
+             is a latent trajectory fork: it works until someone reorders an\n\
+             iterator, splits a loop, or vectorizes differently per target.\n\
+             \n\
+             The only sanctioned reduction shapes live in `rust/src/simd/`\n\
+             (fixed-shape lane/tree kernels, LANES=8 / BLOCK=4096), which the\n\
+             partition-invariance tests pin. Everywhere else in trajectory\n\
+             modules, reductions must either call those kernels or carry an\n\
+             `// audit:allow(R1): <why this order is pinned>` waiver explaining\n\
+             why the iteration order is fixed by construction.\n\
+             \n\
+             Detectors: `sum::<f32|f64>()` turbofish; `.sum()` in a statement\n\
+             with an explicit f32/f64 type ascription; `fold(<float literal>`;\n\
+             `+=` inside a loop where the target is a declared float accumulator\n\
+             or the right-hand side mentions a float literal or `as f32/f64`.\n\
+             Limitation: the `+=` detector tracks simple identifiers only\n\
+             (`acc += ...`), not field projections (`self.acc += ...`).",
+        ),
+        "R2" => Some(
+            "R2 — no ambient nondeterminism in trajectory modules.\n\
+             \n\
+             `HashMap`/`HashSet` iteration order is randomized per process\n\
+             (SipHash keying), `Instant`/`SystemTime` leak wall-clock into\n\
+             control flow, `thread_rng` is seeded from the OS, and `env::var`\n\
+             branches make the trajectory a function of the shell. None of\n\
+             these may appear in the modules that feed the training trajectory\n\
+             (`schedule/`, `linreg/`, `coordinator/`, `collective/`,\n\
+             `metrics/gns.rs`, `data/`). Ordered containers (`BTreeMap`,\n\
+             sorted `Vec`) and the repo's own SplitMix-style seeded RNGs are\n\
+             the sanctioned replacements. Bench/util code that legitimately\n\
+             needs wall-clock is allowlisted per-rule in `audit.toml` and\n\
+             double-enforced by clippy's disallowed-methods list.",
+        ),
+        "R3" => Some(
+            "R3 — unsafe is registered and justified, site by site.\n\
+             \n\
+             The worker pool erases lifetimes (raw-parts slice reconstruction,\n\
+             a &dyn -> &'static dyn transmute) so borrowed gradient state can\n\
+             cross thread boundaries; soundness hangs entirely on the drain-\n\
+             before-return done-channel contract. That is too much load for\n\
+             unreviewed `unsafe` anywhere else in the tree. Every `unsafe`\n\
+             block/impl must (a) live in a file listed under\n\
+             `[unsafe-registry]` in `audit.toml`, and (b) carry a `// SAFETY:`\n\
+             comment in the contiguous comment block directly above the\n\
+             statement or impl containing it — one comment per site, stating\n\
+             the invariant that makes the site sound. Files outside the\n\
+             registry carry `#![forbid(unsafe_code)]` so the compiler enforces\n\
+             the same boundary. Miri and TSan CI jobs exercise the registered\n\
+             sites dynamically; this rule keeps the registry honest.",
+        ),
+        "R4" => Some(
+            "R4 — every #[allow(...)] names its rule and its reason.\n\
+             \n\
+             An `#[allow(lint)]` names the rule it waives by construction; the\n\
+             missing half is WHY, and an unexplained allow is where lint debt\n\
+             hides. Each `#[allow(...)]`/`#![allow(...)]` must carry a plain\n\
+             `//` comment (same line, or the comment block directly above the\n\
+             attribute) stating the reason. Doc comments (`///`, `//!`) do not\n\
+             count: they document the item, not the waiver. The same standard\n\
+             applies to this tool's own waivers — `// audit:allow(Rn):` with\n\
+             an empty reason is reported under R4.",
+        ),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Config (audit.toml — hand-rolled TOML subset: [section], key = [ "..", ".." ])
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    /// Path prefixes (repo-relative, `/`-separated) of trajectory modules.
+    pub trajectory: Vec<String>,
+    /// Prefixes exempt from R1 (the blessed reduction kernels).
+    pub blessed: Vec<String>,
+    /// Files allowed to contain `unsafe` (R3 registry).
+    pub unsafe_files: Vec<String>,
+    /// Per-rule allowlists: (rule id, path prefixes).
+    pub allow: Vec<(String, Vec<String>)>,
+}
+
+/// `pat` ending in `/` matches any path under that directory; otherwise
+/// it must match the path exactly. Paths are repo-relative with `/`.
+fn path_matches(path: &str, pat: &str) -> bool {
+    if let Some(dir) = pat.strip_suffix('/') {
+        path == dir || path.starts_with(pat)
+    } else {
+        path == pat
+    }
+}
+
+impl Config {
+    pub fn in_trajectory(&self, path: &str) -> bool {
+        self.trajectory.iter().any(|p| path_matches(path, p))
+    }
+    pub fn is_blessed(&self, path: &str) -> bool {
+        self.blessed.iter().any(|p| path_matches(path, p))
+    }
+    pub fn in_unsafe_registry(&self, path: &str) -> bool {
+        self.unsafe_files.iter().any(|p| path_matches(path, p))
+    }
+    pub fn is_allowed(&self, rule: &str, path: &str) -> bool {
+        self.allow
+            .iter()
+            .any(|(r, pats)| r == rule && pats.iter().any(|p| path_matches(path, p)))
+    }
+
+    /// Parse the `audit.toml` subset. Grammar: `[section]` headers,
+    /// `key = [ "a", "b" ]` string arrays (arrays may span lines),
+    /// `#` comments. Anything else is an error — better to fail the
+    /// audit loudly than to silently drop a registry entry.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        // A `key = [` without its closing `]` swallows following lines
+        // until the bracket closes.
+        let mut pending = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_toml_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            let logical = if pending.is_empty() {
+                line
+            } else {
+                pending = format!("{} {}", pending, line);
+                if !toml_array_closed(&pending) {
+                    continue;
+                }
+                std::mem::take(&mut pending)
+            };
+            if logical.starts_with('[') {
+                let name = logical
+                    .strip_prefix('[')
+                    .and_then(|s| s.strip_suffix(']'))
+                    .ok_or_else(|| format!("audit.toml:{}: malformed section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let eq = logical
+                .find('=')
+                .ok_or_else(|| format!("audit.toml:{}: expected `key = [...]`", lineno + 1))?;
+            let key = logical[..eq].trim().to_string();
+            let val = logical[eq + 1..].trim().to_string();
+            if !toml_array_closed(&val) {
+                pending = logical;
+                continue;
+            }
+            let items =
+                parse_toml_array(&val).map_err(|e| format!("audit.toml:{}: {}", lineno + 1, e))?;
+            match (section.as_str(), key.as_str()) {
+                ("scope", "trajectory") => cfg.trajectory = items,
+                ("scope", "blessed-reductions") => cfg.blessed = items,
+                ("unsafe-registry", "files") => cfg.unsafe_files = items,
+                ("allow", rule) if RULE_IDS.contains(&rule) => {
+                    cfg.allow.push((rule.to_string(), items));
+                }
+                (s, k) => {
+                    return Err(format!(
+                        "audit.toml:{}: unknown key `{}` in section `[{}]`",
+                        lineno + 1,
+                        k,
+                        s
+                    ))
+                }
+            }
+        }
+        if !pending.is_empty() {
+            return Err("audit.toml: unterminated array".to_string());
+        }
+        Ok(cfg)
+    }
+}
+
+fn strip_toml_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn toml_array_closed(s: &str) -> bool {
+    // Balanced-bracket check outside strings; arrays here never nest.
+    let mut in_str = false;
+    let mut open = 0i32;
+    let mut seen_open = false;
+    for c in s.chars() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => {
+                open += 1;
+                seen_open = true;
+            }
+            ']' if !in_str => open -= 1,
+            _ => {}
+        }
+    }
+    seen_open && open == 0
+}
+
+fn parse_toml_array(s: &str) -> Result<Vec<String>, String> {
+    let inner = s
+        .trim()
+        .strip_prefix('[')
+        .and_then(|t| t.strip_suffix(']'))
+        .ok_or_else(|| format!("expected string array, got `{}`", s))?;
+    let mut out = Vec::new();
+    let mut rest = inner.trim();
+    while !rest.is_empty() {
+        let body = rest
+            .strip_prefix('"')
+            .ok_or_else(|| format!("expected quoted string in array at `{}`", rest))?;
+        let end = body
+            .find('"')
+            .ok_or_else(|| "unterminated string in array".to_string())?;
+        out.push(body[..end].to_string());
+        rest = body[end + 1..].trim();
+        rest = rest.strip_prefix(',').unwrap_or(rest).trim();
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Source stripping: per-line code view + comment view
+// ---------------------------------------------------------------------------
+
+struct Stripped {
+    /// Line text with comments, string contents, and char literals blanked.
+    code: Vec<String>,
+    /// The comment text of each line (without the `//` / `/*` markers).
+    comment: Vec<String>,
+}
+
+fn strip(src: &str) -> Stripped {
+    #[derive(PartialEq, Clone, Copy)]
+    enum S {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+    }
+    let mut st = S::Code;
+    let chars: Vec<char> = src.chars().collect();
+    let mut code = Vec::new();
+    let mut comment = Vec::new();
+    let mut cur_code = String::new();
+    let mut cur_comment = String::new();
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if st == S::LineComment {
+                st = S::Code;
+            }
+            code.push(std::mem::take(&mut cur_code));
+            comment.push(std::mem::take(&mut cur_comment));
+            i += 1;
+            continue;
+        }
+        match st {
+            S::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = S::LineComment;
+                    // Marker space: a lone `//` separator line must yield a
+                    // non-empty comment string so `has_safety_comment` can
+                    // tell it apart from a truly blank line (every consumer
+                    // that cares about *content* trims first).
+                    cur_comment.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && next == Some('*') {
+                    st = S::BlockComment(1);
+                    cur_code.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    st = S::Str;
+                    cur_code.push('"');
+                    i += 1;
+                    continue;
+                }
+                // Raw strings r"...", r#"..."#, br#"..."# — `r`/`b` must
+                // start an identifier (not be the tail of one).
+                let prev_ident = i > 0 && is_ident_char(chars[i - 1]);
+                if !prev_ident && (c == 'r' || (c == 'b' && next == Some('r'))) {
+                    let mut j = if c == 'b' { i + 2 } else { i + 1 };
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        st = S::RawStr(hashes);
+                        cur_code.push('"');
+                        i = j + 1;
+                        continue;
+                    }
+                }
+                if c == '\'' {
+                    // Char literal vs lifetime: 'x' / '\n' close with a
+                    // quote; 'static does not.
+                    let mut j = i + 1;
+                    if chars.get(j) == Some(&'\\') {
+                        j += 2;
+                        // Escapes of any width: '\u{1F4A9}'
+                        while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+                            j += 1;
+                        }
+                    } else if j < chars.len() {
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+                        cur_code.push_str("' '");
+                        i = j + 1;
+                        continue;
+                    }
+                    cur_code.push('\'');
+                    i += 1;
+                    continue;
+                }
+                cur_code.push(c);
+                i += 1;
+            }
+            S::LineComment => {
+                cur_comment.push(c);
+                i += 1;
+            }
+            S::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    st = S::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    st = if depth == 1 {
+                        S::Code
+                    } else {
+                        S::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    cur_comment.push(c);
+                    i += 1;
+                }
+            }
+            S::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    st = S::Code;
+                    cur_code.push('"');
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            S::RawStr(hashes) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..hashes as usize {
+                        if chars.get(i + 1 + k) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        st = S::Code;
+                        cur_code.push('"');
+                        i += 1 + hashes as usize;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+    code.push(cur_code);
+    comment.push(cur_comment);
+    Stripped { code, comment }
+}
+
+// ---------------------------------------------------------------------------
+// Lexer over the code view
+// ---------------------------------------------------------------------------
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+#[derive(Debug, Clone)]
+struct Tok {
+    t: String,
+    /// 0-based line index.
+    line: usize,
+}
+
+fn lex(code: &[String]) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    for (line, text) in code.iter().enumerate() {
+        let cs: Vec<char> = text.chars().collect();
+        let mut i = 0usize;
+        while i < cs.len() {
+            let c = cs[i];
+            if c.is_whitespace() || c == '"' || c == '\'' {
+                i += 1;
+                continue;
+            }
+            if c.is_ascii_alphabetic() || c == '_' {
+                let start = i;
+                while i < cs.len() && is_ident_char(cs[i]) {
+                    i += 1;
+                }
+                toks.push(Tok {
+                    t: cs[start..i].iter().collect(),
+                    line,
+                });
+                continue;
+            }
+            if c.is_ascii_digit() {
+                let start = i;
+                i += 1;
+                while i < cs.len() {
+                    let d = cs[i];
+                    if is_ident_char(d) {
+                        i += 1;
+                    } else if d == '.' && cs.get(i + 1).map_or(false, |n| n.is_ascii_digit()) {
+                        // `1.5` continues the number; `0..n` does not.
+                        i += 1;
+                    } else {
+                        break;
+                    }
+                }
+                toks.push(Tok {
+                    t: cs[start..i].iter().collect(),
+                    line,
+                });
+                continue;
+            }
+            // Two-char operators the rules care about.
+            let next = cs.get(i + 1).copied();
+            if (c == ':' && next == Some(':')) || (c == '+' && next == Some('=')) {
+                toks.push(Tok {
+                    t: [c, next.unwrap()].iter().collect(),
+                    line,
+                });
+                i += 2;
+                continue;
+            }
+            toks.push(Tok {
+                t: c.to_string(),
+                line,
+            });
+            i += 1;
+        }
+    }
+    toks
+}
+
+fn is_float_literal(t: &str) -> bool {
+    let b = t.as_bytes();
+    if b.is_empty() || !b[0].is_ascii_digit() {
+        return false;
+    }
+    t.contains('.') || t.ends_with("f32") || t.ends_with("f64")
+}
+
+// ---------------------------------------------------------------------------
+// Waivers
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Waiver {
+    rule: String,
+    /// 0-based line of the waiver comment.
+    line: usize,
+    /// True when the waiver comment stands on its own line (covers the
+    /// following statement/block); false = trailing (covers its line).
+    standalone: bool,
+}
+
+fn collect_waivers(st: &Stripped) -> (Vec<Waiver>, Vec<(usize, String)>) {
+    let mut waivers = Vec::new();
+    let mut bad = Vec::new();
+    for (line, c) in st.comment.iter().enumerate() {
+        let Some(pos) = c.find("audit:allow(") else {
+            continue;
+        };
+        let rest = &c[pos + "audit:allow(".len()..];
+        let Some(close) = rest.find(')') else {
+            bad.push((line, "malformed audit:allow waiver (missing `)`)".to_string()));
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        if !RULE_IDS.contains(&rule.as_str()) {
+            bad.push((line, format!("audit:allow names unknown rule `{}`", rule)));
+            continue;
+        }
+        let after = rest[close + 1..].trim_start();
+        let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+        if reason.is_empty() {
+            bad.push((
+                line,
+                format!("audit:allow({}) without a reason — add `: <why>`", rule),
+            ));
+            continue;
+        }
+        let standalone = st.code[line].trim().is_empty();
+        waivers.push(Waiver {
+            rule,
+            line,
+            standalone,
+        });
+    }
+    (waivers, bad)
+}
+
+// ---------------------------------------------------------------------------
+// The per-file analysis
+// ---------------------------------------------------------------------------
+
+/// Scan one file's source. `rel` is the repo-relative path with `/`
+/// separators (used for scoping and in diagnostics).
+pub fn scan_file(rel: &str, src: &str, cfg: &Config) -> Vec<Finding> {
+    let st = strip(src);
+    let toks = lex(&st.code);
+    let nlines = st.code.len();
+    let tt = |i: usize| toks.get(i).map(|t| t.t.as_str()).unwrap_or("");
+
+    // ---- structural pass: brace depth per line, loop scopes, cfg(test)
+    // regions -----------------------------------------------------------
+    let mut end_depth = vec![usize::MAX; nlines];
+    let mut depth = 0usize;
+    let mut loop_pending = false;
+    // Each `{` pushes whether it opened a loop body.
+    let mut scope_is_loop: Vec<bool> = Vec::new();
+    // 0-based inclusive line ranges under `#[cfg(test)] mod …`.
+    let mut test_ranges: Vec<(usize, usize)> = Vec::new();
+    #[derive(PartialEq, Clone, Copy)]
+    enum Armed {
+        No,
+        Attr,
+        Mod,
+    }
+    let mut armed = Armed::No;
+    // (open depth, start line) of active cfg(test) mod bodies.
+    let mut test_stack: Vec<(usize, usize)> = Vec::new();
+    // Whether each token sits inside some loop body, for the R1 `+=` rule.
+    let mut tok_in_loop = vec![false; toks.len()];
+
+    for (ti, tok) in toks.iter().enumerate() {
+        match tok.t.as_str() {
+            "{" => {
+                scope_is_loop.push(loop_pending);
+                loop_pending = false;
+                if armed == Armed::Mod {
+                    test_stack.push((depth, tok.line));
+                    armed = Armed::No;
+                }
+                depth += 1;
+            }
+            "}" => {
+                depth = depth.saturating_sub(1);
+                scope_is_loop.pop();
+                if let Some(&(open_depth, start)) = test_stack.last() {
+                    if depth == open_depth {
+                        test_stack.pop();
+                        test_ranges.push((start, tok.line));
+                    }
+                }
+            }
+            "for" | "while" | "loop" => loop_pending = true,
+            ";" => {
+                loop_pending = false;
+                if armed == Armed::Mod {
+                    // `#[cfg(test)] mod x;` — out-of-line module, no body.
+                    armed = Armed::No;
+                }
+            }
+            _ => {}
+        }
+        // cfg(test) arming: `#` `[` `cfg` `(` `test` `)` `]`, then
+        // optional `pub`, then `mod`, then `{` of the module body.
+        let t = tok.t.as_str();
+        if t == "#"
+            && tt(ti + 1) == "["
+            && tt(ti + 2) == "cfg"
+            && tt(ti + 3) == "("
+            && tt(ti + 4) == "test"
+            && tt(ti + 5) == ")"
+            && tt(ti + 6) == "]"
+        {
+            armed = Armed::Attr;
+        } else if armed == Armed::Attr && t == "mod" {
+            armed = Armed::Mod;
+        } else if armed == Armed::Attr
+            && matches!(t, "fn" | "use" | "struct" | "impl" | "enum" | "const" | "static")
+        {
+            // #[cfg(test)] on a non-mod item guards that item, not a region.
+            armed = Armed::No;
+        }
+        tok_in_loop[ti] = scope_is_loop.iter().any(|&l| l);
+        end_depth[tok.line] = depth;
+    }
+    // A test mod left open at EOF closes there.
+    for &(_, start) in &test_stack {
+        test_ranges.push((start, nlines.saturating_sub(1)));
+    }
+    // Forward-fill end-of-line depths across code-free lines.
+    let mut last = 0usize;
+    for d in end_depth.iter_mut() {
+        if *d == usize::MAX {
+            *d = last;
+        } else {
+            last = *d;
+        }
+    }
+
+    let in_test = |line: usize| test_ranges.iter().any(|&(s, e)| line >= s && line <= e);
+
+    // Is `name` a float accumulator (`let mut x = 0.0` / `let mut x: f64`)
+    // still in scope at token index `at`? Files are small; a fresh walk
+    // per query keeps the logic in one place.
+    let float_var_live = |name: &str, at: usize| -> bool {
+        let mut live: Vec<(String, usize)> = Vec::new();
+        let mut d = 0usize;
+        for (ti, tok) in toks.iter().enumerate() {
+            if ti >= at {
+                break;
+            }
+            match tok.t.as_str() {
+                "{" => d += 1,
+                "}" => {
+                    d = d.saturating_sub(1);
+                    live.retain(|(_, dd)| *dd <= d);
+                }
+                "let" => {
+                    let mut j = ti + 1;
+                    if tt(j) == "mut" {
+                        j += 1;
+                        let n = tt(j).to_string();
+                        let ident = n
+                            .chars()
+                            .next()
+                            .map_or(false, |c| c.is_ascii_alphabetic() || c == '_');
+                        if ident {
+                            j += 1;
+                            let mut isf = false;
+                            if tt(j) == ":" {
+                                if tt(j + 1) == "f32" || tt(j + 1) == "f64" {
+                                    isf = true;
+                                }
+                                while j < toks.len() && tt(j) != "=" && tt(j) != ";" {
+                                    j += 1;
+                                }
+                            }
+                            if tt(j) == "=" && is_float_literal(tt(j + 1)) {
+                                isf = true;
+                            }
+                            if isf {
+                                live.push((n, d));
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        live.iter().any(|(n, _)| n == name)
+    };
+
+    // ---- waivers -------------------------------------------------------
+    let (waivers, bad_waivers) = collect_waivers(&st);
+    // Standalone coverage: lines L+1..=M where M is the first code line
+    // at or below the waiver's depth that terminates a statement/block.
+    let coverage: Vec<(usize, usize, usize)> = waivers
+        .iter()
+        .enumerate()
+        .filter(|(_, w)| w.standalone)
+        .map(|(wi, w)| {
+            let wdepth = if w.line == 0 { 0 } else { end_depth[w.line] };
+            let mut end = w.line;
+            for m in (w.line + 1)..nlines {
+                let trimmed = st.code[m].trim_end();
+                if trimmed.trim().is_empty() {
+                    continue;
+                }
+                end = m;
+                if end_depth[m] <= wdepth && (trimmed.ends_with(';') || trimmed.ends_with('}')) {
+                    break;
+                }
+            }
+            (wi, w.line + 1, end)
+        })
+        .collect();
+
+    let waived = |rule: &str, line: usize| -> bool {
+        waivers.iter().enumerate().any(|(i, w)| {
+            if w.rule != rule {
+                return false;
+            }
+            if !w.standalone {
+                return w.line == line;
+            }
+            coverage
+                .iter()
+                .any(|&(wi, s, e)| wi == i && line >= s && line <= e)
+        })
+    };
+
+    // ---- rule scoping --------------------------------------------------
+    let traj = cfg.in_trajectory(rel);
+    let r1_active = traj && !cfg.is_blessed(rel) && !cfg.is_allowed("R1", rel);
+    let r2_active = traj && !cfg.is_allowed("R2", rel);
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut push = |rule: &'static str, line0: usize, msg: String| {
+        let f = Finding {
+            rule,
+            file: rel.to_string(),
+            line: line0 + 1,
+            msg,
+        };
+        if !findings.contains(&f) {
+            findings.push(f);
+        }
+    };
+
+    // Bad waivers are R4 findings in every scanned file.
+    for (line, msg) in bad_waivers {
+        push("R4", line, msg);
+    }
+
+    // ---- R1 / R2 token scans ------------------------------------------
+    if r1_active || r2_active {
+        for (i, tok) in toks.iter().enumerate() {
+            let line = tok.line;
+            if in_test(line) {
+                continue;
+            }
+            let t = tok.t.as_str();
+
+            if r1_active && !waived("R1", line) {
+                // (a) turbofish float sum
+                if t == "sum" && tt(i + 1) == "::" && tt(i + 2) == "<" {
+                    let ty = tt(i + 3);
+                    if ty == "f32" || ty == "f64" {
+                        push(
+                            "R1",
+                            line,
+                            format!(
+                                "iterator `sum::<{}>()` — unpinned float reduction; use \
+                                 the blessed simd:: tree kernels or waive with \
+                                 `audit:allow(R1): <why the order is pinned>`",
+                                ty
+                            ),
+                        );
+                    }
+                }
+                // (b) `.sum()` in a statement with an explicit f32/f64 ascription
+                if t == "sum" && tt(i + 1) == "(" && tt(i + 2) == ")" && i > 0 && tt(i - 1) == "." {
+                    let mut j = i;
+                    let mut float_ascribed = false;
+                    while j > 0 {
+                        let p = tt(j - 1);
+                        if p == ";" || p == "{" || p == "}" {
+                            break;
+                        }
+                        if p == ":" && (tt(j) == "f32" || tt(j) == "f64") {
+                            float_ascribed = true;
+                        }
+                        j -= 1;
+                    }
+                    if float_ascribed {
+                        push(
+                            "R1",
+                            line,
+                            "float-typed `.sum()` — unpinned float reduction; use the \
+                             blessed simd:: tree kernels or waive with audit:allow(R1)"
+                                .to_string(),
+                        );
+                    }
+                }
+                // (c) float-seeded fold
+                if t == "fold" && tt(i + 1) == "(" && is_float_literal(tt(i + 2)) {
+                    push(
+                        "R1",
+                        line,
+                        "float-seeded `fold(..)` — unpinned float reduction; use the \
+                         blessed simd:: tree kernels or waive with audit:allow(R1)"
+                            .to_string(),
+                    );
+                }
+                // (d) float `+=` accumulation inside a loop
+                if t == "+=" && tok_in_loop[i] && i >= 1 {
+                    let lhs = tt(i - 1);
+                    let simple_ident = lhs
+                        .chars()
+                        .next()
+                        .map_or(false, |c| c.is_ascii_alphabetic() || c == '_')
+                        && (i < 2 || (tt(i - 2) != "." && tt(i - 2) != "]"));
+                    if simple_ident {
+                        let mut floaty = float_var_live(lhs, i);
+                        if !floaty {
+                            // Scan the right-hand side for float evidence.
+                            let mut j = i + 1;
+                            while j < toks.len() && tt(j) != ";" && j < i + 48 {
+                                if is_float_literal(tt(j))
+                                    || (tt(j) == "as" && (tt(j + 1) == "f32" || tt(j + 1) == "f64"))
+                                {
+                                    floaty = true;
+                                    break;
+                                }
+                                j += 1;
+                            }
+                        }
+                        if floaty {
+                            push(
+                                "R1",
+                                line,
+                                format!(
+                                    "float accumulation `{} += ...` in a loop — unpinned \
+                                     reduction order; use the blessed simd:: tree kernels \
+                                     or waive with audit:allow(R1)",
+                                    lhs
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+
+            if r2_active && !waived("R2", line) {
+                let flagged = match t {
+                    "HashMap" | "HashSet" => Some(format!(
+                        "`{}` in trajectory code — iteration order is hash-randomized; \
+                         use BTreeMap/BTreeSet or a sorted Vec",
+                        t
+                    )),
+                    "Instant" | "SystemTime" => Some(format!(
+                        "`{}` in trajectory code — wall-clock must not reach the \
+                         trajectory; timing belongs in util::bench",
+                        t
+                    )),
+                    "thread_rng" => Some(
+                        "`thread_rng` in trajectory code — OS-seeded randomness; use \
+                         the repo's seeded SplitMix-style RNGs"
+                            .to_string(),
+                    ),
+                    "env" if tt(i + 1) == "::" && matches!(tt(i + 2), "var" | "var_os" | "vars") => {
+                        Some(format!(
+                            "`env::{}` in trajectory code — environment-dependent \
+                             branching forks the trajectory per shell",
+                            tt(i + 2)
+                        ))
+                    }
+                    _ => None,
+                };
+                if let Some(msg) = flagged {
+                    push("R2", line, msg);
+                }
+            }
+        }
+    }
+
+    // ---- R3: unsafe registry + SAFETY adjacency (all files) ------------
+    let mut unsafe_lines: Vec<usize> = toks
+        .iter()
+        .filter(|t| t.t == "unsafe")
+        .map(|t| t.line)
+        .collect();
+    unsafe_lines.dedup();
+    let registered = cfg.in_unsafe_registry(rel);
+    for line in unsafe_lines {
+        if !registered {
+            push(
+                "R3",
+                line,
+                "`unsafe` in a file not listed under [unsafe-registry] in audit.toml — \
+                 register it (with justification in DESIGN.md §14) or remove the unsafe"
+                    .to_string(),
+            );
+        }
+        if !has_safety_comment(&st, line) {
+            push(
+                "R3",
+                line,
+                "`unsafe` without a `// SAFETY:` comment directly above its statement — \
+                 state the invariant that makes this site sound"
+                    .to_string(),
+            );
+        }
+    }
+
+    // ---- R4: #[allow(...)] reasons (all files) -------------------------
+    for (i, tok) in toks.iter().enumerate() {
+        if tok.t != "#" {
+            continue;
+        }
+        let mut j = i + 1;
+        if tt(j) == "!" {
+            j += 1;
+        }
+        if tt(j) == "[" && tt(j + 1) == "allow" && tt(j + 2) == "(" && !allow_has_reason(&st, tok.line)
+        {
+            push(
+                "R4",
+                tok.line,
+                "`#[allow(...)]` without a reason — add a plain `//` comment \
+                 (same line or directly above; doc comments don't count)"
+                    .to_string(),
+            );
+        }
+    }
+
+    findings
+}
+
+/// Is there a non-doc comment on `line`, or in the contiguous comment
+/// block directly above the attribute stack containing `line`?
+fn allow_has_reason(st: &Stripped, line: usize) -> bool {
+    let trailing = st.comment[line].trim();
+    if !trailing.is_empty() && !is_doc_comment(trailing) {
+        return true;
+    }
+    let mut k = line;
+    while k > 0 {
+        let above_code = st.code[k - 1].trim();
+        let above_comment = st.comment[k - 1].trim();
+        if above_code.starts_with('#') && above_comment.is_empty() {
+            // Another attribute in the same stack — keep walking up.
+            k -= 1;
+            continue;
+        }
+        if above_code.is_empty() && !above_comment.is_empty() {
+            return !is_doc_comment(above_comment);
+        }
+        return false;
+    }
+    false
+}
+
+/// Doc comments arrive here with the leading `//` stripped, so `///`
+/// shows as a body starting with `/` and `//!` as one starting with `!`.
+fn is_doc_comment(stripped_body: &str) -> bool {
+    stripped_body.starts_with('/') || stripped_body.starts_with('!')
+}
+
+/// R3 adjacency: walk from the line containing `unsafe` up to the first
+/// line of its statement/item (skipping attribute lines and statement
+/// continuations), then require `SAFETY:` in the contiguous comment
+/// block immediately above. This forces one comment per site: a comment
+/// above site A does not cover a sibling site B below it, because B's
+/// own statement start has A's *code* line directly above, not a comment.
+fn has_safety_comment(st: &Stripped, line: usize) -> bool {
+    // 1. Find the first line of the statement/item containing `line`.
+    let mut j = line;
+    while j > 0 {
+        let prev = st.code[j - 1].trim();
+        if prev.is_empty() {
+            break; // blank or comment-only line: statement starts here
+        }
+        if prev.ends_with(';') || prev.ends_with('{') || prev.ends_with('}') {
+            break;
+        }
+        if prev.starts_with('#') {
+            j -= 1; // attribute belongs to this item
+            continue;
+        }
+        j -= 1; // multi-line statement continuation
+    }
+    // 2. Scan the contiguous comment block above it.
+    let mut k = j;
+    while k > 0 {
+        let code_above = st.code[k - 1].trim();
+        // Untrimmed emptiness test: a lone `//` paragraph separator inside
+        // a comment block carries the strip marker space, so it stays part
+        // of the contiguous block; a genuinely blank line ends it.
+        let comment_above = &st.comment[k - 1];
+        if code_above.is_empty() && !comment_above.is_empty() {
+            if comment_above.contains("SAFETY:") {
+                return true;
+            }
+            k -= 1;
+            continue;
+        }
+        if code_above.starts_with('#') && comment_above.trim().is_empty() {
+            k -= 1;
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Repo walk
+// ---------------------------------------------------------------------------
+
+/// The directories the audit covers, relative to the repo root.
+pub const SCAN_ROOTS: [&str; 3] = ["rust/src", "rust/tests", "rust/benches"];
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .collect::<Result<Vec<_>, _>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_rs(&p, out)?;
+        } else if p.extension().map_or(false, |e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Scan the whole tree under `root`. Findings come back sorted by
+/// (file, line).
+pub fn audit_repo(root: &Path, cfg: &Config) -> io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for sub in SCAN_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk_rs(&dir, &mut files)?;
+        }
+    }
+    let mut findings = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = fs::read_to_string(&path)?;
+        findings.extend(scan_file(&rel, &src, cfg));
+    }
+    findings.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
+    Ok(findings)
+}
+
+/// Load `audit.toml` from the repo root.
+pub fn load_config(root: &Path) -> Result<Config, String> {
+    let path = root.join("audit.toml");
+    let text =
+        fs::read_to_string(&path).map_err(|e| format!("cannot read {}: {}", path.display(), e))?;
+    Config::parse(&text)
+}

@@ -1,0 +1,125 @@
+//! CLI for the seesaw determinism/soundness audit.
+//!
+//! ```text
+//! seesaw-audit [--root DIR] [--explain RULE] [--list-rules]
+//! ```
+//!
+//! Exit codes: 0 = clean, 1 = findings, 2 = usage or I/O error.
+//! With no `--root`, the tool walks upward from the current directory
+//! until it finds `audit.toml` (so `cargo run -p seesaw-audit` works
+//! from anywhere inside the repo).
+
+#![forbid(unsafe_code)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use seesaw_audit::{audit_repo, explain, load_config, RULE_IDS};
+
+fn usage() -> &'static str {
+    "usage: seesaw-audit [--root DIR] [--explain RULE] [--list-rules]\n\
+     \n\
+     Checks rust/src, rust/tests, rust/benches against the determinism\n\
+     contract in audit.toml (rules R1-R4). Exit 0 = clean, 1 = findings,\n\
+     2 = usage/config error. `--explain R1` prints a rule's rationale."
+}
+
+fn find_root(start: PathBuf) -> Option<PathBuf> {
+    let mut dir = start;
+    loop {
+        if dir.join("audit.toml").is_file() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(d) => root = Some(PathBuf::from(d)),
+                None => {
+                    eprintln!("--root requires a directory\n{}", usage());
+                    return ExitCode::from(2);
+                }
+            },
+            "--explain" => {
+                let Some(rule) = args.next() else {
+                    eprintln!("--explain requires a rule id (R1..R4)\n{}", usage());
+                    return ExitCode::from(2);
+                };
+                match explain(&rule) {
+                    Some(text) => {
+                        println!("{}", text);
+                        return ExitCode::SUCCESS;
+                    }
+                    None => {
+                        eprintln!("unknown rule `{}`; known rules: {}", rule, RULE_IDS.join(", "));
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            "--list-rules" => {
+                for id in RULE_IDS {
+                    // First line of the rationale is the one-line summary.
+                    let head = explain(id).and_then(|t| t.lines().next()).unwrap_or(id);
+                    println!("{}", head);
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--help" | "-h" => {
+                println!("{}", usage());
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("unknown argument `{}`\n{}", other, usage());
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let root = match root {
+        Some(r) => r,
+        None => match std::env::current_dir().ok().and_then(find_root) {
+            Some(r) => r,
+            None => {
+                eprintln!("no audit.toml found walking up from the current directory; pass --root");
+                return ExitCode::from(2);
+            }
+        },
+    };
+
+    let cfg = match load_config(&root) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{}", e);
+            return ExitCode::from(2);
+        }
+    };
+
+    match audit_repo(&root, &cfg) {
+        Ok(findings) if findings.is_empty() => {
+            println!("seesaw-audit: clean ({} rules, root {})", RULE_IDS.len(), root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{}", f);
+            }
+            println!(
+                "seesaw-audit: {} finding(s); run `seesaw-audit --explain <rule>` for rationale",
+                findings.len()
+            );
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("audit walk failed: {}", e);
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! Clean corpus: trajectory-scoped code that uses every sanctioned
+//! escape hatch correctly — ordered containers, integer reductions,
+//! reasoned allows, inline waivers with reasons, and hash containers
+//! confined to #[cfg(test)].
+//! This file is scanner input, not compiled code.
+
+use std::collections::BTreeMap;
+
+pub fn token_total(xs: &[u64]) -> u64 {
+    xs.iter().sum()
+}
+
+// kept for the fixture round-trip tests in the sibling crate
+#[allow(dead_code)]
+pub fn ordered_counts() -> BTreeMap<u32, u64> {
+    BTreeMap::new()
+}
+
+pub fn waived_reduction(xs: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    // audit:allow(R1): slice order is pinned by the caller's fixed shard layout
+    for x in xs {
+        acc += *x as f64;
+    }
+    acc
+}
+
+pub fn trailing_waiver(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() // audit:allow(R1): xs is a fixed-size lane block, order pinned
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn hash_is_fine_in_tests() {
+        let mut m = std::collections::HashMap::new();
+        m.insert(1u32, 2u32);
+        assert_eq!(m.len(), 1);
+    }
+}

@@ -1,0 +1,23 @@
+//! R1 corpus: every ad-hoc float-reduction shape the rule must catch.
+//! This file is scanner input, not compiled code.
+
+pub fn turbofish_sum(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>()
+}
+
+pub fn ascribed_sum(xs: &[f64]) -> f64 {
+    let total: f64 = xs.iter().map(|x| x * x).sum();
+    total
+}
+
+pub fn seeded_fold(xs: &[f64]) -> f64 {
+    xs.iter().fold(0.0, |a, b| a + b)
+}
+
+pub fn loop_accumulate(xs: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for x in xs {
+        acc += *x as f64;
+    }
+    acc
+}

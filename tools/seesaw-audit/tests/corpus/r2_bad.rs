@@ -1,0 +1,30 @@
+//! R2 corpus: one specimen per ambient-nondeterminism source.
+//! This file is scanner input, not compiled code.
+
+pub fn randomized_order(names: &[&str]) -> usize {
+    let mut m = std::collections::HashMap::new();
+    for n in names {
+        m.insert(*n, n.len());
+    }
+    m.len()
+}
+
+pub fn wall_clock_branch() -> bool {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos() % 2 == 0
+}
+
+pub fn epoch_stamp() -> u64 {
+    let _ = std::time::SystemTime::now();
+    0
+}
+
+pub fn shell_branch() -> bool {
+    std::env::var("SEESAW_FAST").is_ok()
+}
+
+pub fn os_seeded() -> u64 {
+    let mut rng = thread_rng();
+    let _ = &mut rng;
+    0
+}

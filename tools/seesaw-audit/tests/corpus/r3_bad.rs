@@ -1,0 +1,8 @@
+//! R3 corpus: naked `unsafe` — no SAFETY comment, and (when scanned
+//! under an unregistered path) outside the registry. Expected findings
+//! live in `corpus_test.rs`.
+//! This file is scanner input, not compiled code.
+
+pub fn first_unchecked(xs: &[u32]) -> u32 {
+    unsafe { *xs.get_unchecked(0) }
+}

@@ -1,0 +1,6 @@
+//! R4 corpus: an `#[allow]` whose only annotation is a doc comment.
+//! This file is scanner input, not compiled code.
+
+/// Doc comments describe the item; they are not a lint-waiver reason.
+#[allow(dead_code)]
+pub fn unused_helper() {}

@@ -1,0 +1,213 @@
+//! Pins that each audit rule actually fires on its known-bad corpus
+//! snippet, stays silent on clean/blessed code, and that the waiver and
+//! cfg(test) scoping semantics hold. If a scanner refactor weakens a
+//! detector, one of these counts changes and the gate catches it.
+
+use std::path::Path;
+
+use seesaw_audit::{scan_file, Config, Finding};
+
+/// Synthetic config: everything under `traj/` is trajectory-scoped,
+/// `traj/simd/` is blessed, and `traj/registered.rs` may hold unsafe.
+fn test_cfg() -> Config {
+    Config::parse(
+        r#"
+[scope]
+trajectory = [ "traj/" ]
+blessed-reductions = [ "traj/simd/" ]
+
+[unsafe-registry]
+files = [ "traj/registered.rs" ]
+"#,
+    )
+    .expect("test config parses")
+}
+
+fn corpus(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/corpus")
+        .join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {}", path.display(), e))
+}
+
+fn lines_of<'a>(findings: &'a [Finding], rule: &str) -> Vec<usize> {
+    findings
+        .iter()
+        .filter(|f| f.rule == rule)
+        .map(|f| f.line)
+        .collect()
+}
+
+#[test]
+fn r1_fires_on_every_reduction_shape() {
+    let f = scan_file("traj/r1_bad.rs", &corpus("r1_bad.rs"), &test_cfg());
+    assert!(f.iter().all(|x| x.rule == "R1"), "unexpected rules: {:?}", f);
+    // turbofish sum, float-ascribed .sum(), float-seeded fold, loop +=
+    assert_eq!(lines_of(&f, "R1"), vec![5, 9, 14, 20], "findings: {:?}", f);
+}
+
+#[test]
+fn r1_is_silent_on_blessed_paths() {
+    let f = scan_file("traj/simd/r1_bad.rs", &corpus("r1_bad.rs"), &test_cfg());
+    assert!(f.is_empty(), "blessed path should be exempt from R1: {:?}", f);
+}
+
+#[test]
+fn r1_is_silent_outside_trajectory_scope() {
+    let f = scan_file("util/r1_bad.rs", &corpus("r1_bad.rs"), &test_cfg());
+    assert!(f.is_empty(), "non-trajectory path should be unscanned: {:?}", f);
+}
+
+#[test]
+fn r2_fires_on_every_nondeterminism_source() {
+    let f = scan_file("traj/r2_bad.rs", &corpus("r2_bad.rs"), &test_cfg());
+    assert!(f.iter().all(|x| x.rule == "R2"), "unexpected rules: {:?}", f);
+    // HashMap, Instant, SystemTime, env::var, thread_rng
+    assert_eq!(lines_of(&f, "R2"), vec![5, 13, 18, 23, 27], "findings: {:?}", f);
+}
+
+#[test]
+fn r3_fires_twice_outside_the_registry() {
+    let f = scan_file("traj/r3_bad.rs", &corpus("r3_bad.rs"), &test_cfg());
+    // One finding for the unregistered file, one for the missing SAFETY.
+    assert_eq!(lines_of(&f, "R3"), vec![7, 7], "findings: {:?}", f);
+}
+
+#[test]
+fn r3_registered_file_still_needs_safety_comments() {
+    let f = scan_file("traj/registered.rs", &corpus("r3_bad.rs"), &test_cfg());
+    assert_eq!(lines_of(&f, "R3").len(), 1, "findings: {:?}", f);
+    assert!(f[0].msg.contains("SAFETY"), "findings: {:?}", f);
+}
+
+#[test]
+fn r3_passes_with_a_safety_comment_per_site() {
+    let src = "\
+pub fn first(xs: &[u32]) -> u32 {
+    // SAFETY: caller guarantees xs is non-empty (checked at pool entry).
+    unsafe { *xs.get_unchecked(0) }
+}
+";
+    let f = scan_file("traj/registered.rs", src, &test_cfg());
+    assert!(f.is_empty(), "findings: {:?}", f);
+}
+
+#[test]
+fn r3_safety_comment_does_not_cover_a_sibling_site() {
+    let src = "\
+pub fn pair(xs: &[u32]) -> (u32, u32) {
+    // SAFETY: caller guarantees len >= 2.
+    let a = unsafe { *xs.get_unchecked(0) };
+    let b = unsafe { *xs.get_unchecked(1) };
+    (a, b)
+}
+";
+    let f = scan_file("traj/registered.rs", src, &test_cfg());
+    assert_eq!(lines_of(&f, "R3"), vec![4], "findings: {:?}", f);
+}
+
+#[test]
+fn r3_safety_comment_attaches_across_a_multiline_statement() {
+    let src = "\
+pub fn widen(src: &dyn std::fmt::Debug) -> u32 {
+    // SAFETY: only the lifetime is erased; the drain loop below keeps
+    // the borrow alive until every worker acks the done channel.
+    let _src_static: &'static dyn std::fmt::Debug =
+        unsafe { std::mem::transmute(src) };
+    0
+}
+";
+    let f = scan_file("traj/registered.rs", src, &test_cfg());
+    assert!(f.is_empty(), "findings: {:?}", f);
+}
+
+#[test]
+fn r4_fires_on_allow_with_only_a_doc_comment() {
+    let f = scan_file("traj/r4_bad.rs", &corpus("r4_bad.rs"), &test_cfg());
+    assert_eq!(lines_of(&f, "R4"), vec![5], "findings: {:?}", f);
+}
+
+#[test]
+fn r4_passes_with_trailing_or_preceding_plain_comment() {
+    let trailing = "#[allow(dead_code)] // exercised only by the fixture generator\nfn x() {}\n";
+    let preceding = "// exercised only by the fixture generator\n#[allow(dead_code)]\nfn x() {}\n";
+    for src in [trailing, preceding] {
+        let f = scan_file("traj/ok.rs", src, &test_cfg());
+        assert!(f.is_empty(), "findings for {:?}: {:?}", src, f);
+    }
+}
+
+#[test]
+fn clean_fixture_is_clean() {
+    let f = scan_file("traj/clean.rs", &corpus("clean.rs"), &test_cfg());
+    assert!(f.is_empty(), "findings: {:?}", f);
+}
+
+#[test]
+fn waiver_without_reason_is_an_r4_finding_and_does_not_waive() {
+    let src = "\
+pub fn s(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>() // audit:allow(R1)
+}
+";
+    let f = scan_file("traj/w.rs", src, &test_cfg());
+    let rules: Vec<&str> = f.iter().map(|x| x.rule).collect();
+    assert!(rules.contains(&"R1"), "R1 must still fire: {:?}", f);
+    assert!(rules.contains(&"R4"), "empty waiver must be reported: {:?}", f);
+}
+
+#[test]
+fn standalone_waiver_covers_exactly_one_statement() {
+    let src = "\
+pub fn s(xs: &[f32]) -> (f32, f32) {
+    // audit:allow(R1): fixed lane order pinned by the caller
+    let a: f32 = xs.iter().sum();
+    let b: f32 = xs.iter().sum();
+    (a, b)
+}
+";
+    let f = scan_file("traj/w.rs", src, &test_cfg());
+    assert_eq!(lines_of(&f, "R1"), vec![4], "findings: {:?}", f);
+}
+
+#[test]
+fn cfg_test_modules_are_exempt_from_r1_and_r2() {
+    let src = "\
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let mut m = std::collections::HashMap::new();
+        m.insert(1u32, 1u32);
+        let s: f64 = [1.0f64].iter().sum();
+        assert!(s > 0.0 && m.len() == 1);
+    }
+}
+";
+    let f = scan_file("traj/t.rs", src, &test_cfg());
+    assert!(f.is_empty(), "findings: {:?}", f);
+}
+
+#[test]
+fn real_simd_kernels_are_silent_under_the_real_config() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let cfg = seesaw_audit::load_config(&root).expect("audit.toml loads");
+    let src = std::fs::read_to_string(root.join("rust/src/simd/mod.rs")).expect("simd source");
+    let f = scan_file("rust/src/simd/mod.rs", &src, &cfg);
+    assert!(f.is_empty(), "findings: {:?}", f);
+}
+
+#[test]
+fn config_rejects_unknown_keys_and_unterminated_arrays() {
+    assert!(Config::parse("[scope]\nbogus = [ \"x\" ]\n").is_err());
+    assert!(Config::parse("[scope]\ntrajectory = [ \"x\"\n").is_err());
+}
+
+#[test]
+fn path_matching_is_prefix_for_dirs_and_exact_for_files() {
+    let cfg = test_cfg();
+    assert!(cfg.in_trajectory("traj/deep/nested.rs"));
+    assert!(!cfg.in_trajectory("trajectory_lookalike/x.rs"));
+    assert!(cfg.in_unsafe_registry("traj/registered.rs"));
+    assert!(!cfg.in_unsafe_registry("traj/registered.rs.bak"));
+}

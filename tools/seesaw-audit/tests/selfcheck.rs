@@ -1,0 +1,24 @@
+//! The regression gate: the repo's own tree must pass its own audit.
+//! Any new unpinned reduction, ambient-nondeterminism call, naked
+//! `unsafe`, or reasonless `#[allow]` in rust/src, rust/tests, or
+//! rust/benches fails this test (and the CI `audit` job) with
+//! file:line diagnostics.
+
+use std::path::Path;
+
+#[test]
+fn repo_tree_passes_its_own_audit() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let cfg = seesaw_audit::load_config(&root).expect("audit.toml loads");
+    let findings = seesaw_audit::audit_repo(&root, &cfg).expect("tree walk");
+    assert!(
+        findings.is_empty(),
+        "seesaw-audit found {} violation(s) in the repo tree:\n{}",
+        findings.len(),
+        findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
