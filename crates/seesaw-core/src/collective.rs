@@ -1,0 +1,143 @@
+//! Collective *spec* layer: the kind selector, the per-call statistics,
+//! and the two-level wire-cost split (DESIGN.md §3, §13).
+//!
+//! This module is the pure half of the collective story — everything the
+//! config layer and the wall-clock model need to *describe* and *price*
+//! an allreduce without running one. The thread-backed implementations
+//! (ring, scoped-thread parallel, hierarchical two-level) live in
+//! `seesaw-engine`'s `collective` module behind its `Collective` trait,
+//! built from a [`CollectiveKind`] via that crate's `build` function.
+
+/// Statistics from one collective call.
+///
+/// A bucketed call (`Collective::allreduce_mean_bucketed` in the engine)
+/// accounts every bucket: `bytes_moved`/`phases` sum over buckets,
+/// `buckets` counts them and `tail_bytes` is the payload of the *last*
+/// bucket — the communication a real overlapped cluster cannot hide
+/// behind compute (nothing is left to compute once the tail's leaves are
+/// done). All full buckets carry the same payload, so the per-bucket
+/// breakdown is `(bytes_moved − tail_bytes) / (buckets − 1)` each plus
+/// the tail; [`crate::metrics::WallClockModel`] charges exactly that
+/// schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CollectiveStats {
+    /// Total payload bytes moved between workers (both phases).
+    pub bytes_moved: u64,
+    /// Communication phases executed (2·(W−1) per bucket for a ring).
+    pub phases: u32,
+    /// Buckets the payload was reduced in: 1 for a whole-vector call,
+    /// ≥ 1 for a bucketed call, 0 when no communication happened
+    /// (`W == 1`).
+    pub buckets: u32,
+    /// Payload bytes of the last bucket (== `bytes_moved` for a
+    /// whole-vector call) — the non-overlappable exposure in the
+    /// overlapped wall-clock model.
+    pub tail_bytes: u64,
+}
+
+/// Billable payload split of one two-level reduce over `world` workers
+/// spread across `nodes` nodes, for an `elems`-element vector: bytes the
+/// **intra-node** fabric serializes (the largest node's reduce-to-leader
+/// plus broadcast-back, `2·(g−1)·elems·4` for node size `g` — nodes run
+/// in parallel, so the slowest node is what gets billed) and bytes the
+/// **inter-node** fabric serializes (the canonical leader-ring payload,
+/// `2·(m−1)·elems·4` for `m` nodes). Degenerate splits collapse to the
+/// flat ring exactly: `nodes == 1` puts everything intra, `nodes == w`
+/// everything inter, both totalling `2·(w−1)·elems·4`.
+pub fn two_level_split(world: usize, nodes: usize, elems: usize) -> (u64, u64) {
+    let w = world.max(1);
+    if w == 1 {
+        return (0, 0);
+    }
+    let m = nodes.clamp(1, w);
+    let g = w.div_ceil(m);
+    let intra = (2 * (g - 1) * elems * 4) as u64;
+    let inter = (2 * (m - 1) * elems * 4) as u64;
+    (intra, inter)
+}
+
+/// Which allreduce implementation combines worker gradients.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CollectiveKind {
+    /// Sequential chunked ring allreduce (bit-exact reference).
+    #[default]
+    Ring,
+    /// Scoped-thread chunked reduction.
+    Parallel,
+    /// Hierarchical two-level reduce: parallel intra-node, ring across
+    /// node leaders (`nodes` nodes, workers split evenly across them).
+    TwoLevel {
+        /// Number of nodes the fleet is spread over (clamped to the
+        /// world at reduce time; 1 degenerates to a flat single fabric).
+        nodes: usize,
+    },
+}
+
+impl CollectiveKind {
+    /// Parse the config/CLI spelling (`ring` | `parallel` | `two-level`).
+    /// `two-level` defaults to 2 nodes; the `nodes` knob (config key /
+    /// `--nodes`) overrides it after parsing.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "ring" => Some(Self::Ring),
+            "parallel" => Some(Self::Parallel),
+            "two-level" | "two_level" => Some(Self::TwoLevel { nodes: 2 }),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Ring => "ring",
+            Self::Parallel => "parallel",
+            Self::TwoLevel { .. } => "two-level",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_config_spellings() {
+        assert_eq!(CollectiveKind::parse("ring"), Some(CollectiveKind::Ring));
+        assert_eq!(CollectiveKind::parse("parallel"), Some(CollectiveKind::Parallel));
+        assert_eq!(
+            CollectiveKind::parse("two-level"),
+            Some(CollectiveKind::TwoLevel { nodes: 2 })
+        );
+        assert_eq!(
+            CollectiveKind::parse("two_level"),
+            Some(CollectiveKind::TwoLevel { nodes: 2 })
+        );
+        assert_eq!(CollectiveKind::parse("bogus"), None);
+        assert_eq!(CollectiveKind::default(), CollectiveKind::Ring);
+        assert_eq!(CollectiveKind::TwoLevel { nodes: 4 }.name(), "two-level");
+    }
+
+    #[test]
+    fn two_level_split_degenerates_to_the_flat_ring() {
+        let n = 1000usize;
+        for w in [2usize, 3, 4, 8, 17] {
+            // the canonical flat-ring payload: 2·(W−1)·n·4 bytes
+            let flat = (2 * (w - 1) * n * 4) as u64;
+            // one node: everything intra, exactly the flat ring payload
+            let (intra, inter) = two_level_split(w, 1, n);
+            assert_eq!((intra, inter), (flat, 0), "w={w} nodes=1");
+            // one worker per node: everything inter, same total
+            let (intra, inter) = two_level_split(w, w, n);
+            assert_eq!((intra, inter), (0, flat), "w={w} nodes=w");
+            // a real hierarchy serializes strictly fewer billable bytes
+            for nodes in 2..w {
+                let (intra, inter) = two_level_split(w, nodes, n);
+                assert!(intra > 0 && inter > 0, "w={w} nodes={nodes}");
+                assert!(intra + inter <= flat, "w={w} nodes={nodes}");
+            }
+            // nodes beyond the world clamp to one worker per node
+            assert_eq!(two_level_split(w, 10 * w, n), two_level_split(w, w, n));
+        }
+        // single worker: nothing moves
+        assert_eq!(two_level_split(1, 4, n), (0, 0));
+    }
+}

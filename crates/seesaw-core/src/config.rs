@@ -10,7 +10,7 @@
 #![forbid(unsafe_code)] // R3: outside the audit.toml unsafe registry (DESIGN.md §14)
 
 use crate::collective::CollectiveKind;
-use crate::coordinator::elastic::WorldPolicy;
+use crate::elastic::WorldPolicy;
 use crate::metrics::WallClockModel;
 use crate::schedule::{AdaptiveSeesaw, JointSchedule, Schedule, ScheduleKind, SeesawBuilder};
 use crate::util::json::Value;
@@ -330,7 +330,7 @@ impl TrainConfig {
     /// plus every knob that shapes the `(lr, batch)` law — base lr/batch,
     /// warmup fraction, budget, cut cap. Floats are rendered as their
     /// IEEE-754 bit patterns so the string (and its FNV hash,
-    /// [`crate::coordinator::fnv1a64`], stored in every checkpoint) is
+    /// `fnv1a64` in the engine's coordinator, stored in every checkpoint) is
     /// exact: a resume restores controller state only into a
     /// bit-identically-configured schedule.
     ///

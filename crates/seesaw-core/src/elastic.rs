@@ -29,16 +29,16 @@
 //! the coordinator: the [`crate::metrics::GnsEstimator`] is explicitly
 //! resharded ([`crate::metrics::GnsEstimator::reshard`]) and the step
 //! engine resizes its worker/buffer/pool state
-//! ([`super::StepEngine::resize`]).
+//! (`StepEngine::resize` in the engine crate).
 //!
 //! **Preemption / scale-in** (DESIGN.md §13): when workers die mid-run
 //! the surviving fleet is a *capacity* the policy's desired world is
 //! clamped to — [`effective_world_capped`]. The coordinator tracks the
-//! capacity ([`super::Trainer::preempt`]) and the next step's world drop
-//! flows through the **same** reshard-event edge as growth: GNS EMAs are
-//! carried across by the world-invariant
+//! capacity (`Trainer::preempt` in the engine crate) and the next step's
+//! world drop flows through the **same** reshard-event edge as growth:
+//! GNS EMAs are carried across by the world-invariant
 //! [`crate::metrics::GnsEstimator::reshard`], surplus pool threads are
-//! joined via [`super::StepEngine::resize_checked`] (which refuses,
+//! joined via the engine's `StepEngine::resize_checked` (which refuses,
 //! loudly, scale-ins that would under-shard an adaptive run), and the
 //! event is logged like any other reshard. The trajectory does not care:
 //! `lr`/`batch`/`cuts`/`ce` stay bit-identical across the kill, per the

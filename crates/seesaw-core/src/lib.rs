@@ -1,0 +1,40 @@
+//! # seesaw-core — the pure layer of the Seesaw stack
+//!
+//! Everything here is deterministic, single-threaded, and safe: joint
+//! LR/batch-size schedules ([`schedule`], including the paper's
+//! Algorithm 1 and the GNS-driven [`schedule::AdaptiveSeesaw`]
+//! controller), run configuration and trajectory identity ([`config`]),
+//! step records / gradient-noise-scale estimation / the wall-clock model
+//! ([`metrics`]), the exact NSGD risk recursion that verifies Theorem 1,
+//! Corollary 1 and Lemma 4 ([`linreg`]), the deterministic token source
+//! ([`data`]), the lane-chunked kernels and fixed-shape tree reductions
+//! of the gradient hot path ([`simd`], DESIGN.md §12), the collective
+//! *spec* types ([`collective`] — cost model and kind selection; the
+//! thread-backed implementations live in `seesaw-engine`), and the
+//! elastic world policy ([`elastic`]).
+//!
+//! The execution layer (`seesaw-engine`: coordinator, step engine,
+//! collective implementations, PJRT runtime bridge) and the multi-tenant
+//! service (`seesaw-serve`) build on this crate; the `seesaw` facade
+//! crate re-exports all three under the original module paths.
+
+// The whole crate is pure compute over caller-owned buffers — no FFI, no
+// shared mutable state, nothing that could justify an unsafe block.
+#![forbid(unsafe_code)]
+// House style: configs are built as `let mut c = Default::default()` plus
+// field assignments (see `TrainConfig::from_json`, tests) — suppress the
+// lint that rewrites that into one struct literal.
+#![allow(clippy::field_reassign_with_default)]
+
+pub mod collective;
+pub mod config;
+pub mod data;
+pub mod elastic;
+pub mod linreg;
+pub mod metrics;
+pub mod schedule;
+pub mod simd;
+pub mod util;
+
+pub use config::{ExecSpec, TrainConfig};
+pub use schedule::{AdaptiveSeesaw, JointSchedule, Schedule, ScheduleKind};

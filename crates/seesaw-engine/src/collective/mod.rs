@@ -44,31 +44,12 @@
 
 #![forbid(unsafe_code)] // R3: outside the audit.toml unsafe registry (DESIGN.md §14)
 
-/// Statistics from one collective call.
-///
-/// A bucketed call ([`Collective::allreduce_mean_bucketed`]) accounts
-/// every bucket: `bytes_moved`/`phases` sum over buckets, `buckets`
-/// counts them and `tail_bytes` is the payload of the *last* bucket —
-/// the communication a real overlapped cluster cannot hide behind
-/// compute (nothing is left to compute once the tail's leaves are done).
-/// All full buckets carry the same payload, so the per-bucket breakdown
-/// is `(bytes_moved − tail_bytes) / (buckets − 1)` each plus the tail;
-/// [`crate::metrics::WallClockModel`] charges exactly that schedule.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub struct CollectiveStats {
-    /// Total payload bytes moved between workers (both phases).
-    pub bytes_moved: u64,
-    /// Communication phases executed (2·(W−1) per bucket for a ring).
-    pub phases: u32,
-    /// Buckets the payload was reduced in: 1 for a whole-vector call,
-    /// ≥ 1 for a bucketed call, 0 when no communication happened
-    /// (`W == 1`).
-    pub buckets: u32,
-    /// Payload bytes of the last bucket (== `bytes_moved` for a
-    /// whole-vector call) — the non-overlappable exposure in the
-    /// overlapped wall-clock model.
-    pub tail_bytes: u64,
-}
+// The pure spec half — kind selector, per-call stats, two-level wire-cost
+// split — lives in seesaw-core so the config layer and the wall-clock
+// model can describe and price a reduce without depending on threads.
+// Re-exported here so `collective::{CollectiveKind, CollectiveStats,
+// two_level_split}` keeps resolving for every downstream consumer.
+pub use seesaw_core::collective::{two_level_split, CollectiveKind, CollectiveStats};
 
 /// Stats of one whole-vector (single-bucket) reduce over `w` shards of
 /// `n` elements: the canonical ring payload.
@@ -82,73 +63,16 @@ fn whole_vector_stats(w: usize, n: usize) -> CollectiveStats {
     }
 }
 
-/// Billable payload split of one two-level reduce over `world` workers
-/// spread across `nodes` nodes, for an `elems`-element vector: bytes the
-/// **intra-node** fabric serializes (the largest node's reduce-to-leader
-/// plus broadcast-back, `2·(g−1)·elems·4` for node size `g` — nodes run
-/// in parallel, so the slowest node is what gets billed) and bytes the
-/// **inter-node** fabric serializes (the canonical leader-ring payload,
-/// `2·(m−1)·elems·4` for `m` nodes). Degenerate splits collapse to the
-/// flat ring exactly: `nodes == 1` puts everything intra, `nodes == w`
-/// everything inter, both totalling `2·(w−1)·elems·4`.
-pub fn two_level_split(world: usize, nodes: usize, elems: usize) -> (u64, u64) {
-    let w = world.max(1);
-    if w == 1 {
-        return (0, 0);
-    }
-    let m = nodes.clamp(1, w);
-    let g = w.div_ceil(m);
-    let intra = (2 * (g - 1) * elems * 4) as u64;
-    let inter = (2 * (m - 1) * elems * 4) as u64;
-    (intra, inter)
-}
-
-/// Which allreduce implementation combines worker gradients.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub enum CollectiveKind {
-    /// Sequential chunked ring allreduce (bit-exact reference).
-    #[default]
-    Ring,
-    /// Scoped-thread chunked reduction.
-    Parallel,
-    /// Hierarchical two-level reduce: parallel intra-node, ring across
-    /// node leaders (`nodes` nodes, workers split evenly across them).
-    TwoLevel {
-        /// Number of nodes the fleet is spread over (clamped to the
-        /// world at reduce time; 1 degenerates to a flat single fabric).
-        nodes: usize,
-    },
-}
-
-impl CollectiveKind {
-    /// Parse the config/CLI spelling (`ring` | `parallel` | `two-level`).
-    /// `two-level` defaults to 2 nodes; the `nodes` knob (config key /
-    /// `--nodes`) overrides it after parsing.
-    pub fn parse(s: &str) -> Option<Self> {
-        match s {
-            "ring" => Some(Self::Ring),
-            "parallel" => Some(Self::Parallel),
-            "two-level" | "two_level" => Some(Self::TwoLevel { nodes: 2 }),
-            _ => None,
-        }
-    }
-
-    pub fn name(self) -> &'static str {
-        match self {
-            Self::Ring => "ring",
-            Self::Parallel => "parallel",
-            Self::TwoLevel { .. } => "two-level",
-        }
-    }
-
-    /// Instantiate the implementation behind the trait object the step
-    /// engine holds.
-    pub fn build(self) -> Box<dyn Collective> {
-        match self {
-            Self::Ring => Box::new(RingCollective),
-            Self::Parallel => Box::new(ParallelCollective::default()),
-            Self::TwoLevel { nodes } => Box::new(TwoLevelCollective::new(nodes)),
-        }
+/// Instantiate the implementation behind the trait object the step
+/// engine holds. A free function rather than a `CollectiveKind` method
+/// because the kind is defined in `seesaw-core` (which must stay free of
+/// thread-backed code) while the implementations live here — inherent
+/// impls cannot cross the crate boundary.
+pub fn build(kind: CollectiveKind) -> Box<dyn Collective> {
+    match kind {
+        CollectiveKind::Ring => Box::new(RingCollective),
+        CollectiveKind::Parallel => Box::new(ParallelCollective::default()),
+        CollectiveKind::TwoLevel { nodes } => Box::new(TwoLevelCollective::new(nodes)),
     }
 }
 
@@ -671,7 +595,7 @@ mod tests {
     #[test]
     fn trait_dispatch_leaves_mean_in_shard_zero() {
         for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
-            let coll = kind.build();
+            let coll = build(kind);
             assert_eq!(coll.name(), kind.name());
             let mut s = shards(4, 1000);
             let want = mean_reference(&s);
@@ -689,7 +613,7 @@ mod tests {
     #[test]
     fn sqnorms_read_pre_reduce_and_leave_result_unchanged() {
         for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
-            let coll = kind.build();
+            let coll = build(kind);
             let s = shards(4, 777);
             // oracle: norms of the original shards, reduce result via the
             // plain path
@@ -720,7 +644,7 @@ mod tests {
             CollectiveKind::TwoLevel { nodes: 2 },
             CollectiveKind::TwoLevel { nodes: 3 },
         ] {
-            let coll = kind.build();
+            let coll = build(kind);
             for &(w, n) in &[(2usize, 64usize), (3, 100), (4, 128), (5, 8191), (7, 1000)] {
                 let s = shards(w, n);
                 let mut whole = s.clone();
@@ -747,7 +671,7 @@ mod tests {
     #[test]
     fn bucketed_accounting_sums_to_the_whole_payload() {
         for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
-            let coll = kind.build();
+            let coll = build(kind);
             let (w, n, bucket) = (4usize, 1000usize, 256usize);
             let mut s = shards(w, n);
             let mut norms = Vec::new();
@@ -781,7 +705,7 @@ mod tests {
             CollectiveKind::Parallel,
             CollectiveKind::TwoLevel { nodes: 2 },
         ] {
-            let stats = kind.build().allreduce_mean_bucketed(&mut one, 4, &mut norms);
+            let stats = build(kind).allreduce_mean_bucketed(&mut one, 4, &mut norms);
             assert_eq!(stats, CollectiveStats::default(), "{kind:?}");
             assert_eq!(norms.len(), 1, "{kind:?}: tap still reads the lone shard");
         }
@@ -790,7 +714,7 @@ mod tests {
     #[test]
     fn range_reduce_touches_only_the_range() {
         for kind in [CollectiveKind::Ring, CollectiveKind::Parallel] {
-            let coll = kind.build();
+            let coll = build(kind);
             let s = shards(3, 100);
             let mut got = s.clone();
             let stats = coll.allreduce_mean_range(&mut got, 10, 40);
@@ -818,7 +742,7 @@ mod tests {
             CollectiveKind::Parallel,
             CollectiveKind::TwoLevel { nodes: 3 },
         ] {
-            let coll = kind.build();
+            let coll = build(kind);
             for &(w, n) in &[(7usize, 3usize), (5, 4), (4, 1), (3, 2), (8, 8)] {
                 let s = shards(w, n);
                 let want = mean_reference(&s);
@@ -845,46 +769,8 @@ mod tests {
         }
     }
 
-    #[test]
-    fn kind_parses_config_spellings() {
-        assert_eq!(CollectiveKind::parse("ring"), Some(CollectiveKind::Ring));
-        assert_eq!(CollectiveKind::parse("parallel"), Some(CollectiveKind::Parallel));
-        assert_eq!(
-            CollectiveKind::parse("two-level"),
-            Some(CollectiveKind::TwoLevel { nodes: 2 })
-        );
-        assert_eq!(
-            CollectiveKind::parse("two_level"),
-            Some(CollectiveKind::TwoLevel { nodes: 2 })
-        );
-        assert_eq!(CollectiveKind::parse("bogus"), None);
-        assert_eq!(CollectiveKind::default(), CollectiveKind::Ring);
-        assert_eq!(CollectiveKind::TwoLevel { nodes: 4 }.name(), "two-level");
-    }
-
-    #[test]
-    fn two_level_split_degenerates_to_the_flat_ring() {
-        let n = 1000usize;
-        for w in [2usize, 3, 4, 8, 17] {
-            let flat = whole_vector_stats(w, n).bytes_moved;
-            // one node: everything intra, exactly the flat ring payload
-            let (intra, inter) = two_level_split(w, 1, n);
-            assert_eq!((intra, inter), (flat, 0), "w={w} nodes=1");
-            // one worker per node: everything inter, same total
-            let (intra, inter) = two_level_split(w, w, n);
-            assert_eq!((intra, inter), (0, flat), "w={w} nodes=w");
-            // a real hierarchy serializes strictly fewer billable bytes
-            for nodes in 2..w {
-                let (intra, inter) = two_level_split(w, nodes, n);
-                assert!(intra > 0 && inter > 0, "w={w} nodes={nodes}");
-                assert!(intra + inter <= flat, "w={w} nodes={nodes}");
-            }
-            // nodes beyond the world clamp to one worker per node
-            assert_eq!(two_level_split(w, 10 * w, n), two_level_split(w, w, n));
-        }
-        // single worker: nothing moves
-        assert_eq!(two_level_split(1, 4, n), (0, 0));
-    }
+    // `kind_parses_config_spellings` and `two_level_split_degenerates_to_
+    // the_flat_ring` moved to seesaw-core with the spec types they pin.
 
     #[test]
     fn two_level_mean_is_bit_identical_to_parallel_on_any_grid() {
@@ -893,8 +779,8 @@ mod tests {
         // sqnorm tap) is bit-identical to the ordered worker sum the
         // parallel collective computes, for every (nodes × workers)
         // split, and the tap is bit-identical across all three kinds.
-        let par = CollectiveKind::Parallel.build();
-        let ring = CollectiveKind::Ring.build();
+        let par = build(CollectiveKind::Parallel);
+        let ring = build(CollectiveKind::Ring);
         for &(w, n) in &[(2usize, 64usize), (3, 100), (4, 128), (6, 1000), (8, 8191)] {
             let s = shards(w, n);
             let mut want = s.clone();
@@ -903,7 +789,7 @@ mod tests {
             let mut ring_norms = Vec::new();
             ring.allreduce_mean_with_sqnorms(&mut s.clone(), &mut ring_norms);
             for nodes in 1..=w + 1 {
-                let coll = CollectiveKind::TwoLevel { nodes }.build();
+                let coll = build(CollectiveKind::TwoLevel { nodes });
                 assert_eq!(coll.name(), "two-level");
                 let mut got = s.clone();
                 let mut norms = Vec::new();

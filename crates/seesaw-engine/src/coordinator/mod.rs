@@ -42,12 +42,14 @@
 //! engine and reproduces the historical single-thread coordinator.
 
 mod checkpoint;
-pub mod elastic;
+// The elastic world policy is pure and lives in seesaw-core; re-exported
+// here so the historical `coordinator::elastic::…` paths keep resolving.
+pub use seesaw_core::elastic;
 pub mod worker;
 
 pub use checkpoint::{fnv1a64, Checkpoint, SPEC_HASH_UNKNOWN};
 pub use elastic::WorldPolicy;
-pub use worker::{GradSource, Microbatch, MicroStats, StepEngine, StepOutput, Worker};
+pub use worker::{GradSource, Microbatch, MicroStats, StepEngine, StepOutput, Worker, WorkerPool};
 
 use crate::collective::{CollectiveKind, CollectiveStats};
 use crate::config::{OptimizerKind, ScheduleSpec, TrainConfig};
@@ -554,30 +556,71 @@ impl Trainer {
         Ok(sum / n as f64)
     }
 
-    /// Full training run; returns the complete log.
-    pub fn run(&mut self) -> Result<RunLog> {
-        let mut state = match self.maybe_resume()? {
+    /// Mutable access to the step engine — the serve layer swaps its
+    /// shared [`WorkerPool`] in and out around each scheduled step
+    /// ([`StepEngine::swap_pool`]).
+    pub fn engine_mut(&mut self) -> &mut StepEngine {
+        &mut self.engine
+    }
+
+    /// Open a run: resume from `latest.ckpt` when one exists, else build
+    /// fresh state; pair it with an empty log. The serve layer drives the
+    /// returned pair step by step through [`Trainer::run_step`]; the
+    /// direct path ([`Trainer::run`]) loops over the same three methods,
+    /// so a multiplexed run cannot drift from a solo one.
+    pub fn begin(&mut self) -> Result<(TrainState, RunLog)> {
+        let state = match self.maybe_resume()? {
             Some(s) => s,
             None => self.init_state()?,
         };
-        let mut log = RunLog::new(format!("{}-{}", self.cfg.model, self.cfg.schedule.label()));
-        while state.tokens < self.total_tokens {
-            let mut rec = self.train_step(&mut state)?;
-            let is_last = state.tokens >= self.total_tokens;
-            if is_last || (self.cfg.eval_every > 0 && state.step % self.cfg.eval_every == 0) {
-                rec.val_ce = Some(self.evaluate(&state)?);
-            }
-            if self.cfg.checkpoint_every > 0 && state.step % self.cfg.checkpoint_every == 0 {
-                self.save_checkpoint(&state)?;
-            }
-            log.push(rec);
+        let log = RunLog::new(format!("{}-{}", self.cfg.model, self.cfg.schedule.label()));
+        Ok((state, log))
+    }
+
+    /// One scheduler-visible unit of work: a training step plus its eval
+    /// and periodic-checkpoint cadence edges, pushed onto `log`. Returns
+    /// the batch tokens the step consumed (the fair-share charge).
+    pub fn run_step(&mut self, state: &mut TrainState, log: &mut RunLog) -> Result<u64> {
+        let mut rec = self.train_step(state)?;
+        let batch_tokens = rec.batch_tokens;
+        let is_last = state.tokens >= self.total_tokens;
+        if is_last || (self.cfg.eval_every > 0 && state.step % self.cfg.eval_every == 0) {
+            rec.val_ce = Some(self.evaluate(state)?);
         }
+        if self.cfg.checkpoint_every > 0 && state.step % self.cfg.checkpoint_every == 0 {
+            self.save_checkpoint(state)?;
+        }
+        log.push(rec);
+        Ok(batch_tokens)
+    }
+
+    /// True once the token budget is spent and the run should finalize.
+    pub fn is_done(&self, state: &TrainState) -> bool {
+        state.tokens >= self.total_tokens
+    }
+
+    /// End-of-run effects: the final checkpoint (when a directory is
+    /// configured) and the CSV dump (when requested).
+    pub fn finalize(&mut self, state: &TrainState, log: &RunLog) -> Result<()> {
         if self.cfg.checkpoint_dir.is_some() {
-            self.save_checkpoint(&state)?;
+            self.save_checkpoint(state)?;
         }
         if let Some(path) = &self.cfg.out_csv {
             log.write_csv(path)?;
         }
+        Ok(())
+    }
+
+    /// Full training run; returns the complete log. Exactly
+    /// [`Trainer::begin`] + a [`Trainer::run_step`] loop +
+    /// [`Trainer::finalize`] — the same decomposition the serve layer
+    /// interleaves across tenants.
+    pub fn run(&mut self) -> Result<RunLog> {
+        let (mut state, mut log) = self.begin()?;
+        while !self.is_done(&state) {
+            self.run_step(&mut state, &mut log)?;
+        }
+        self.finalize(&state, &log)?;
         Ok(log)
     }
 

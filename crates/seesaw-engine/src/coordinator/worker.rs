@@ -172,8 +172,13 @@ fn pool_thread_main(rx: mpsc::Receiver<Job>) {
 /// first multi-threaded step, then parked on their channels between steps
 /// — replacing the per-step `std::thread::scope` spawn, whose setup cost
 /// scaled with exactly the large-batch steps Seesaw ramps into.
+///
+/// Public (with private internals) so the serve layer can own ONE pool
+/// and lend it to whichever run's engine is stepping, via
+/// [`StepEngine::swap_pool`] — threads stay parked across tenant
+/// switches instead of being respawned per run.
 #[derive(Default)]
-struct WorkerPool {
+pub struct WorkerPool {
     threads: Vec<PoolThread>,
 }
 
@@ -190,6 +195,11 @@ impl WorkerPool {
         while self.threads.len() < n {
             self.threads.push(PoolThread::spawn(self.threads.len()));
         }
+    }
+
+    /// Live (spawned and not exited) threads parked in this pool.
+    pub fn live_threads(&self) -> usize {
+        self.threads.iter().filter(|t| t.is_alive()).count()
     }
 
     /// Shrink to at most `n` threads (an elastic scale-in, DESIGN.md
@@ -286,7 +296,7 @@ impl StepEngine {
     /// first step, pool threads on the first multi-threaded step.
     pub fn new(exec: ExecSpec) -> Self {
         Self {
-            collective: exec.collective.build(),
+            collective: crate::collective::build(exec.collective),
             exec,
             workers: Vec::new(),
             bufs: Vec::new(),
@@ -304,6 +314,17 @@ impl StepEngine {
     /// dispatches work; they then persist across steps).
     pub fn pool_threads(&self) -> usize {
         self.pool.threads.iter().filter(|t| t.is_alive()).count()
+    }
+
+    /// Exchange this engine's pool with a caller-owned one — the lending
+    /// primitive the multi-tenant serve layer uses to run many engines
+    /// over ONE set of parked threads: swap the shared pool in, execute
+    /// the step, swap it back out. Sound at any point between steps:
+    /// [`StepEngine::execute`] re-plans workers, buffers and pool size
+    /// from scratch each call ([`WorkerPool::ensure`] grows or respawns
+    /// on demand), so an engine holds no step-spanning pool state.
+    pub fn swap_pool(&mut self, pool: &mut WorkerPool) {
+        std::mem::swap(&mut self.pool, pool);
     }
 
     /// Execute one optimizer step: shard `micro` round-robin over `world`

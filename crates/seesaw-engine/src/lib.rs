@@ -1,0 +1,34 @@
+//! # seesaw-engine — the execution layer of the Seesaw stack
+//!
+//! Owns every thread and every registered unsafe block in the
+//! workspace: the training coordinator and checkpoint machinery
+//! ([`coordinator`]), the data-parallel step engine with its persistent
+//! parked [`coordinator::WorkerPool`] ([`coordinator::StepEngine`]),
+//! the thread-backed collective implementations behind the
+//! [`collective::Collective`] trait (ring, thread-parallel, two-level —
+//! specs and cost model re-exported from `seesaw_core::collective`),
+//! the experiment harnesses ([`experiments`]), and the PJRT runtime
+//! bridge executing AOT HLO-text artifacts ([`runtime`]).
+//!
+//! The pure substrate (schedules, config, metrics, linreg, simd, data,
+//! elastic policy) lives in `seesaw-core` and is re-exported here so
+//! the engine's own modules — and downstream crates — can keep using
+//! `crate::config`-style paths unchanged.
+
+// House style: configs are built as `let mut c = Default::default()` plus
+// field assignments (see the experiment harnesses, tests) — suppress the
+// lint that rewrites that into one struct literal.
+#![allow(clippy::field_reassign_with_default)]
+// R3 hygiene: even inside registered unsafe fns (none today), each
+// unsafe operation must sit in its own block with its own SAFETY note.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub use seesaw_core::{config, data, elastic, linreg, metrics, schedule, simd, util};
+
+pub mod collective;
+pub mod coordinator;
+pub mod experiments;
+pub mod runtime;
+
+pub use seesaw_core::{ExecSpec, TrainConfig};
+pub use seesaw_core::{AdaptiveSeesaw, JointSchedule, Schedule, ScheduleKind};

@@ -1,0 +1,326 @@
+//! Run drivers: the unit of work the serve scheduler multiplexes.
+//!
+//! A [`RunDriver`] is one tenant's training run, advanced one
+//! scheduler-visible step at a time over a *borrowed* [`WorkerPool`] —
+//! the lending contract that lets every run in the registry share one
+//! set of parked threads
+//! ([`seesaw_engine::coordinator::StepEngine::swap_pool`]). Two
+//! productions:
+//!
+//! * [`TrainerDriver`] — the artifact-backed LM path: wraps a fully
+//!   configured [`Trainer`] and drives exactly the
+//!   `begin → run_step → finalize` decomposition `Trainer::run` itself
+//!   loops over, so a multiplexed run cannot drift from a solo one.
+//! * [`RecursionDriver`] — the artifact-free theory substrate: the
+//!   exact golden-trajectory step loop (query → risk step → exact GNS →
+//!   observe) over the NSGD risk recursion, emitting the same
+//!   bit-pattern trace lines the committed fixtures pin. This is the
+//!   driver the serve test suite replays the golden traces through.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+use seesaw_core::linreg::recursion::{Problem, RiskIter};
+use seesaw_core::metrics::RunLog;
+use seesaw_core::schedule::Schedule;
+use seesaw_engine::coordinator::{TrainState, Trainer, WorkerPool};
+use seesaw_engine::experiments::adaptive_exps::exact_gns;
+
+/// One tenant's run, as the fair-share scheduler sees it.
+///
+/// Contract: [`RunDriver::step`] advances the run by exactly one
+/// trajectory step and returns the batch tokens it consumed (the
+/// scheduler's fair-share charge) — or `Ok(0)` without side effects when
+/// the run was already complete. The borrowed pool must be returned in
+/// working order even if the step's own arithmetic panics; a panic or
+/// error escaping `step` evicts the run, never the pool.
+pub trait RunDriver {
+    /// Advance one step over the lent pool; returns the tokens consumed.
+    fn step(&mut self, pool: &mut WorkerPool) -> Result<u64>;
+
+    /// True once the run's token budget is spent.
+    fn is_done(&self) -> bool;
+
+    /// End-of-run effects (final checkpoint, CSV dump). Called exactly
+    /// once by the scheduler, after the step that completed the budget.
+    fn finish(&mut self) -> Result<()>;
+
+    /// The run's trajectory identity (what the `(lr, batch)` law hashes
+    /// to) — recorded in the registry at submit.
+    fn traj_identity(&self) -> String;
+
+    /// The run's execution fingerprint (topology: world, collective,
+    /// threads, overlap) — recorded in the registry at submit.
+    fn exec_fingerprint(&self) -> String;
+
+    /// Bind the tenant's checkpoint namespace (called by
+    /// [`crate::Serve::submit`] before the first step when the service
+    /// has a checkpoint root). Default: the driver does not checkpoint.
+    fn bind_checkpoint_dir(&mut self, _dir: &Path) {}
+
+    /// The run's trajectory so far as golden-comparable data lines
+    /// (`step,lr_bits,batch,ce_bits,gnorm_bits,gns_bits,cuts`). Empty
+    /// for drivers that log elsewhere.
+    fn trace_lines(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    /// One-line human summary of the run so far (what the CLI prints at
+    /// end of run). Default: the driver has nothing to say.
+    fn summary(&self) -> Option<String> {
+        None
+    }
+}
+
+/// Decode a panic payload into something loggable.
+pub(crate) fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| (*s).to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
+/// The artifact-backed LM driver: one [`Trainer`] stepped under the
+/// scheduler instead of its own `run()` loop.
+///
+/// The session (`TrainState` + `RunLog`) begins lazily on the first
+/// step, *after* [`RunDriver::bind_checkpoint_dir`] has pointed the
+/// trainer at its tenant namespace — so a resume finds the tenant's own
+/// `latest.ckpt`, never a sibling's.
+pub struct TrainerDriver {
+    trainer: Trainer,
+    sess: Option<(TrainState, RunLog)>,
+}
+
+impl TrainerDriver {
+    pub fn new(trainer: Trainer) -> Self {
+        Self { trainer, sess: None }
+    }
+
+    /// The log accumulated so far (empty before the first step).
+    pub fn log(&self) -> Option<&RunLog> {
+        self.sess.as_ref().map(|(_, log)| log)
+    }
+
+    fn ensure_begun(&mut self) -> Result<()> {
+        if self.sess.is_none() {
+            let sess = self.trainer.begin().context("opening run")?;
+            self.sess = Some(sess);
+        }
+        Ok(())
+    }
+}
+
+impl RunDriver for TrainerDriver {
+    fn step(&mut self, pool: &mut WorkerPool) -> Result<u64> {
+        self.ensure_begun()?;
+        let (state, log) = self.sess.as_mut().expect("session begun above");
+        if self.trainer.is_done(state) {
+            // resumed-at-budget (or re-picked after completion): the solo
+            // `while !is_done` loop would run zero steps — mirror it.
+            return Ok(0);
+        }
+        // Lend the shared pool for exactly one step. The swap-back runs
+        // unconditionally — a panicking step must not walk off with the
+        // service's parked threads — and the panic itself becomes this
+        // run's eviction error, not the service's crash. (GradSource
+        // panics on pool threads are already caught thread-side and
+        // surface as plain `Err`s; this guard covers the sequential
+        // path and the coordinator's own arithmetic.)
+        let trainer = &mut self.trainer;
+        trainer.engine.swap_pool(pool);
+        let stepped = catch_unwind(AssertUnwindSafe(|| trainer.run_step(state, log)));
+        trainer.engine.swap_pool(pool);
+        match stepped {
+            Ok(res) => res,
+            Err(payload) => Err(anyhow!("run panicked mid-step: {}", panic_msg(&*payload))),
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        match &self.sess {
+            Some((state, _)) => self.trainer.is_done(state),
+            None => false,
+        }
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.ensure_begun()?;
+        let (state, log) = self.sess.as_ref().expect("session begun above");
+        self.trainer.finalize(state, log)
+    }
+
+    fn traj_identity(&self) -> String {
+        self.trainer.cfg.trajectory_identity(self.trainer.total_tokens)
+    }
+
+    fn exec_fingerprint(&self) -> String {
+        self.trainer.cfg.exec_fingerprint()
+    }
+
+    fn bind_checkpoint_dir(&mut self, dir: &Path) {
+        assert!(
+            self.sess.is_none(),
+            "checkpoint namespace must be bound before the first step (resume \
+             would otherwise have read the wrong directory)"
+        );
+        self.trainer.cfg.checkpoint_dir = Some(dir.to_path_buf());
+    }
+
+    fn summary(&self) -> Option<String> {
+        let log = self.log()?;
+        Some(format!(
+            "done: {} steps, {} cuts, final train CE {:.4}, final val CE {}, serial time {:.1}s (modeled)",
+            log.total_steps(),
+            log.cut_count(),
+            log.final_train_ce().unwrap_or(f64::NAN),
+            log.final_val_ce().map(|v| format!("{v:.4}")).unwrap_or_else(|| "-".into()),
+            log.total_serial_time()
+        ))
+    }
+}
+
+/// One replayed step of a recursion run — the golden-trace row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRow {
+    pub step: u64,
+    pub lr: f64,
+    pub batch: u64,
+    /// Exact excess risk after the step — the CE stand-in.
+    pub ce: f64,
+    /// Exact `E‖g‖²` at the step's batch.
+    pub gnorm: f64,
+    /// Exact `B_noise` fed back to the schedule (`None`: signal ≤ 0).
+    pub gns: Option<f64>,
+    pub cuts: u32,
+}
+
+impl TraceRow {
+    /// The golden fixture's data-line rendering: f64 fields as IEEE-754
+    /// bit patterns, so comparisons are exact.
+    pub fn render(&self) -> String {
+        let gns = match self.gns {
+            Some(v) => format!("{:016x}", v.to_bits()),
+            None => "-".to_string(),
+        };
+        format!(
+            "{},{:016x},{},{:016x},{:016x},{},{}",
+            self.step,
+            self.lr.to_bits(),
+            self.batch,
+            self.ce.to_bits(),
+            self.gnorm.to_bits(),
+            gns,
+            self.cuts
+        )
+    }
+}
+
+/// The artifact-free driver: the exact golden step loop (query → cuts
+/// edge → risk step → exact GNS → observe) over the NSGD risk recursion,
+/// one loop iteration per scheduler step.
+pub struct RecursionDriver {
+    it: RiskIter,
+    sched: Box<dyn Schedule>,
+    total: u64,
+    tokens: u64,
+    step: u64,
+    last_phase: usize,
+    rows: Vec<TraceRow>,
+    label: String,
+    ckpt_dir: Option<PathBuf>,
+}
+
+impl RecursionDriver {
+    /// A driver over `problem`'s exact risk recursion under `sched`.
+    /// `label` names the trajectory in the registry and the checkpoint.
+    pub fn new(problem: &Problem, sched: Box<dyn Schedule>, label: impl Into<String>) -> Self {
+        let total = sched.total_tokens();
+        Self {
+            it: problem.iter(),
+            sched,
+            total,
+            tokens: 0,
+            step: 0,
+            last_phase: 0,
+            rows: Vec::new(),
+            label: label.into(),
+            ckpt_dir: None,
+        }
+    }
+
+    /// The trajectory so far.
+    pub fn rows(&self) -> &[TraceRow] {
+        &self.rows
+    }
+}
+
+impl RunDriver for RecursionDriver {
+    fn step(&mut self, _pool: &mut WorkerPool) -> Result<u64> {
+        if self.tokens >= self.total {
+            return Ok(0);
+        }
+        // one iteration of the golden drive loop, verbatim
+        let p = self.sched.query(self.tokens);
+        let cuts = p.phase.saturating_sub(self.last_phase) as u32;
+        self.last_phase = p.phase;
+        self.it.step(p.lr, p.batch_tokens);
+        self.tokens += p.batch_tokens;
+        self.step += 1;
+        let gnorm = self.it.grad_norm_sq(p.batch_tokens).total();
+        let gns = exact_gns(&self.it, p.batch_tokens);
+        if let Some(v) = gns {
+            self.sched.observe_gns(self.tokens, v);
+        }
+        self.rows.push(TraceRow {
+            step: self.step,
+            lr: p.lr,
+            batch: p.batch_tokens,
+            ce: self.it.risk(),
+            gnorm,
+            gns,
+            cuts,
+        });
+        Ok(p.batch_tokens)
+    }
+
+    fn is_done(&self) -> bool {
+        self.tokens >= self.total
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        let Some(dir) = &self.ckpt_dir else { return Ok(()) };
+        // a minimal, deterministic end-of-run checkpoint: enough to prove
+        // (in the namespace-isolation tests) that tenant A's file is
+        // tenant A's — the final risk bits differ whenever the runs do.
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint namespace {}", dir.display()))?;
+        let final_ce = self.rows.last().map(|r| r.ce.to_bits()).unwrap_or(0);
+        let body = format!(
+            "seesaw-serve recursion checkpoint v1\nlabel: {}\nsteps: {}\ntokens: {}\nfinal_ce_bits: {:016x}\n",
+            self.label, self.step, self.tokens, final_ce
+        );
+        let path = dir.join("latest.ckpt");
+        std::fs::write(&path, body)
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    fn traj_identity(&self) -> String {
+        format!("recursion:{}", self.label)
+    }
+
+    fn exec_fingerprint(&self) -> String {
+        // pure single-threaded arithmetic: no topology to fingerprint
+        "recursion:inline".to_string()
+    }
+
+    fn bind_checkpoint_dir(&mut self, dir: &Path) {
+        self.ckpt_dir = Some(dir.to_path_buf());
+    }
+
+    fn trace_lines(&self) -> Vec<String> {
+        self.rows.iter().map(TraceRow::render).collect()
+    }
+}

@@ -1,0 +1,361 @@
+//! # seesaw-serve — the multi-tenant run service (DESIGN.md §15)
+//!
+//! A long-lived coordinator that multiplexes many concurrent training
+//! runs over **one** shared [`WorkerPool`]: the unit of traffic is a
+//! *run*, not a process. Each tenant submits a [`RunDriver`] into the
+//! registry; the service advances runs one step at a time under
+//! **deterministic fair-share scheduling** and lends the pool to
+//! whichever run is stepping ([`StepEngine::swap_pool`] — threads stay
+//! parked across tenant switches instead of being respawned per run).
+//!
+//! ## Fair share, deterministically
+//!
+//! Seesaw runs have wildly time-varying per-step footprints: a mid-ramp
+//! run at 8× its base batch consumes 8× the tokens (and compute) per
+//! step that a fresh run does. Round-robin over *steps* would let it
+//! starve its siblings. The scheduler therefore keeps a **virtual time**
+//! per run — the tokens it has consumed so far, plus a join offset — and
+//! always steps the active run with the minimum `(vtime, id)`. Each step
+//! charges the batch tokens it actually consumed, so an 8×-batch run is
+//! picked ⅛ as often and every tenant advances at the same *token*
+//! rate. The rule reads nothing but the registry and the runs' own
+//! returned charges — no clocks, no thread timing — so a given sequence
+//! of `submit`/`cancel`/`step` calls always produces the same
+//! interleaving, and (because every run owns its full state and the
+//! pool is execution-transparent) **any** interleaving leaves each
+//! run's trajectory bit-identical to its solo execution; the property
+//! test in `tests/serve.rs` pins exactly that.
+//!
+//! ## Isolation
+//!
+//! * **Checkpoints**: with a checkpoint root configured, each tenant
+//!   gets its own namespace `<root>/<tenant>/` (bound into the driver
+//!   before its first step, so resumes read the tenant's own
+//!   `latest.ckpt` and never a sibling's).
+//! * **Panics**: a step that panics (or errors) evicts *that run* —
+//!   state [`RunPhase::Failed`], driver dropped — while the pool and
+//!   every sibling run survive untouched. This reuses the engine's
+//!   existing `catch_unwind` contract: pool threads already absorb
+//!   `GradSource` panics thread-side, and the drivers guarantee the
+//!   lent pool is swapped back even when the step's own arithmetic
+//!   unwinds.
+
+#![forbid(unsafe_code)]
+// House style (matches the workspace): builder-free config structs are
+// assembled field by field.
+#![allow(clippy::field_reassign_with_default)]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+
+use anyhow::{bail, ensure, Result};
+use seesaw_engine::coordinator::WorkerPool;
+
+mod driver;
+
+pub use driver::{RecursionDriver, RunDriver, TraceRow, TrainerDriver};
+
+/// Registry handle of one submitted run (stable for the service's
+/// lifetime; indexes the submit order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RunId(pub u64);
+
+impl std::fmt::Display for RunId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "run#{}", self.0)
+    }
+}
+
+/// Lifecycle phase of a registered run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunPhase {
+    /// In the scheduler's rotation.
+    Active,
+    /// Budget spent, `finish()` ran; results remain readable.
+    Done,
+    /// Evicted by [`Serve::cancel`]; driver dropped, no finalize.
+    Cancelled,
+    /// Evicted by a step error or panic; driver dropped.
+    Failed,
+}
+
+/// One registry entry: tenant → run, with the identity pair recorded at
+/// submit (so `list`/`poll` answer "what is this run" without touching
+/// the driver).
+struct RunHandle {
+    id: RunId,
+    tenant: String,
+    traj_identity: String,
+    exec_fingerprint: String,
+    /// Fair-share virtual time: tokens consumed + join offset.
+    vtime: u128,
+    steps: u64,
+    tokens: u64,
+    state: RunState,
+}
+
+enum RunState {
+    Active(Box<dyn RunDriver>),
+    /// Kept (not dropped) so results stay readable via [`Serve::trace`].
+    Done(Box<dyn RunDriver>),
+    Cancelled,
+    Failed(String),
+}
+
+impl RunState {
+    fn phase(&self) -> RunPhase {
+        match self {
+            RunState::Active(_) => RunPhase::Active,
+            RunState::Done(_) => RunPhase::Done,
+            RunState::Cancelled => RunPhase::Cancelled,
+            RunState::Failed(_) => RunPhase::Failed,
+        }
+    }
+}
+
+/// Poll/list snapshot of one run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunStatus {
+    pub id: RunId,
+    pub tenant: String,
+    pub phase: RunPhase,
+    /// Eviction reason when `phase == Failed`.
+    pub error: Option<String>,
+    /// Scheduler steps executed.
+    pub steps: u64,
+    /// Tokens consumed (== the run's fair-share charge so far).
+    pub tokens: u64,
+    pub traj_identity: String,
+    pub exec_fingerprint: String,
+}
+
+/// The multi-tenant run service: registry + fair-share scheduler + the
+/// one shared worker pool.
+pub struct Serve {
+    pool: WorkerPool,
+    checkpoint_root: Option<PathBuf>,
+    runs: Vec<RunHandle>,
+}
+
+impl Default for Serve {
+    fn default() -> Self {
+        Self::new(None)
+    }
+}
+
+impl Serve {
+    /// A service with an optional checkpoint root; each tenant
+    /// checkpoints under `<root>/<tenant>/`.
+    pub fn new(checkpoint_root: Option<PathBuf>) -> Self {
+        Self { pool: WorkerPool::default(), checkpoint_root, runs: Vec::new() }
+    }
+
+    /// The tenant's checkpoint namespace under the service root (`None`
+    /// when the service was built without one). The CLI uses this to
+    /// point a `Trainer`'s config at the right directory before
+    /// wrapping it in a [`TrainerDriver`].
+    pub fn checkpoint_namespace(&self, tenant: &str) -> Option<PathBuf> {
+        self.checkpoint_root.as_ref().map(|r| r.join(tenant))
+    }
+
+    /// Register a run for `tenant` and enter it into the scheduler
+    /// rotation. The tenant name becomes a directory component, so it
+    /// is validated; one *active* run per tenant (resubmitting after
+    /// the previous run reached a terminal phase is fine). The new run
+    /// joins at the minimum active virtual time — it gets its fair
+    /// share from now on, but no retroactive credit for steps it was
+    /// not registered for.
+    pub fn submit(&mut self, tenant: &str, mut driver: Box<dyn RunDriver>) -> Result<RunId> {
+        validate_tenant(tenant)?;
+        if self
+            .runs
+            .iter()
+            .any(|r| r.tenant == tenant && matches!(r.state, RunState::Active(_)))
+        {
+            bail!("tenant {tenant:?} already has an active run");
+        }
+        if let Some(ns) = self.checkpoint_namespace(tenant) {
+            driver.bind_checkpoint_dir(&ns);
+        }
+        let id = RunId(self.runs.len() as u64);
+        let join_vtime =
+            self.runs
+                .iter()
+                .filter(|r| matches!(r.state, RunState::Active(_)))
+                .map(|r| r.vtime)
+                .min()
+                .unwrap_or(0);
+        self.runs.push(RunHandle {
+            id,
+            tenant: tenant.to_string(),
+            traj_identity: driver.traj_identity(),
+            exec_fingerprint: driver.exec_fingerprint(),
+            vtime: join_vtime,
+            steps: 0,
+            tokens: 0,
+            state: RunState::Active(driver),
+        });
+        Ok(id)
+    }
+
+    /// Snapshot one run (`None`: unknown id).
+    pub fn poll(&self, id: RunId) -> Option<RunStatus> {
+        self.runs.get(id.0 as usize).map(status_of)
+    }
+
+    /// Snapshot every registered run, in submit order.
+    pub fn list(&self) -> Vec<RunStatus> {
+        self.runs.iter().map(status_of).collect()
+    }
+
+    /// Evict an active run: driver dropped (its end-of-run effects never
+    /// run), phase [`RunPhase::Cancelled`]; the pool and every sibling
+    /// are untouched. Errors on an unknown id or a run already out of
+    /// the rotation.
+    pub fn cancel(&mut self, id: RunId) -> Result<()> {
+        let Some(run) = self.runs.get_mut(id.0 as usize) else {
+            bail!("unknown run {id}");
+        };
+        ensure!(
+            matches!(run.state, RunState::Active(_)),
+            "{id} ({}) is not active (phase {:?})",
+            run.tenant,
+            run.state.phase()
+        );
+        run.state = RunState::Cancelled;
+        Ok(())
+    }
+
+    /// One fair-share scheduling decision: step the active run with the
+    /// minimum `(vtime, id)`. Returns the run stepped, or `None` when no
+    /// run is active. A step error or panic evicts that run (phase
+    /// [`RunPhase::Failed`]) and still returns its id — the service
+    /// itself never fails on tenant faults.
+    pub fn step(&mut self) -> Option<RunId> {
+        let idx = self
+            .runs
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| matches!(r.state, RunState::Active(_)))
+            .min_by_key(|(_, r)| (r.vtime, r.id))
+            .map(|(i, _)| i)?;
+        let id = self.runs[idx].id;
+        self.step_index(idx);
+        Some(id)
+    }
+
+    /// Step one specific run, bypassing the fair-share pick (the
+    /// interleaving-invariance property test drives this directly).
+    /// Returns `false` when the run is not in the rotation; errors on an
+    /// unknown id.
+    pub fn step_run(&mut self, id: RunId) -> Result<bool> {
+        let Some(run) = self.runs.get(id.0 as usize) else {
+            bail!("unknown run {id}");
+        };
+        if !matches!(run.state, RunState::Active(_)) {
+            return Ok(false);
+        }
+        self.step_index(id.0 as usize);
+        Ok(true)
+    }
+
+    /// Run the scheduler until every registered run has left the
+    /// rotation; returns the number of steps executed.
+    pub fn drain(&mut self) -> u64 {
+        let mut steps = 0u64;
+        while self.step().is_some() {
+            steps += 1;
+        }
+        steps
+    }
+
+    /// The trajectory of a run that still holds its driver (active or
+    /// done), as golden-comparable data lines.
+    pub fn trace(&self, id: RunId) -> Option<Vec<String>> {
+        match &self.runs.get(id.0 as usize)?.state {
+            RunState::Active(d) | RunState::Done(d) => Some(d.trace_lines()),
+            _ => None,
+        }
+    }
+
+    /// The one-line human summary of a run that still holds its driver
+    /// (the CLI's end-of-run report line).
+    pub fn summary(&self, id: RunId) -> Option<String> {
+        match &self.runs.get(id.0 as usize)?.state {
+            RunState::Active(d) | RunState::Done(d) => d.summary(),
+            _ => None,
+        }
+    }
+
+    /// Live threads in the shared pool (diagnostics; they persist parked
+    /// across runs and tenant switches).
+    pub fn pool_threads(&self) -> usize {
+        self.pool.live_threads()
+    }
+
+    /// Advance the run at registry index `idx` by one step, charging its
+    /// virtual time and handling completion/eviction. The pool and the
+    /// run entry are disjoint borrows of `self`, so the driver can hold
+    /// the pool while the entry is updated around it.
+    fn step_index(&mut self, idx: usize) {
+        let pool = &mut self.pool;
+        let run = &mut self.runs[idx];
+        let RunState::Active(driver) = &mut run.state else { return };
+        // Defense in depth: drivers catch their own mid-step panics (and
+        // always swap the lent pool back), but a panic escaping a
+        // misbehaving driver must still only evict that run.
+        let stepped = catch_unwind(AssertUnwindSafe(|| driver.step(pool)));
+        match stepped {
+            Ok(Ok(charge)) => {
+                run.steps += 1;
+                run.tokens += charge;
+                run.vtime += charge as u128;
+                if driver.is_done() {
+                    let finished = driver.finish();
+                    let taken = std::mem::replace(&mut run.state, RunState::Cancelled);
+                    let RunState::Active(d) = taken else { unreachable!("matched Active above") };
+                    run.state = match finished {
+                        Ok(()) => RunState::Done(d),
+                        Err(e) => RunState::Failed(format!("finalize failed: {e:#}")),
+                    };
+                }
+            }
+            Ok(Err(e)) => {
+                run.state = RunState::Failed(format!("step failed: {e:#}"));
+            }
+            Err(payload) => {
+                run.state =
+                    RunState::Failed(format!("step panicked: {}", driver::panic_msg(&*payload)));
+            }
+        }
+    }
+}
+
+fn status_of(r: &RunHandle) -> RunStatus {
+    RunStatus {
+        id: r.id,
+        tenant: r.tenant.clone(),
+        phase: r.state.phase(),
+        error: match &r.state {
+            RunState::Failed(e) => Some(e.clone()),
+            _ => None,
+        },
+        steps: r.steps,
+        tokens: r.tokens,
+        traj_identity: r.traj_identity.clone(),
+        exec_fingerprint: r.exec_fingerprint.clone(),
+    }
+}
+
+/// Tenant names become checkpoint directory components: restrict to a
+/// conservative charset and refuse path tricks.
+fn validate_tenant(tenant: &str) -> Result<()> {
+    ensure!(!tenant.is_empty(), "tenant name must not be empty");
+    ensure!(tenant.len() <= 64, "tenant name over 64 bytes: {tenant:?}");
+    ensure!(
+        tenant.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.')),
+        "tenant name may only contain [A-Za-z0-9._-]: {tenant:?}"
+    );
+    ensure!(tenant != "." && tenant != "..", "tenant name must not be a dot path: {tenant:?}");
+    Ok(())
+}

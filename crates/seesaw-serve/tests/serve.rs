@@ -1,0 +1,464 @@
+//! Serve-layer suite (DESIGN.md §15): run lifecycle, fair-share
+//! weighting, tenant checkpoint-namespace isolation, panic eviction over
+//! the shared pool — and the two refactor tripwires the workspace split
+//! hangs on:
+//!
+//! * the committed golden fixtures pass **unmodified** through the serve
+//!   path (a run submitted through [`Serve`] is bit-identical to the
+//!   direct drive loop that blessed them), and
+//! * the **interleaving-invariance property**: for any fair-share
+//!   interleaving of ≥ 3 concurrent runs, each run's
+//!   `(lr, batch, ce, gnorm_sq, gns, cuts)` trace is bit-identical to
+//!   its solo execution.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::Result;
+use seesaw_core::linreg::recursion::Problem;
+use seesaw_core::linreg::spectrum::Spectrum;
+use seesaw_core::schedule::{AdaptiveSeesaw, JointSchedule, Schedule, ScheduleKind};
+use seesaw_core::util::rng::Rng;
+use seesaw_core::util::TempDir;
+use seesaw_engine::coordinator::{GradSource, Microbatch, MicroStats, StepEngine, WorkerPool};
+use seesaw_serve::{RecursionDriver, RunDriver, RunPhase, Serve};
+
+// ---------------------------------------------------------------- helpers
+
+/// The golden cosine trace's exact configuration (rust/tests/golden.rs).
+fn cosine_fixed_driver() -> Box<dyn RunDriver> {
+    let problem = Problem::new(Spectrum::Isotropic { dim: 32 }, 0.25, 4.0);
+    let sched = JointSchedule::new(0.05, 32, 640, 6_400, ScheduleKind::CosineContinuous);
+    Box::new(RecursionDriver::new(&problem, Box::new(sched), "cosine-fixed"))
+}
+
+/// The golden adaptive trace's exact configuration (rust/tests/golden.rs).
+fn adaptive_seesaw_driver() -> Box<dyn RunDriver> {
+    let problem = Problem::new(Spectrum::Isotropic { dim: 16 }, 1.0, 16.0);
+    let sched = AdaptiveSeesaw::new(0.05, 16, 800, 8_000, 2.0).hysteresis(400).max_cuts(6);
+    Box::new(RecursionDriver::new(&problem, Box::new(sched), "adaptive-seesaw"))
+}
+
+/// A third, distinct configuration so concurrency tests run ≥ 3 tenants.
+fn third_driver() -> Box<dyn RunDriver> {
+    let problem = Problem::new(Spectrum::Isotropic { dim: 8 }, 0.5, 2.0);
+    let sched = AdaptiveSeesaw::new(0.08, 8, 400, 4_000, 2.0).hysteresis(200).max_cuts(4);
+    Box::new(RecursionDriver::new(&problem, Box::new(sched), "third"))
+}
+
+/// Drive one run alone through a fresh service; return its trace lines.
+fn solo_trace(driver: Box<dyn RunDriver>) -> Vec<String> {
+    let mut serve = Serve::new(None);
+    let id = serve.submit("solo", driver).unwrap();
+    serve.drain();
+    assert_eq!(serve.poll(id).unwrap().phase, RunPhase::Done);
+    serve.trace(id).unwrap()
+}
+
+/// Data lines (comments stripped) of a committed golden fixture.
+fn fixture_lines(file: &str) -> Vec<String> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../../rust/tests/golden")
+        .join(file);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("golden fixture {} unreadable: {e}", path.display()));
+    text.lines().filter(|l| !l.starts_with('#')).map(str::to_string).collect()
+}
+
+// ---------------------------------------------------------------- lifecycle
+
+#[test]
+fn submit_poll_cancel_list_lifecycle() {
+    let mut serve = Serve::new(None);
+
+    // tenant names become directory components: path tricks refused
+    let too_long = "x".repeat(65);
+    for bad in ["", "a/b", "..", ".", "a b", too_long.as_str()] {
+        assert!(serve.submit(bad, cosine_fixed_driver()).is_err(), "tenant {bad:?} accepted");
+    }
+
+    let a = serve.submit("alice", cosine_fixed_driver()).unwrap();
+    let st = serve.poll(a).unwrap();
+    assert_eq!(st.phase, RunPhase::Active);
+    assert_eq!((st.steps, st.tokens), (0, 0));
+    assert!(st.traj_identity.contains("cosine-fixed"));
+    assert_eq!(st.exec_fingerprint, "recursion:inline");
+
+    // one active run per tenant
+    assert!(serve.submit("alice", adaptive_seesaw_driver()).is_err());
+
+    // a few fair-share steps all land on the only active run
+    for _ in 0..5 {
+        assert_eq!(serve.step(), Some(a));
+    }
+    let st = serve.poll(a).unwrap();
+    assert_eq!(st.steps, 5);
+    assert_eq!(st.tokens, 5 * 32, "cosine trace consumes its constant batch per step");
+
+    // cancel: evicted, sibling-free service goes idle
+    serve.cancel(a).unwrap();
+    assert_eq!(serve.poll(a).unwrap().phase, RunPhase::Cancelled);
+    assert!(serve.cancel(a).is_err(), "cancelling a cancelled run must fail");
+    assert_eq!(serve.step(), None);
+    assert!(serve.trace(a).is_none(), "a cancelled run's driver is dropped");
+
+    // the tenant may resubmit once its previous run is out of the rotation
+    let a2 = serve.submit("alice", adaptive_seesaw_driver()).unwrap();
+    assert_ne!(a, a2);
+    serve.drain();
+    assert_eq!(serve.poll(a2).unwrap().phase, RunPhase::Done);
+
+    // unknown ids
+    assert!(serve.poll(seesaw_serve::RunId(99)).is_none());
+    assert!(serve.cancel(seesaw_serve::RunId(99)).is_err());
+    assert!(serve.step_run(seesaw_serve::RunId(99)).is_err());
+
+    let statuses = serve.list();
+    assert_eq!(statuses.len(), 2);
+    assert_eq!(statuses[0].phase, RunPhase::Cancelled);
+    assert_eq!(statuses[1].phase, RunPhase::Done);
+}
+
+#[test]
+fn fair_share_weights_steps_by_batch_tokens() {
+    // one run at 8× the other's constant batch: fair share must step the
+    // small-batch run ~8× as often so both advance at the same token rate.
+    let small = Problem::new(Spectrum::Isotropic { dim: 8 }, 0.25, 4.0);
+    let big = Problem::new(Spectrum::Isotropic { dim: 8 }, 0.25, 4.0);
+    let mut serve = Serve::new(None);
+    let s = serve
+        .submit(
+            "small",
+            Box::new(RecursionDriver::new(
+                &small,
+                Box::new(JointSchedule::new(0.05, 32, 640, 64_000, ScheduleKind::CosineContinuous)),
+                "small-batch",
+            )),
+        )
+        .unwrap();
+    let b = serve
+        .submit(
+            "big",
+            Box::new(RecursionDriver::new(
+                &big,
+                Box::new(JointSchedule::new(
+                    0.05,
+                    256,
+                    5_120,
+                    64_000,
+                    ScheduleKind::CosineContinuous,
+                )),
+                "big-batch",
+            )),
+        )
+        .unwrap();
+    for _ in 0..900 {
+        if serve.step().is_none() {
+            break;
+        }
+        let (ts, tb) =
+            (serve.poll(s).unwrap().tokens, serve.poll(b).unwrap().tokens);
+        // token progress never diverges by more than one big batch
+        assert!(
+            (ts as i64 - tb as i64).unsigned_abs() <= 256,
+            "fair share lost token balance: {ts} vs {tb}"
+        );
+    }
+    let (ss, sb) = (serve.poll(s).unwrap(), serve.poll(b).unwrap());
+    assert!(
+        ss.steps >= 7 * sb.steps,
+        "the small-batch run should step ~8× as often (got {} vs {})",
+        ss.steps,
+        sb.steps
+    );
+}
+
+// ------------------------------------------------- golden through serve
+
+#[test]
+fn golden_traces_pass_unmodified_through_serve() {
+    // acceptance criterion: the committed fixtures, bit-for-bit, through
+    // the serve path — no re-blessing allowed for this refactor.
+    let cosine = solo_trace(cosine_fixed_driver());
+    assert_eq!(cosine, fixture_lines("cosine_fixed.trace"), "cosine-fixed diverged via serve");
+
+    let adaptive = solo_trace(adaptive_seesaw_driver());
+    assert_eq!(
+        adaptive,
+        fixture_lines("adaptive_seesaw.trace"),
+        "adaptive-seesaw diverged via serve"
+    );
+}
+
+#[test]
+fn concurrent_golden_runs_match_fixtures_under_fair_share() {
+    // all three tenants multiplexed by the fair-share scheduler; the two
+    // golden tenants must still reproduce their committed fixtures.
+    let mut serve = Serve::new(None);
+    let c = serve.submit("cosine", cosine_fixed_driver()).unwrap();
+    let a = serve.submit("adaptive", adaptive_seesaw_driver()).unwrap();
+    let t = serve.submit("third", third_driver()).unwrap();
+    serve.drain();
+    for id in [c, a, t] {
+        assert_eq!(serve.poll(id).unwrap().phase, RunPhase::Done);
+    }
+    assert_eq!(serve.trace(c).unwrap(), fixture_lines("cosine_fixed.trace"));
+    assert_eq!(serve.trace(a).unwrap(), fixture_lines("adaptive_seesaw.trace"));
+    assert_eq!(serve.trace(t).unwrap(), solo_trace(third_driver()));
+}
+
+#[test]
+fn interleaving_invariance_property() {
+    // THE serve determinism property: for any interleaving of ≥ 3
+    // concurrent runs — here random step_run orders, a strict superset
+    // of what the fair-share rule can produce — every run's trace is
+    // bit-identical to its solo execution.
+    let solos = [
+        solo_trace(cosine_fixed_driver()),
+        solo_trace(adaptive_seesaw_driver()),
+        solo_trace(third_driver()),
+    ];
+    for seed in 0..8u64 {
+        let mut rng = Rng::seed_from_u64(0x5EE5A11 ^ seed);
+        let mut serve = Serve::new(None);
+        let ids = [
+            serve.submit("cosine", cosine_fixed_driver()).unwrap(),
+            serve.submit("adaptive", adaptive_seesaw_driver()).unwrap(),
+            serve.submit("third", third_driver()).unwrap(),
+        ];
+        loop {
+            let active: Vec<_> = serve
+                .list()
+                .into_iter()
+                .filter(|s| s.phase == RunPhase::Active)
+                .map(|s| s.id)
+                .collect();
+            if active.is_empty() {
+                break;
+            }
+            let pick = active[rng.range(0, active.len())];
+            assert!(serve.step_run(pick).unwrap());
+        }
+        for (id, solo) in ids.iter().zip(&solos) {
+            assert_eq!(
+                &serve.trace(*id).unwrap(),
+                solo,
+                "seed {seed}: {id} diverged from its solo trace under interleaving"
+            );
+        }
+    }
+}
+
+#[test]
+fn cancelled_run_eviction_keeps_siblings_bit_identical() {
+    let solo_cosine = solo_trace(cosine_fixed_driver());
+    let solo_third = solo_trace(third_driver());
+
+    let mut serve = Serve::new(None);
+    let c = serve.submit("cosine", cosine_fixed_driver()).unwrap();
+    let a = serve.submit("adaptive", adaptive_seesaw_driver()).unwrap();
+    let t = serve.submit("third", third_driver()).unwrap();
+    // interleave a while, then evict the middle tenant
+    for _ in 0..120 {
+        serve.step();
+    }
+    serve.cancel(a).unwrap();
+    serve.drain();
+    assert_eq!(serve.poll(a).unwrap().phase, RunPhase::Cancelled);
+    assert_eq!(serve.poll(c).unwrap().phase, RunPhase::Done);
+    assert_eq!(serve.poll(t).unwrap().phase, RunPhase::Done);
+    assert_eq!(serve.trace(c).unwrap(), solo_cosine, "cosine perturbed by sibling eviction");
+    assert_eq!(serve.trace(t).unwrap(), solo_third, "third perturbed by sibling eviction");
+}
+
+// ------------------------------------------------- checkpoint namespaces
+
+#[test]
+fn tenant_checkpoint_namespaces_do_not_cross_contaminate() {
+    let dir = TempDir::new("serve-ns").unwrap();
+    let mut serve = Serve::new(Some(dir.path().to_path_buf()));
+    assert_eq!(
+        serve.checkpoint_namespace("alice").unwrap(),
+        dir.path().join("alice")
+    );
+
+    // two tenants, same schedule, different problems — each must end up
+    // with its OWN latest.ckpt under its own namespace.
+    let sched = || {
+        Box::new(JointSchedule::new(0.05, 32, 640, 6_400, ScheduleKind::CosineContinuous))
+            as Box<dyn Schedule>
+    };
+    let pa = Problem::new(Spectrum::Isotropic { dim: 16 }, 0.25, 4.0);
+    let pb = Problem::new(Spectrum::Isotropic { dim: 24 }, 0.25, 4.0);
+    let a = serve.submit("alice", Box::new(RecursionDriver::new(&pa, sched(), "alice"))).unwrap();
+    let b = serve.submit("bob", Box::new(RecursionDriver::new(&pb, sched(), "bob"))).unwrap();
+    serve.drain();
+    assert_eq!(serve.poll(a).unwrap().phase, RunPhase::Done);
+    assert_eq!(serve.poll(b).unwrap().phase, RunPhase::Done);
+
+    let final_ce_bits = |id| {
+        let trace = serve.trace(id).unwrap();
+        // data line: step,lr_bits,batch,ce_bits,gnorm_bits,gns_bits,cuts
+        trace.last().unwrap().split(',').nth(3).unwrap().to_string()
+    };
+    for (tenant, id) in [("alice", a), ("bob", b)] {
+        let path = dir.path().join(tenant).join("latest.ckpt");
+        let body = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{} missing: {e}", path.display()));
+        assert!(body.contains(&format!("label: {tenant}\n")), "{tenant}: wrong label\n{body}");
+        assert!(
+            body.contains(&format!("final_ce_bits: {}", final_ce_bits(id))),
+            "{tenant}: checkpoint carries another run's trajectory\n{body}"
+        );
+    }
+}
+
+// --------------------------------------------- shared pool + panic eviction
+
+/// Deterministic engine-backed gradient source (the FakeSource idiom).
+struct SinSource {
+    elems: usize,
+}
+
+impl GradSource for SinSource {
+    fn grad_elements(&self) -> usize {
+        self.elems
+    }
+    fn accumulate(&self, tokens: &[i32], targets: &[i32], sink: &mut [f32]) -> Result<MicroStats> {
+        let base = (tokens[0] + 2 * targets[0]) as f32;
+        for (k, g) in sink.iter_mut().enumerate() {
+            *g += (base * 0.01 + k as f32 * 0.1).sin();
+        }
+        Ok(MicroStats { ce: base * 0.5, zsq: base * 0.25 })
+    }
+}
+
+/// [`SinSource`] that panics on the Nth accumulate call — the poisoned
+/// tenant. The pool's thread-side `catch_unwind` turns the panic into a
+/// step error; the serve layer must evict only this run.
+struct PanicSource {
+    inner: SinSource,
+    calls: AtomicU64,
+    panic_at: u64,
+}
+
+impl GradSource for PanicSource {
+    fn grad_elements(&self) -> usize {
+        self.inner.grad_elements()
+    }
+    fn accumulate(&self, tokens: &[i32], targets: &[i32], sink: &mut [f32]) -> Result<MicroStats> {
+        if self.calls.fetch_add(1, Ordering::Relaxed) + 1 == self.panic_at {
+            panic!("poisoned tenant: injected GradSource panic");
+        }
+        self.inner.accumulate(tokens, targets, sink)
+    }
+}
+
+/// A run driving a real [`StepEngine`] over the lent pool — the driver
+/// that actually exercises multi-tenant pool sharing.
+struct EngineDriver<S: GradSource> {
+    engine: StepEngine,
+    src: S,
+    world: usize,
+    n_micro: u64,
+    total_steps: u64,
+    step: u64,
+    trace: Vec<String>,
+}
+
+impl<S: GradSource> EngineDriver<S> {
+    fn new(src: S, worker_threads: usize, world: usize, n_micro: u64, total_steps: u64) -> Self {
+        let exec = seesaw_core::config::ExecSpec { worker_threads, ..Default::default() };
+        Self { engine: StepEngine::new(exec), src, world, n_micro, total_steps, step: 0, trace: Vec::new() }
+    }
+
+    fn micros(&self) -> Vec<Microbatch> {
+        (0..self.n_micro)
+            .map(|i| Microbatch {
+                index: i,
+                tokens: vec![(self.step * 7 + i * 3 + 1) as i32; 4],
+                targets: vec![(self.step * 5 + i * 2 + 1) as i32; 4],
+            })
+            .collect()
+    }
+}
+
+impl<S: GradSource> RunDriver for EngineDriver<S> {
+    fn step(&mut self, pool: &mut WorkerPool) -> Result<u64> {
+        if self.step >= self.total_steps {
+            return Ok(0);
+        }
+        let micro = self.micros();
+        self.engine.swap_pool(pool);
+        let result = self.engine.execute(&self.src, self.world, micro);
+        self.engine.swap_pool(pool);
+        let out = result?;
+        self.step += 1;
+        let grad_bits: String =
+            self.engine.mean_grad().iter().take(4).map(|g| format!("{:08x}", g.to_bits())).collect();
+        self.trace.push(format!("{},{:016x},{grad_bits}", self.step, out.ce_sum.to_bits()));
+        Ok(self.n_micro)
+    }
+
+    fn is_done(&self) -> bool {
+        self.step >= self.total_steps
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn traj_identity(&self) -> String {
+        format!("engine-test:{}x{}", self.world, self.total_steps)
+    }
+
+    fn exec_fingerprint(&self) -> String {
+        format!("engine-test:threads={}", self.engine.exec.worker_threads)
+    }
+
+    fn trace_lines(&self) -> Vec<String> {
+        self.trace.clone()
+    }
+}
+
+#[test]
+fn panicking_run_is_evicted_and_the_shared_pool_survives() {
+    let healthy = || EngineDriver::new(SinSource { elems: 64 }, 2, 4, 8, 12);
+    let solo = solo_trace(Box::new(healthy()));
+    assert_eq!(solo.len(), 12);
+
+    let mut serve = Serve::new(None);
+    let good = serve.submit("good", Box::new(healthy())).unwrap();
+    let bad = serve
+        .submit(
+            "bad",
+            Box::new(EngineDriver::new(
+                PanicSource { inner: SinSource { elems: 64 }, calls: AtomicU64::new(0), panic_at: 20 },
+                2,
+                4,
+                8,
+                12,
+            )),
+        )
+        .unwrap();
+    serve.drain();
+
+    // the poisoned tenant is evicted with the pool's panic diagnosis…
+    let st = serve.poll(bad).unwrap();
+    assert_eq!(st.phase, RunPhase::Failed);
+    assert!(
+        st.error.as_deref().unwrap().contains("worker thread panicked"),
+        "unexpected eviction error: {:?}",
+        st.error
+    );
+
+    // …while the sibling sharing the same pool is untouched, bit for bit
+    assert_eq!(serve.poll(good).unwrap().phase, RunPhase::Done);
+    assert_eq!(serve.trace(good).unwrap(), solo, "sibling perturbed by the poisoned tenant");
+
+    // the pool itself survived the eviction and serves new tenants
+    assert!(serve.pool_threads() >= 1, "shared pool lost its threads");
+    let again = serve.submit("good2", Box::new(healthy())).unwrap();
+    serve.drain();
+    assert_eq!(serve.poll(again).unwrap().phase, RunPhase::Done);
+    assert_eq!(serve.trace(again).unwrap(), solo);
+}

@@ -2,53 +2,42 @@
 //!
 //! Production-style reproduction of *"Seesaw: Accelerating Training by
 //! Balancing Learning Rate and Batch Size Scheduling"* (Meterez et al.,
-//! 2025) as a three-layer rust + JAX + Pallas stack:
+//! 2025) as a three-layer rust + JAX + Pallas stack.
 //!
-//! * **L3 (this crate)** — the training coordinator: joint LR/batch-size
-//!   schedules ([`schedule`], including the paper's Algorithm 1 and the
-//!   GNS-driven [`schedule::AdaptiveSeesaw`] controller fed by the online
-//!   gradient-noise-scale estimator [`metrics::GnsEstimator`]), a
-//!   data-parallel **step engine** ([`coordinator::StepEngine`]) whose
-//!   workers accumulate gradients into preallocated flat buffers on real
-//!   scoped threads and combine them through a pluggable
-//!   [`collective::Collective`] (configured by [`config::ExecSpec`],
-//!   including the elastic [`coordinator::WorldPolicy`] that grows the
-//!   fleet with the batch ramp and reshards across resumes — DESIGN.md
-//!   §11), plus the noisy-linear-regression theory substrate that
-//!   verifies Theorem 1, Corollary 1 and Lemma 4 exactly ([`linreg`]).
-//!   The accumulate → allreduce → sqnorm hot path runs on the
-//!   lane-chunked kernels and fixed-shape tree reductions of [`simd`]
-//!   (DESIGN.md §12) — partition-invariant by construction.
-//! * **L2/L1 (python/, build-time only)** — a JAX transformer LM whose
-//!   attention / cross-entropy / AdamW hot-spots are Pallas kernels,
-//!   AOT-lowered once to HLO-text artifacts.
-//! * **Runtime bridge** — [`runtime`] loads those artifacts through the
-//!   PJRT CPU client (`xla` crate) and executes them from the rust hot
-//!   path; Python never runs at train time.
+//! This crate is the **facade** over the workspace split:
+//!
+//! * [`seesaw_core`] (re-exported as [`config`], [`schedule`],
+//!   [`metrics`], [`linreg`], [`data`], [`simd`], [`util`],
+//!   [`elastic`], and the collective *spec* half of [`collective`]) —
+//!   the pure layer: joint LR/batch schedules (the paper's Algorithm 1
+//!   and the GNS-driven [`schedule::AdaptiveSeesaw`] controller fed by
+//!   [`metrics::GnsEstimator`]), the exact NSGD risk recursion
+//!   (Theorem 1, Corollary 1, Lemma 4), and the lane-chunked kernels
+//!   with fixed-shape tree reductions (DESIGN.md §12) — partition-
+//!   invariant by construction.
+//! * [`seesaw_engine`] (re-exported as [`coordinator`], [`runtime`],
+//!   [`experiments`], and the implementation half of [`collective`]) —
+//!   the execution layer: the data-parallel step engine
+//!   ([`coordinator::StepEngine`]) whose workers accumulate gradients
+//!   into preallocated flat buffers on real scoped threads and combine
+//!   them through a pluggable [`collective::Collective`], plus the PJRT
+//!   bridge executing AOT HLO-text artifacts ([`runtime`]); Python
+//!   never runs at train time.
+//! * [`seesaw_serve`] (re-exported as [`serve`]) — the long-lived
+//!   multi-tenant coordinator service: many concurrent runs
+//!   multiplexed over ONE shared worker pool under deterministic
+//!   fair-share scheduling (DESIGN.md §15).
 //!
 //! See `DESIGN.md` for the experiment index (every paper table/figure →
 //! bench harness) and `EXPERIMENTS.md` for paper-vs-measured results.
 
-// House style: configs are built as `let mut c = Default::default()` plus
-// field assignments (see `TrainConfig::from_json`, the experiment
-// harnesses, tests) — suppress the lint that rewrites that into one
-// struct literal.
-#![allow(clippy::field_reassign_with_default)]
-// R3 hygiene: even inside registered unsafe fns (none today), each
-// unsafe operation must sit in its own block with its own SAFETY note.
-#![deny(unsafe_op_in_unsafe_fn)]
+#![forbid(unsafe_code)]
 
-pub mod collective;
-pub mod config;
-pub mod coordinator;
-pub mod data;
-pub mod experiments;
-pub mod linreg;
-pub mod metrics;
-pub mod runtime;
-pub mod schedule;
-pub mod simd;
-pub mod util;
+pub use seesaw_engine::{
+    collective, config, coordinator, data, elastic, experiments, linreg, metrics, runtime,
+    schedule, simd, util,
+};
+pub use seesaw_serve as serve;
 
 pub use config::{ExecSpec, TrainConfig};
 pub use schedule::{AdaptiveSeesaw, JointSchedule, Schedule, ScheduleKind};

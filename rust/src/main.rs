@@ -11,6 +11,7 @@
 //!              [--variant ref|pallas] [--out-csv path]
 //!              [--gns-ema 0.9] [--hysteresis TOKENS]   (with --schedule adaptive)
 //!              [--checkpoint-dir DIR] [--checkpoint-every STEPS]
+//!              [--tenant NAME]
 //! seesaw exp <figure1|table1|figure2|figure3|figure4|figure5|figure6|
 //!             figure7|theorem1|corollary1|lemma1|lemma4|assumption2|
 //!             adaptive|all-theory> [--full] [--alpha 1.1]
@@ -37,14 +38,21 @@
 //! is logged as a reshard event, and the GNS estimator is resharded
 //! (DESIGN.md §11, README "Elastic scale-out").
 //!
-//! With `--checkpoint-dir` the run saves `latest.ckpt` every
-//! `--checkpoint-every` steps (and at the end) and **resumes** from it on
-//! relaunch — including adaptive runs: the v3 checkpoint carries the
+//! `train` is a thin shell over the multi-tenant serve layer (DESIGN.md
+//! §15): the configured run is submitted to a [`seesaw::serve::Serve`]
+//! as tenant `--tenant` (default `default`) and drained to completion —
+//! one CLI run is simply the one-tenant case of the service. With
+//! `--checkpoint-dir DIR` the flag names the service's checkpoint
+//! *root*: the run saves `DIR/<tenant>/latest.ckpt` every
+//! `--checkpoint-every` steps (and at the end) and **resumes** from it
+//! on relaunch — including adaptive runs: the v3 checkpoint carries the
 //! controller's cut state, the GNS estimator's EMAs and the execution
 //! fingerprint, and the resumed trajectory is bit-identical to an
 //! uninterrupted one. A checkpoint written under a different *schedule*
 //! configuration is rejected with the differing fields named; a
 //! different *topology* reshards (see README "Preemption & resume").
+//! A `checkpoint_dir` set in `--config` JSON is used as-is (no tenant
+//! namespace) when the flag is absent.
 
 #![forbid(unsafe_code)] // R3: outside the audit.toml unsafe registry (DESIGN.md §14)
 
@@ -54,6 +62,7 @@ use seesaw::config::{ScheduleSpec, TrainConfig};
 use seesaw::coordinator::{Trainer, WorldPolicy};
 use seesaw::experiments::{linreg_exps, lm_exps, Scale};
 use seesaw::runtime::ModelRuntime;
+use seesaw::serve::{RunPhase, Serve, TrainerDriver};
 use seesaw::util::cli::Args;
 
 const USAGE: &str = "usage: seesaw <train|exp|cbs|info> [flags] (see --help in source header)";
@@ -207,13 +216,14 @@ fn train(args: &Args) -> Result<()> {
     if let Some(p) = args.str_opt("out-csv") {
         cfg.out_csv = Some(p.into());
     }
-    if let Some(p) = args.str_opt("checkpoint-dir") {
-        cfg.checkpoint_dir = Some(p.into());
-    }
+    // --checkpoint-dir names the serve layer's checkpoint ROOT: the run
+    // actually checkpoints under `<root>/<tenant>/` (bound by submit).
+    let ckpt_root = args.str_opt("checkpoint-dir").map(std::path::PathBuf::from);
     if let Some(x) = args.u64_opt("checkpoint-every")? {
         cfg.checkpoint_every = x;
     }
-    let mut t = Trainer::new(cfg)?;
+    let tenant = args.str_or("tenant", "default");
+    let t = Trainer::new(cfg)?;
     println!(
         "model={} params={} budget={} tokens, schedule={:?}, world={} ({}), threads={}, collective={}{}{}",
         t.rt.manifest.model.name,
@@ -235,16 +245,24 @@ fn train(args: &Args) -> Result<()> {
             String::new()
         }
     );
-    let log = t.run()?;
-    println!(
-        "done: {} steps, {} cuts, final train CE {:.4}, final val CE {}, serial time {:.1}s (modeled)",
-        log.total_steps(),
-        log.cut_count(),
-        log.final_train_ce().unwrap_or(f64::NAN),
-        log.final_val_ce().map(|v| format!("{v:.4}")).unwrap_or_else(|| "-".into()),
-        log.total_serial_time()
-    );
-    Ok(())
+    // one CLI run = the one-tenant case of the multi-tenant service
+    let mut serve = Serve::new(ckpt_root);
+    let id = serve.submit(&tenant, Box::new(TrainerDriver::new(t)))?;
+    serve.drain();
+    let status = serve.poll(id).expect("run registered above");
+    match status.phase {
+        RunPhase::Done => {
+            if let Some(line) = serve.summary(id) {
+                println!("{line}");
+            }
+            Ok(())
+        }
+        phase => bail!(
+            "run for tenant {:?} ended in phase {phase:?}: {}",
+            status.tenant,
+            status.error.unwrap_or_else(|| "no error recorded".into())
+        ),
+    }
 }
 
 fn exp(args: &Args) -> Result<()> {

@@ -509,7 +509,15 @@ def scan_file(rel, src, cfg):
 
 # ----------------------------------------------------------------- main
 
-SCAN_ROOTS = ("rust/src", "rust/tests", "rust/benches")
+SCAN_ROOTS = (
+    "crates/seesaw-core/src",
+    "crates/seesaw-engine/src",
+    "crates/seesaw-serve/src",
+    "crates/seesaw-serve/tests",
+    "rust/src",
+    "rust/tests",
+    "rust/benches",
+)
 
 def audit_repo(root, cfg):
     findings = []

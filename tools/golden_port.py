@@ -18,12 +18,16 @@ Two reduction modes mirror the two generations of Rust arithmetic:
 * ``tree`` -- the `seesaw::simd` kernels: 8-lane partial accumulators
   over the term stream, lanes combined by a balanced pairwise tree, block
   partials (4096-element blocks) combined by the same pairwise tree.
-  This MUST stay in lockstep with `rust/src/simd/mod.rs`; the kernel
-  parity tests pin the Rust side, this file pins the fixtures.
+  This MUST stay in lockstep with `crates/seesaw-core/src/simd/mod.rs`;
+  the kernel parity tests pin the Rust side, this file pins the fixtures.
+
+The committed fixtures have been tree-arithmetic since PR 6, so ``tree``
+is the default; ``--mode fold`` remains for archaeology against the
+PR 1-5 seed arithmetic.
 
 Usage:
-  python3 tools/golden_port.py verify          # fold-mode output == committed fixtures?
-  python3 tools/golden_port.py bless --mode tree   # rewrite fixtures with tree arithmetic
+  python3 tools/golden_port.py verify          # tree-mode output == committed fixtures?
+  python3 tools/golden_port.py bless           # rewrite fixtures with tree arithmetic
   python3 tools/golden_port.py report          # old-vs-new tolerance report (stdout, markdown)
 """
 
@@ -412,8 +416,9 @@ def cmd_report():
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("cmd", choices=["verify", "bless", "report"])
-    ap.add_argument("--mode", choices=["fold", "tree"], default="fold",
-                    help="reduction arithmetic generation (default: fold, the pre-SIMD seed)")
+    ap.add_argument("--mode", choices=["fold", "tree"], default="tree",
+                    help="reduction arithmetic generation (default: tree, the committed "
+                         "simd fixtures; fold is the pre-SIMD PR 1-5 seed)")
     args = ap.parse_args()
     if args.cmd == "verify":
         return cmd_verify(args.mode)

@@ -76,7 +76,8 @@ pub fn explain(rule: &str) -> Option<&'static str> {
              is a latent trajectory fork: it works until someone reorders an\n\
              iterator, splits a loop, or vectorizes differently per target.\n\
              \n\
-             The only sanctioned reduction shapes live in `rust/src/simd/`\n\
+             The only sanctioned reduction shapes live in\n\
+             `crates/seesaw-core/src/simd/`\n\
              (fixed-shape lane/tree kernels, LANES=8 / BLOCK=4096), which the\n\
              partition-invariance tests pin. Everywhere else in trajectory\n\
              modules, reductions must either call those kernels or carry an\n\
@@ -1080,8 +1081,18 @@ fn has_safety_comment(st: &Stripped, line: usize) -> bool {
 // Repo walk
 // ---------------------------------------------------------------------------
 
-/// The directories the audit covers, relative to the repo root.
-pub const SCAN_ROOTS: [&str; 3] = ["rust/src", "rust/tests", "rust/benches"];
+/// The directories the audit covers, relative to the repo root: the
+/// three workspace crates plus the `rust/` facade (whose package keeps
+/// the integration tests, benches and CLI).
+pub const SCAN_ROOTS: [&str; 7] = [
+    "crates/seesaw-core/src",
+    "crates/seesaw-engine/src",
+    "crates/seesaw-serve/src",
+    "crates/seesaw-serve/tests",
+    "rust/src",
+    "rust/tests",
+    "rust/benches",
+];
 
 fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
     let mut entries: Vec<PathBuf> = fs::read_dir(dir)?

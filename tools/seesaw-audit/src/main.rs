@@ -19,9 +19,11 @@ use seesaw_audit::{audit_repo, explain, load_config, RULE_IDS};
 fn usage() -> &'static str {
     "usage: seesaw-audit [--root DIR] [--explain RULE] [--list-rules]\n\
      \n\
-     Checks rust/src, rust/tests, rust/benches against the determinism\n\
-     contract in audit.toml (rules R1-R4). Exit 0 = clean, 1 = findings,\n\
-     2 = usage/config error. `--explain R1` prints a rule's rationale."
+     Checks the workspace crates (crates/seesaw-core, crates/seesaw-engine,\n\
+     crates/seesaw-serve) and the rust/ facade (src, tests, benches)\n\
+     against the determinism contract in audit.toml (rules R1-R4).\n\
+     Exit 0 = clean, 1 = findings, 2 = usage/config error.\n\
+     `--explain R1` prints a rule's rationale."
 }
 
 fn find_root(start: PathBuf) -> Option<PathBuf> {

@@ -192,8 +192,9 @@ mod tests {
 fn real_simd_kernels_are_silent_under_the_real_config() {
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
     let cfg = seesaw_audit::load_config(&root).expect("audit.toml loads");
-    let src = std::fs::read_to_string(root.join("rust/src/simd/mod.rs")).expect("simd source");
-    let f = scan_file("rust/src/simd/mod.rs", &src, &cfg);
+    let src = std::fs::read_to_string(root.join("crates/seesaw-core/src/simd/mod.rs"))
+        .expect("simd source");
+    let f = scan_file("crates/seesaw-core/src/simd/mod.rs", &src, &cfg);
     assert!(f.is_empty(), "findings: {:?}", f);
 }
 

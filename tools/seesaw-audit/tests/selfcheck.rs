@@ -1,8 +1,10 @@
 //! The regression gate: the repo's own tree must pass its own audit.
 //! Any new unpinned reduction, ambient-nondeterminism call, naked
-//! `unsafe`, or reasonless `#[allow]` in rust/src, rust/tests, or
-//! rust/benches fails this test (and the CI `audit` job) with
-//! file:line diagnostics.
+//! `unsafe`, or reasonless `#[allow]` anywhere the audit walks — the
+//! three workspace crates (seesaw-core, seesaw-engine, seesaw-serve,
+//! sources and the serve tests) plus the rust/ facade's src, tests and
+//! benches — fails this test (and the CI `audit` job) with file:line
+//! diagnostics.
 
 use std::path::Path;
 
