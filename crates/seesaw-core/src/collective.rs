@@ -21,7 +21,11 @@
 /// schedule.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct CollectiveStats {
-    /// Total payload bytes moved between workers (both phases).
+    /// Total payload bytes moved between workers (both phases). Under a
+    /// compressed wire format ([`crate::quant::Compression`]) this is
+    /// the *compressed* payload — codes plus per-group scales — via
+    /// [`CollectiveStats::with_wire`]; the stats describe the modeled
+    /// wire, not the in-memory f32 arithmetic that simulates it.
     pub bytes_moved: u64,
     /// Communication phases executed (2·(W−1) per bucket for a ring).
     pub phases: u32,
@@ -33,6 +37,27 @@ pub struct CollectiveStats {
     /// whole-vector call) — the non-overlappable exposure in the
     /// overlapped wall-clock model.
     pub tail_bytes: u64,
+}
+
+impl CollectiveStats {
+    /// Re-account this call's payload for a compressed wire format
+    /// (DESIGN.md §16): every f32 word the simulated reduce moved
+    /// (`bytes / 4` elements) becomes its packed code plus its share of
+    /// the per-group scales ([`crate::quant::payload_bytes`]). Phase and
+    /// bucket counts are untouched — compression changes what each phase
+    /// carries, not the schedule. [`crate::quant::Compression::None`] is
+    /// the identity, so the uncompressed path stays byte-for-byte.
+    pub fn with_wire(self, mode: crate::quant::Compression) -> Self {
+        if mode == crate::quant::Compression::None {
+            return self;
+        }
+        let conv = |bytes: u64| crate::quant::payload_bytes((bytes / 4) as usize, mode);
+        Self {
+            bytes_moved: conv(self.bytes_moved),
+            tail_bytes: conv(self.tail_bytes),
+            ..self
+        }
+    }
 }
 
 /// Billable payload split of one two-level reduce over `world` workers
@@ -114,6 +139,32 @@ mod tests {
         assert_eq!(CollectiveKind::parse("bogus"), None);
         assert_eq!(CollectiveKind::default(), CollectiveKind::Ring);
         assert_eq!(CollectiveKind::TwoLevel { nodes: 4 }.name(), "two-level");
+    }
+
+    #[test]
+    fn with_wire_reprices_bytes_but_not_the_schedule() {
+        use crate::quant::{payload_bytes, Compression};
+        // a 4-worker ring over 1000 elements, bucketed into 4 buckets
+        let stats = CollectiveStats {
+            bytes_moved: (2 * 3 * 1000 * 4) as u64,
+            phases: 4 * 2 * 3,
+            buckets: 4,
+            tail_bytes: (2 * 3 * 232 * 4) as u64,
+        };
+        assert_eq!(stats.with_wire(Compression::None), stats, "None is the identity");
+        for mode in [Compression::Int8, Compression::Int4] {
+            let c = stats.with_wire(mode);
+            assert_eq!(c.bytes_moved, payload_bytes(2 * 3 * 1000, mode));
+            assert_eq!(c.tail_bytes, payload_bytes(2 * 3 * 232, mode));
+            assert!(c.bytes_moved < stats.bytes_moved, "{mode:?} must shrink the wire");
+            assert!(c.tail_bytes < stats.tail_bytes, "{mode:?}");
+            assert_eq!((c.phases, c.buckets), (stats.phases, stats.buckets), "schedule untouched");
+        }
+        // the W == 1 no-comm stats stay the zero default under any mode
+        assert_eq!(
+            CollectiveStats::default().with_wire(Compression::Int8),
+            CollectiveStats::default()
+        );
     }
 
     #[test]

@@ -12,6 +12,7 @@
 use crate::collective::CollectiveKind;
 use crate::elastic::WorldPolicy;
 use crate::metrics::WallClockModel;
+use crate::quant::{Compression, CompressionSpec};
 use crate::schedule::{AdaptiveSeesaw, JointSchedule, Schedule, ScheduleKind, SeesawBuilder};
 use crate::util::json::Value;
 use anyhow::{anyhow, bail, Context, Result};
@@ -68,6 +69,17 @@ pub struct ExecSpec {
     /// Inter-node bandwidth (bytes/s) for the two-level collective's
     /// leader ring. See [`ExecSpec::intra_bw`].
     pub inter_bw: f64,
+    /// Compressed collective wire format (DESIGN.md §16): int8/int4
+    /// codes in fixed 256-element groups with per-group power-of-two f32
+    /// scales and an error-feedback residual carried across steps. The
+    /// engine quantizes each worker shard before the reduce, so the
+    /// optimizer and the GNS estimator both see the dequantized
+    /// gradient; [`crate::collective::CollectiveStats::with_wire`]
+    /// re-prices every charge arm to the compressed payload.
+    /// Deliberately **not** trajectory-neutral in bits — acceptance is
+    /// the tolerance suite, not bit-exactness — which is why it lives in
+    /// the exec fingerprint, never the trajectory identity.
+    pub compression: CompressionSpec,
 }
 
 impl Default for ExecSpec {
@@ -84,6 +96,7 @@ impl Default for ExecSpec {
             stragglers: 0.0,
             intra_bw: 0.0,
             inter_bw: 0.0,
+            compression: CompressionSpec::default(),
         }
     }
 }
@@ -381,7 +394,7 @@ impl TrainConfig {
         };
         format!(
             "w={}|coll={}|threads={}|pin={}|overlap={}|bucket={}|elastic={}\
-             |strag={:016x}|nodes={nodes}|ibw={:016x}|xbw={:016x}",
+             |strag={:016x}|nodes={nodes}|ibw={:016x}|xbw={:016x}|comp={}|ef={}",
             self.world_size,
             self.exec.collective.name(),
             self.exec.worker_threads,
@@ -392,6 +405,8 @@ impl TrainConfig {
             self.exec.stragglers.to_bits(),
             self.exec.intra_bw.to_bits(),
             self.exec.inter_bw.to_bits(),
+            self.exec.compression.mode.name(),
+            self.exec.compression.error_feedback,
         )
     }
 
@@ -543,6 +558,27 @@ fn parse_exec(v: &Value) -> Result<ExecSpec> {
     if has_max_world && matches!(elastic, WorldPolicy::Fixed) {
         bail!("exec.max_world only applies with exec.elastic = \"ramp-coupled\"");
     }
+    // compressed wire format (DESIGN.md §16): `compression: "none" |
+    // "int8" | "int4"`, error-feedback loop in `error_feedback` (default
+    // on). An EF knob without a compressed mode is dead config — refused
+    // like max_world above — and the spec itself refuses int4 open-loop.
+    let has_error_feedback = v.get("error_feedback").is_some();
+    let mut compression = d.compression;
+    if let Some(c) = v.get("compression") {
+        let s = c.as_str()?;
+        compression.mode = Compression::parse(s)
+            .ok_or_else(|| anyhow!("unknown compression `{s}` (none|int8|int4)"))?;
+    }
+    if let Some(ef) = v.get("error_feedback") {
+        compression.error_feedback = ef.as_bool()?;
+    }
+    if has_error_feedback && compression.mode == Compression::None {
+        bail!(
+            "exec.error_feedback only applies with a compressed exec.compression \
+             (int8|int4) — the fp32 wire has no quantization error to feed back"
+        );
+    }
+    compression.validate()?;
     Ok(ExecSpec {
         worker_threads: v.u64_or("worker_threads", d.worker_threads as u64)? as usize,
         collective,
@@ -553,6 +589,7 @@ fn parse_exec(v: &Value) -> Result<ExecSpec> {
         stragglers,
         intra_bw,
         inter_bw,
+        compression,
     })
 }
 
@@ -664,6 +701,7 @@ mod tests {
                 stragglers: 0.0,
                 intra_bw: 0.0,
                 inter_bw: 0.0,
+                compression: CompressionSpec::default(),
             }
         );
         let d = TrainConfig::from_json("{}").unwrap();
@@ -732,6 +770,46 @@ mod tests {
         .is_err());
         assert!(TrainConfig::from_json(
             r#"{"exec": {"collective": "two-level", "intra_bw": -1.0, "inter_bw": 1.0}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn compression_knobs_parse_and_refuse_dead_config() {
+        // the full compressed wire round-trips, with and without EF
+        let c = TrainConfig::from_json(r#"{"exec": {"compression": "int8"}}"#).unwrap();
+        assert_eq!(
+            c.exec.compression,
+            CompressionSpec { mode: Compression::Int8, error_feedback: true },
+            "error feedback defaults on for compressed modes"
+        );
+        let open = TrainConfig::from_json(
+            r#"{"exec": {"compression": "int8", "error_feedback": false}}"#,
+        )
+        .unwrap();
+        assert!(!open.exec.compression.error_feedback, "int8 may run open-loop");
+        let i4 = TrainConfig::from_json(
+            r#"{"exec": {"compression": "int4", "error_feedback": true}}"#,
+        )
+        .unwrap();
+        assert_eq!(i4.exec.compression.mode, Compression::Int4);
+        // defaults: no compression, byte-for-byte today's wire
+        let d = TrainConfig::from_json("{}").unwrap();
+        assert_eq!(d.exec.compression, CompressionSpec::default());
+        assert_eq!(d.exec.compression.mode, Compression::None, "compression is opt-in");
+        // unknown wire formats are rejected
+        assert!(TrainConfig::from_json(r#"{"exec": {"compression": "int16"}}"#).is_err());
+        // an EF knob without a compressed mode is dead config — refused,
+        // like max_world without ramp-coupled
+        assert!(TrainConfig::from_json(r#"{"exec": {"error_feedback": true}}"#).is_err());
+        assert!(TrainConfig::from_json(r#"{"exec": {"error_feedback": false}}"#).is_err());
+        assert!(TrainConfig::from_json(
+            r#"{"exec": {"compression": "none", "error_feedback": true}}"#
+        )
+        .is_err());
+        // …and int4 open-loop is refused by the spec validation
+        assert!(TrainConfig::from_json(
+            r#"{"exec": {"compression": "int4", "error_feedback": false}}"#
         )
         .is_err());
     }
@@ -869,6 +947,19 @@ mod tests {
         let mut m = l.clone();
         m.exec.collective = CollectiveKind::TwoLevel { nodes: 4 };
         assert_ne!(l.exec_fingerprint(), m.exec_fingerprint(), "node count discriminates");
+        // the compressed wire format is execution topology too: it moves
+        // the fingerprint (a resume across a wire change is a logged
+        // reshard-class event) but never the trajectory identity — even
+        // though, unlike threads/buckets, it is NOT bit-neutral; the
+        // tolerance suite in tests/quantizer_golden.rs owns that contract
+        let mut n = c.clone();
+        n.exec.compression =
+            crate::quant::CompressionSpec { mode: crate::quant::Compression::Int8, error_feedback: true };
+        assert_eq!(traj, n.trajectory_identity(1_000_000), "compression is not identity");
+        assert_ne!(fp, n.exec_fingerprint(), "…but the fingerprint records the wire format");
+        let mut o = n.clone();
+        o.exec.compression.error_feedback = false;
+        assert_ne!(n.exec_fingerprint(), o.exec_fingerprint(), "EF discriminates too");
         // and the legacy (v2) identity is exactly trajectory + topology —
         // the pre-split string old checkpoints hashed
         assert_eq!(

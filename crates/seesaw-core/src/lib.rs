@@ -11,7 +11,9 @@
 //! of the gradient hot path ([`simd`], DESIGN.md §12), the collective
 //! *spec* types ([`collective`] — cost model and kind selection; the
 //! thread-backed implementations live in `seesaw-engine`), and the
-//! elastic world policy ([`elastic`]).
+//! elastic world policy ([`elastic`]), plus the deterministic
+//! multi-resolution gradient quantizer behind the compressed collective
+//! wire format ([`quant`], DESIGN.md §16).
 //!
 //! The execution layer (`seesaw-engine`: coordinator, step engine,
 //! collective implementations, PJRT runtime bridge) and the multi-tenant
@@ -32,6 +34,7 @@ pub mod data;
 pub mod elastic;
 pub mod linreg;
 pub mod metrics;
+pub mod quant;
 pub mod schedule;
 pub mod simd;
 pub mod util;

@@ -42,6 +42,11 @@ pub struct StepRecord {
     /// > 1 under the overlapped bucketed mode (`exec.overlap`), 0 when no
     /// communication happened.
     pub comm_buckets: u32,
+    /// Wire format the collective payload was accounted in
+    /// (`crate::quant::Compression::name()`: "none" | "int8" | "int4") —
+    /// the format `comm_bytes` is denominated in, so a compressed run's
+    /// CSV is self-describing (DESIGN.md §16).
+    pub wire: &'static str,
     /// Effective data-parallel world this step executed with — constant
     /// under `WorldPolicy::Fixed`, growing with the batch ramp under
     /// `RampCoupled` (a change between consecutive steps is a reshard
@@ -127,12 +132,12 @@ impl RunLog {
 
 /// Column header of the per-step run CSV.
 pub const CSV_HEADER: &str =
-    "run,step,tokens,lr,batch_tokens,ce,zloss,gnorm_sq,flops,serial_time,comm_bytes,comm_buckets,world,gns,b_crit,cuts,val_ce";
+    "run,step,tokens,lr,batch_tokens,ce,zloss,gnorm_sq,flops,serial_time,comm_bytes,comm_buckets,wire,world,gns,b_crit,cuts,val_ce";
 
 fn write_csv_row(f: &mut impl Write, run: &str, r: &StepRecord) -> std::io::Result<()> {
     writeln!(
         f,
-        "{},{},{},{:.6e},{},{:.6},{:.6},{:.6e},{:.6e},{:.6},{},{},{},{},{},{},{}",
+        "{},{},{},{:.6e},{},{:.6},{:.6},{:.6e},{:.6e},{:.6},{},{},{},{},{},{},{},{}",
         run,
         r.step,
         r.tokens,
@@ -145,6 +150,7 @@ fn write_csv_row(f: &mut impl Write, run: &str, r: &StepRecord) -> std::io::Resu
         r.serial_time,
         r.comm_bytes,
         r.comm_buckets,
+        r.wire,
         r.world,
         r.gns.map(|v| format!("{v:.3}")).unwrap_or_default(),
         r.b_crit.map(|v| format!("{v:.3}")).unwrap_or_default(),
@@ -207,6 +213,7 @@ mod tests {
             serial_time: step as f64,
             comm_bytes: 4096,
             comm_buckets: 1,
+            wire: "none",
             world: 2,
             gns: (step % 2 == 1).then_some(1234.5),
             b_crit: (step % 2 == 1).then_some(2345.6),
@@ -240,7 +247,9 @@ mod tests {
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("run,step,"));
         assert!(lines[0].ends_with(",gns,b_crit,cuts,val_ce"));
+        assert!(lines[0].contains(",comm_buckets,wire,world,"), "{}", lines[0]);
         assert!(lines[1].starts_with("x,0,"));
+        assert!(lines[1].contains(",none,2,"), "wire column rendered: {}", lines[1]);
         assert!(lines[1].ends_with("1.000000"));
         // step 0: no GNS estimate, no cut — empty cells stay empty
         assert!(lines[1].contains(",,,,"), "gns/b_crit/cut cells empty: {}", lines[1]);

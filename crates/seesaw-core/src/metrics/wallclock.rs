@@ -23,6 +23,16 @@
 //!   so per-wave time is the pipeline's finish — at best
 //!   `max(compute, comm)` plus the exposed non-overlappable tail bucket.
 //!
+//! **Compressed wires** (DESIGN.md §16) need no charge arms of their
+//! own: the engine re-accounts the collective's stats to the compressed
+//! payload — packed int8/int4 codes plus per-group f32 scales — via
+//! [`CollectiveStats::with_wire`] *before* they reach the coordinator,
+//! so every charge below (serialized, overlapped, elastic, hetero, and
+//! the two-level repricing) bills the quantized wire automatically. On
+//! a bandwidth-bound link that shrinks the comm term by ~4× (int8) or
+//! ~8× (int4); `benches/elastic_ramp.rs` charts where that beats
+//! scaling the fleet out.
+//!
 //! **Heterogeneous fleets** (DESIGN.md §13): real clusters straggle. A
 //! [`StragglerModel`] draws a deterministic per-`(seed, step, worker)`
 //! speed factor ≥ 1, and the `step_time_hetero*` charges bill every wave
@@ -689,6 +699,53 @@ mod tests {
         assert_eq!(
             m.step_time_two_level(3 * 8 * 1024, 8, 4, elems, 1e9, 1e9),
             3.0 * m.step_time_two_level(512, 8, 4, elems, 1e9, 1e9)
+        );
+    }
+
+    #[test]
+    fn compressed_wire_prices_lower_through_every_charge() {
+        use crate::quant::{payload_bytes, Compression};
+        // a thin 2 MB/s link — the elastic_ramp arm where compression
+        // matters — and a whole-vector ring payload over 115_008 elems
+        let m = WallClockModel {
+            devices: 8,
+            tokens_per_device: 1024,
+            step_latency: 2.0,
+            comm_bytes_per_sec: 2e6,
+        };
+        let elems = 115_008usize;
+        let fp32 = CollectiveStats {
+            bytes_moved: (2 * 7 * elems * 4) as u64,
+            phases: 2 * 7,
+            buckets: 1,
+            tail_bytes: (2 * 7 * elems * 4) as u64,
+        };
+        let p8 = fp32.with_wire(Compression::Int8);
+        let p4 = fp32.with_wire(Compression::Int4);
+        // serialized charge: strictly ordered int4 < int8 < fp32, and the
+        // comm term shrinks by the exact payload ratio
+        let t32 = m.step_time_comm(512, fp32.bytes_moved);
+        let t8 = m.step_time_comm(512, p8.bytes_moved);
+        let t4 = m.step_time_comm(512, p4.bytes_moved);
+        assert!(t4 < t8 && t8 < t32, "{t4} {t8} {t32}");
+        assert_eq!(p8.bytes_moved, payload_bytes(2 * 7 * elems, Compression::Int8));
+        // ~4× less comm time for int8 on the bandwidth-bound link
+        let comm32 = t32 - m.step_time(512);
+        let comm8 = t8 - m.step_time(512);
+        assert!(comm32 / comm8 > 3.9 && comm32 / comm8 < 4.1, "{}", comm32 / comm8);
+        // the overlapped / elastic / hetero arms are monotone in payload,
+        // so the compressed stats price lower through each of them too
+        let b32 = CollectiveStats { buckets: 4, tail_bytes: fp32.bytes_moved / 4, ..fp32 };
+        let b8 = b32.with_wire(Compression::Int8);
+        assert!(m.step_time_overlapped(512, &b8) < m.step_time_overlapped(512, &b32));
+        assert!(
+            m.step_time_elastic(512, 16, 8, p8.bytes_moved)
+                < m.step_time_elastic(512, 16, 8, fp32.bytes_moved)
+        );
+        let strag = StragglerModel::new(7, 1.0);
+        assert!(
+            m.step_time_hetero(512, p8.bytes_moved, &strag, 3, 8)
+                < m.step_time_hetero(512, fp32.bytes_moved, &strag, 3, 8)
         );
     }
 

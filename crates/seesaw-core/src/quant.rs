@@ -1,0 +1,488 @@
+//! Deterministic multi-resolution gradient quantization (DESIGN.md §16).
+//!
+//! The HDR-style compressed wire format for the collectives: each
+//! worker's whole gradient shard is quantized to int8 or int4 codes in
+//! fixed [`QUANT_GROUP`]-element groups, each group carrying one f32
+//! scale, with round-to-nearest-even codes and an error-feedback
+//! residual carried across steps. The engine quantizes→dequantizes in
+//! place *before* the reduce, so the collective — and both GNS sqnorm
+//! taps — see exactly the dequantized gradient the optimizer sees, and
+//! the comm bucket/thread layout can never move a bit (the group windows
+//! are fixed on the shard, not derived from the wire bucketing).
+//!
+//! ## Determinism argument (why the Python mirror is bit-perfect)
+//!
+//! Every scale is a **power of two**: the smallest `s = 2^e` with
+//! `s·qmax ≥ max|x|` over the group. That choice makes every arithmetic
+//! operation in the codec either *exact* or a *single* f32 rounding of a
+//! value exactly representable in f64:
+//!
+//! * `s·qmax` is exact in f32 (`qmax ≤ 127` needs 7 mantissa bits), so
+//!   the scale-search comparisons are exact — and imply `|x|/s ≤ qmax`
+//!   exactly, so the clamp never has to bind.
+//! * `x/s` is exact scaling by a power of two (a single rounding only
+//!   when the result denormalizes — identical under IEEE-754 everywhere).
+//! * `x − ⌊x⌋` for `|x| ≤ qmax + ½` is exact, so the hand-rolled
+//!   round-to-nearest-even tie test compares exact values.
+//! * `q·s` (dequantize) is exact: an integer of ≤ 7 bits times `2^e`.
+//! * the error-feedback adds/subtracts are single f32 roundings of
+//!   sums/differences that are exact in f64.
+//!
+//! No operation double-rounds, so a mirror computing in f64 and rounding
+//! each step to f32 (CPython + `struct`, `tools/golden_port.py
+//! quantizer`) reproduces the Rust bit patterns by construction. The
+//! committed `tests/golden/quantizer.trace` fixture pins this.
+
+#![forbid(unsafe_code)] // R3: outside the audit.toml unsafe registry (DESIGN.md §14)
+
+use anyhow::{bail, Result};
+
+/// Fixed quantization group size, in elements. Deliberately independent
+/// of `ExecSpec::bucket_bytes`: the wire bucketing is a performance knob
+/// that must never move trajectory bits, so the codec's group windows
+/// are pinned to the shard layout (`group g = elements
+/// [g·256, (g+1)·256)`), and the group max-abs is exactly associative —
+/// any split of a shard into ranges quantizes to identical bits
+/// (`prop_quantizer_is_partition_invariant`).
+pub const QUANT_GROUP: usize = 256;
+
+/// Wire resolution of the compressed collective payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Compression {
+    /// Uncompressed f32 wire — byte-for-byte today's path
+    /// (`prop_compression_off_is_bit_identical`).
+    #[default]
+    None,
+    /// 1 byte/element codes in `[-127, 127]` + one f32 scale per group.
+    Int8,
+    /// 4 bit/element codes in `[-7, 7]` + one f32 scale per group.
+    /// Requires error feedback (refused otherwise — the coarse codes
+    /// drop too much signal to run open-loop).
+    Int4,
+}
+
+impl Compression {
+    /// Parse the config/CLI spelling (`none` | `int8` | `int4`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "none" | "fp32" => Some(Self::None),
+            "int8" => Some(Self::Int8),
+            "int4" => Some(Self::Int4),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Int8 => "int8",
+            Self::Int4 => "int4",
+        }
+    }
+
+    /// Largest code magnitude: the code space is the symmetric
+    /// `−qmax ..= qmax` (int8 never emits −128, int4 never −8), so
+    /// negating a gradient negates its codes — and `qmax` stays ≤ 7
+    /// mantissa bits, which is what keeps `s·qmax` exact in f32.
+    pub fn qmax(self) -> i32 {
+        match self {
+            Self::None => 0,
+            Self::Int8 => 127,
+            Self::Int4 => 7,
+        }
+    }
+
+    /// Payload bytes per element of codes on the wire (int4 packs two
+    /// codes per byte; the tail element of an odd group still burns a
+    /// whole byte).
+    fn code_bytes(self, elems: usize) -> usize {
+        match self {
+            Self::None => elems * 4,
+            Self::Int8 => elems,
+            Self::Int4 => elems.div_ceil(2),
+        }
+    }
+}
+
+/// The compression knobs threaded through `ExecSpec` — execution
+/// topology only: part of `exec_fingerprint()`, never
+/// `trajectory_identity()` (the trajectory is *not* bit-exact across a
+/// wire-format change by design; the tolerance suite in
+/// `tests/quantizer_golden.rs` is the acceptance contract instead).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompressionSpec {
+    /// Wire resolution (default [`Compression::None`]).
+    pub mode: Compression,
+    /// Carry the quantization error `x − deq(q(x))` into the next step's
+    /// pre-quantization gradient (EF-SGD). On by default for compressed
+    /// modes; mandatory for int4. Residuals live per worker in the step
+    /// engine and are dropped on any reshard (bounded loss: at most one
+    /// quantization step per element — `prop_error_feedback_residual_is_
+    /// bounded`).
+    pub error_feedback: bool,
+}
+
+impl Default for CompressionSpec {
+    fn default() -> Self {
+        Self { mode: Compression::None, error_feedback: true }
+    }
+}
+
+impl CompressionSpec {
+    /// Refuse knob combinations that would silently misbehave: int4
+    /// without error feedback drops up to `s/2` per element per step with
+    /// nothing reclaiming it — the run diverges quietly instead of
+    /// loudly, exactly the failure mode the dead-config refusals exist
+    /// to prevent.
+    pub fn validate(&self) -> Result<()> {
+        if self.mode == Compression::Int4 && !self.error_feedback {
+            bail!(
+                "int4 compression requires error feedback — the 4-bit codes are too coarse \
+                 to run open-loop (enable error_feedback or use int8/none)"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Round-to-nearest-even of an f32 already bounded by `|x| ≤ qmax + ½`
+/// (guaranteed by the scale invariant). Hand-rolled because
+/// `f32::round_ties_even` stabilized in 1.77 and the workspace MSRV is
+/// 1.73. `x − ⌊x⌋` is exact for these magnitudes (both operands are
+/// multiples of `ulp(x)` and the difference is < 1), so the tie test
+/// compares exact values.
+fn rne_i32(x: f32) -> i32 {
+    let r = x.floor();
+    let d = x - r;
+    let mut q = r as i32;
+    if d > 0.5 {
+        q += 1;
+    } else if d == 0.5 && q % 2 != 0 {
+        q += 1;
+    }
+    q
+}
+
+/// Smallest power of two `s` with `s·qmax ≥ maxabs` (f32 comparisons —
+/// exact, because `s·qmax` is exact: see the module determinism
+/// argument). `maxabs == 0` returns the `0.0` sentinel: the group emits
+/// all-zero codes and the residual carries the input unchanged.
+/// Denormal-safe (the shrink stops at `h > 0`), and `h < s` guards the
+/// non-finite inputs a corrupted gradient could feed in.
+pub fn pow2_scale(maxabs: f32, qmax: i32) -> f32 {
+    if maxabs == 0.0 {
+        return 0.0;
+    }
+    let q = qmax as f32;
+    let mut s = 1.0f32;
+    while s * q < maxabs {
+        s *= 2.0;
+    }
+    loop {
+        let h = s * 0.5;
+        if h > 0.0 && h < s && h * q >= maxabs {
+            s = h;
+        } else {
+            break;
+        }
+    }
+    s
+}
+
+/// Per-group power-of-two scales of `buf` (after any residual
+/// injection). The group max-abs loop is **not** a float reduction in
+/// the R1 sense: `max` is exactly associative and commutative over
+/// `abs`-values, so any evaluation order yields identical bits — the
+/// partition-invariance property pins it.
+pub fn group_scales(buf: &[f32], mode: Compression) -> Vec<f32> {
+    let qmax = mode.qmax();
+    buf.chunks(QUANT_GROUP)
+        .map(|g| {
+            let mut m = 0f32;
+            for &x in g {
+                m = m.max(x.abs());
+            }
+            pow2_scale(m, qmax)
+        })
+        .collect()
+}
+
+/// Quantize one element against its group scale: the RNE code in
+/// `−qmax ..= qmax`. The clamp can never bind (the scale invariant
+/// bounds `|x/s| ≤ qmax` exactly) — it stays as a belt against
+/// non-finite inputs.
+pub fn quantize_one(x: f32, scale: f32, mode: Compression) -> i32 {
+    if scale == 0.0 {
+        return 0;
+    }
+    let qmax = mode.qmax();
+    rne_i32(x / scale).clamp(-qmax, qmax)
+}
+
+/// Dequantize one code: exact (an integer of ≤ 7 bits times a power of
+/// two is always representable).
+pub fn dequantize_one(q: i32, scale: f32) -> f32 {
+    q as f32 * scale
+}
+
+/// Quantize→dequantize `buf[lo..hi]` in place against precomputed group
+/// `scales`, writing `residual[i] = x − deq` when `error_feedback` is
+/// on. Pure per-element pass, so any partition of `0..len` into ranges
+/// produces identical bits — the primitive the partition-invariance
+/// property splits arbitrarily.
+pub fn apply_range(
+    buf: &mut [f32],
+    residual: &mut [f32],
+    scales: &[f32],
+    spec: CompressionSpec,
+    lo: usize,
+    hi: usize,
+) {
+    debug_assert!(hi <= buf.len() && buf.len() == residual.len());
+    for i in lo..hi {
+        let s = scales[i / QUANT_GROUP];
+        let x = buf[i];
+        let d = dequantize_one(quantize_one(x, s, spec.mode), s);
+        if spec.error_feedback {
+            residual[i] = x - d;
+        }
+        buf[i] = d;
+    }
+}
+
+/// The full codec cycle on one shard: inject the carried residual
+/// (error feedback), compute group scales over the *injected* values,
+/// quantize→dequantize in place, store the new residual. Returns the
+/// per-group scales (the wire metadata; tests and the golden trace read
+/// codes back via [`quantize_one`] against them). A
+/// [`Compression::None`] spec is a no-op returning no scales — the
+/// byte-for-byte-identical degradation path.
+pub fn compress_ef(buf: &mut [f32], residual: &mut [f32], spec: CompressionSpec) -> Vec<f32> {
+    if spec.mode == Compression::None {
+        return Vec::new();
+    }
+    debug_assert_eq!(buf.len(), residual.len(), "residual must be congruent with the shard");
+    if spec.error_feedback {
+        for (x, r) in buf.iter_mut().zip(residual.iter()) {
+            *x += *r;
+        }
+    }
+    let scales = group_scales(buf, spec.mode);
+    apply_range(buf, residual, &scales, spec, 0, buf.len());
+    scales
+}
+
+/// Wire bytes of `elems` gradient elements under `mode`: the packed
+/// codes plus one f32 scale per [`QUANT_GROUP`]. This is what the
+/// engine substitutes into [`crate::collective::CollectiveStats`]
+/// (`with_wire`) so every wall-clock charge arm — flat, overlapped,
+/// elastic, two-level, straggler — prices the compressed payload.
+pub fn payload_bytes(elems: usize, mode: Compression) -> u64 {
+    match mode {
+        Compression::None => (elems * 4) as u64,
+        m => (m.code_bytes(elems) + 4 * elems.div_ceil(QUANT_GROUP)) as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_name_roundtrip_and_defaults() {
+        for (s, m) in [
+            ("none", Compression::None),
+            ("int8", Compression::Int8),
+            ("int4", Compression::Int4),
+        ] {
+            assert_eq!(Compression::parse(s), Some(m));
+            assert_eq!(m.name(), s);
+        }
+        assert_eq!(Compression::parse("fp32"), Some(Compression::None), "alias");
+        assert_eq!(Compression::parse("int16"), None);
+        let d = CompressionSpec::default();
+        assert_eq!(d.mode, Compression::None, "compression is opt-in");
+        assert!(d.error_feedback, "error feedback defaults on for compressed modes");
+    }
+
+    #[test]
+    fn int4_without_error_feedback_is_refused() {
+        let bad = CompressionSpec { mode: Compression::Int4, error_feedback: false };
+        assert!(bad.validate().unwrap_err().to_string().contains("error feedback"));
+        for mode in [Compression::None, Compression::Int8] {
+            assert!(CompressionSpec { mode, error_feedback: false }.validate().is_ok());
+            assert!(CompressionSpec { mode, error_feedback: true }.validate().is_ok());
+        }
+        assert!(CompressionSpec { mode: Compression::Int4, error_feedback: true }
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn rne_rounds_ties_to_even() {
+        for (x, want) in [
+            (0.5f32, 0),
+            (1.5, 2),
+            (2.5, 2),
+            (3.5, 4),
+            (-0.5, 0),
+            (-1.5, -2),
+            (-2.5, -2),
+            (0.49999997, 0),
+            (126.5, 126),
+            (-126.5, -126),
+            (127.0, 127),
+        ] {
+            assert_eq!(rne_i32(x), want, "rne({x})");
+        }
+    }
+
+    #[test]
+    fn pow2_scale_is_minimal_and_a_power_of_two() {
+        for maxabs in [
+            1.0f32,
+            0.75,
+            0.7,
+            127.0,
+            128.0,
+            1e-3,
+            3.0e38,
+            f32::from_bits(1),          // smallest denormal
+            f32::from_bits(0x0080_0000), // smallest normal
+        ] {
+            for qmax in [127i32, 7] {
+                let s = pow2_scale(maxabs, qmax);
+                assert!(s > 0.0, "maxabs={maxabs} qmax={qmax}");
+                // a power of two: one mantissa bit (or a denormal power)
+                let m = s.to_bits() & 0x007f_ffff;
+                let e = s.to_bits() >> 23;
+                assert!(
+                    (e > 0 && m == 0) || (e == 0 && m.is_power_of_two()),
+                    "s={s} must be a power of two"
+                );
+                // the defining invariant, and minimality one halving down
+                assert!(s * qmax as f32 >= maxabs, "s={s} too small for {maxabs}");
+                let h = s * 0.5;
+                assert!(
+                    h == 0.0 || h * qmax as f32 < maxabs,
+                    "s={s} not minimal for maxabs={maxabs} qmax={qmax}"
+                );
+            }
+        }
+        assert_eq!(pow2_scale(0.0, 127), 0.0, "zero sentinel");
+        assert_eq!(pow2_scale(-0.0, 127), 0.0);
+    }
+
+    #[test]
+    fn quantize_dequantize_is_exact_on_representable_points() {
+        // values of the form q·2^e round-trip exactly for any mode that
+        // can hold the code
+        let spec = CompressionSpec { mode: Compression::Int8, error_feedback: true };
+        let mut buf: Vec<f32> = (-127..=127).map(|q| q as f32 * 0.25).collect();
+        let mut res = vec![0f32; buf.len()];
+        let before = buf.clone();
+        let scales = compress_ef(&mut buf, &mut res, spec);
+        assert_eq!(scales.len(), 1, "one group");
+        assert_eq!(scales[0], 0.25);
+        assert_eq!(buf, before, "q·s grid points are fixed points of the codec");
+        assert!(res.iter().all(|&r| r == 0.0), "exact round-trip leaves no residual");
+    }
+
+    #[test]
+    fn residual_is_bounded_by_half_a_quantization_step() {
+        for mode in [Compression::Int8, Compression::Int4] {
+            let spec = CompressionSpec { mode, error_feedback: true };
+            let buf: Vec<f32> =
+                (0..600).map(|i| ((i * 37 % 113) as f32 - 56.0) * 0.031).collect();
+            let mut res = vec![0f32; buf.len()];
+            // same input re-fed each step; the residual carries across
+            for step in 0..4 {
+                let mut work = buf.clone();
+                let scales = compress_ef(&mut work, &mut res, spec);
+                for (i, &r) in res.iter().enumerate() {
+                    let s = scales[i / QUANT_GROUP];
+                    assert!(
+                        r.abs() <= 0.5 * s,
+                        "{mode:?} step {step} idx {i}: |{r}| > s/2 = {}",
+                        0.5 * s
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_groups_carry_input_through_the_residual() {
+        let spec = CompressionSpec { mode: Compression::Int8, error_feedback: true };
+        let mut buf = vec![0f32; QUANT_GROUP + 3];
+        buf[QUANT_GROUP] = 1.0e-7; // tail group non-zero, head group all zero
+        let mut res = vec![0f32; buf.len()];
+        let scales = compress_ef(&mut buf, &mut res, spec);
+        assert_eq!(scales.len(), 2);
+        assert_eq!(scales[0], 0.0, "all-zero group gets the sentinel scale");
+        assert!(scales[1] > 0.0);
+        assert!(buf[..QUANT_GROUP].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn split_application_matches_whole_call() {
+        // the codec-level half of prop_quantizer_is_partition_invariant:
+        // inject + scales + any range partition == one whole call.
+        for mode in [Compression::Int8, Compression::Int4] {
+            let spec = CompressionSpec { mode, error_feedback: true };
+            let input: Vec<f32> =
+                (0..1000).map(|i| ((i % 97) as f32 * 0.25 - 3.0) * 1.7e-3).collect();
+            let carried: Vec<f32> = (0..1000).map(|i| (i % 13) as f32 * 1e-5).collect();
+
+            let mut whole = input.clone();
+            let mut whole_res = carried.clone();
+            let whole_scales = compress_ef(&mut whole, &mut whole_res, spec);
+
+            let mut split = input.clone();
+            let mut split_res = carried.clone();
+            for (x, r) in split.iter_mut().zip(split_res.iter()) {
+                *x += *r;
+            }
+            let scales = group_scales(&split, mode);
+            assert_eq!(scales, whole_scales);
+            for (lo, hi) in [(0usize, 7usize), (7, 255), (255, 256), (256, 700), (700, 1000)] {
+                apply_range(&mut split, &mut split_res, &scales, spec, lo, hi);
+            }
+            assert_eq!(whole, split, "{mode:?}: split application must be bit-identical");
+            assert_eq!(whole_res, split_res, "{mode:?}: residuals too");
+        }
+    }
+
+    #[test]
+    fn payload_bytes_count_codes_and_scales() {
+        // 512 elements = 2 groups: int8 moves 512 + 2·4 bytes, int4
+        // 256 + 8; fp32 stays 2048.
+        assert_eq!(payload_bytes(512, Compression::None), 2048);
+        assert_eq!(payload_bytes(512, Compression::Int8), 520);
+        assert_eq!(payload_bytes(512, Compression::Int4), 264);
+        // a 257-element shard spills into a second group, and odd int4
+        // tails round up to a whole byte
+        assert_eq!(payload_bytes(257, Compression::Int8), 257 + 8);
+        assert_eq!(payload_bytes(257, Compression::Int4), 129 + 8);
+        assert_eq!(payload_bytes(0, Compression::Int8), 0);
+        // compression strictly shrinks any non-empty payload
+        for elems in [1usize, 255, 256, 257, 115_008] {
+            let fp32 = payload_bytes(elems, Compression::None);
+            let p8 = payload_bytes(elems, Compression::Int8);
+            let p4 = payload_bytes(elems, Compression::Int4);
+            assert!(p8 < fp32, "elems={elems}");
+            assert!(p4 < p8, "elems={elems}");
+        }
+    }
+
+    #[test]
+    fn none_mode_is_a_noop() {
+        let mut buf: Vec<f32> = (0..10).map(|i| i as f32 * 0.3).collect();
+        let mut res = vec![1.0f32; 10];
+        let before = buf.clone();
+        let scales = compress_ef(&mut buf, &mut res, CompressionSpec::default());
+        assert!(scales.is_empty());
+        assert_eq!(buf, before, "None must not touch the shard");
+        assert_eq!(res, vec![1.0f32; 10], "…nor the residual");
+    }
+}

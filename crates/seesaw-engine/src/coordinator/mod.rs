@@ -533,6 +533,10 @@ impl Trainer {
             serial_time: state.serial_time,
             comm_bytes: out.comm.bytes_moved,
             comm_buckets: out.comm.buckets,
+            // the wire format comm_bytes is denominated in: under a
+            // compressed collective the engine already re-accounted the
+            // stats to codes + scales (DESIGN.md §16)
+            wire: self.cfg.exec.compression.mode.name(),
             world: out.world,
             gns: gns_raw,
             b_crit,

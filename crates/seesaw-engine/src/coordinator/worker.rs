@@ -30,6 +30,7 @@
 
 use crate::collective::{Collective, CollectiveStats};
 use crate::config::ExecSpec;
+use crate::quant::Compression;
 use anyhow::{anyhow, ensure, Result};
 use std::sync::mpsc;
 
@@ -286,6 +287,16 @@ pub struct StepEngine {
     /// Per-worker ‖sum‖² buffer; refilled each step and handed to the
     /// caller via `std::mem::take` (one O(world) vec per step, no copy).
     sqnorms: Vec<f64>,
+    /// Per-worker error-feedback residuals of the compressed wire format
+    /// (DESIGN.md §16), parallel to `bufs`. Unlike every other engine
+    /// buffer these deliberately **persist across steps** — carrying the
+    /// quantization error forward is the point of error feedback — and
+    /// are dropped whole on any world or gradient-shape change (a
+    /// reshard re-partitions the microbatch→worker assignment, so stale
+    /// residuals would couple the new partition to the old one; the loss
+    /// is bounded at one quantization step per element). Empty whenever
+    /// compression is off.
+    residuals: Vec<Vec<f32>>,
     /// Long-lived worker threads, spawned lazily on the first step with
     /// `worker_threads > 1` and parked between steps.
     pool: WorkerPool,
@@ -301,6 +312,7 @@ impl StepEngine {
             workers: Vec::new(),
             bufs: Vec::new(),
             sqnorms: Vec::new(),
+            residuals: Vec::new(),
             pool: WorkerPool::default(),
         }
     }
@@ -490,6 +502,28 @@ impl StepEngine {
             // reduce runs bucket-by-bucket — bit-identical result, but the
             // stats describe the bucketed wire schedule the wall-clock
             // model overlaps with compute.
+            let comp = self.exec.compression;
+            if comp.mode != Compression::None {
+                // compressed wire format (DESIGN.md §16): quantize→
+                // dequantize each worker's whole shard BEFORE the reduce.
+                // The collective — and with it both GNS sqnorm taps (the
+                // pre-reduce per-shard tap below and the coordinator's
+                // post-reduce ‖ḡ‖²) — then sees exactly the dequantized
+                // gradient the optimizer will see, and the comm
+                // bucket/thread layout can never move a bit (the codec's
+                // group windows are fixed on the shard). Residuals carry
+                // across steps per worker; any world or shape change
+                // drops them (see the field doc).
+                if self.residuals.len() != world
+                    || self.residuals.first().is_some_and(|r| r.len() != elems)
+                {
+                    self.residuals.clear();
+                    self.residuals.resize_with(world, || vec![0f32; elems]);
+                }
+                for (buf, res) in bufs.iter_mut().zip(self.residuals.iter_mut()) {
+                    crate::quant::compress_ef(buf, res, comp);
+                }
+            }
             let stats = if self.exec.overlap {
                 let bucket_elems = (self.exec.bucket_bytes / 4).max(1);
                 self.collective.allreduce_mean_bucketed(bufs, bucket_elems, &mut self.sqnorms)
@@ -498,7 +532,10 @@ impl StepEngine {
             };
             let scale = world as f32 / n_micro as f32;
             crate::simd::scale(&mut bufs[0], scale);
-            stats
+            // the simulated reduce moved f32 words in memory; re-account
+            // the stats to the wire the compressed format would move
+            // (codes + per-group scales). None is the identity.
+            stats.with_wire(comp.mode)
         } else {
             // one worker ⇒ no small-batch/large-batch contrast, so the GNS
             // estimator can't use a norm here — skip the O(n) pass entirely.
@@ -540,6 +577,13 @@ impl StepEngine {
         let world = world.max(1);
         self.workers.truncate(world);
         self.bufs.truncate(world);
+        // a reshard re-partitions the microbatch→worker assignment, so
+        // carried error-feedback residuals no longer describe "this
+        // worker's quantization debt" — drop them all (DESIGN.md §16;
+        // bounded at one quantization step per element). No-op when
+        // compression is off (the vec is already empty), so the
+        // bit-exactness contract in the doc above is untouched.
+        self.residuals.clear();
         let threads = self.exec.worker_threads.max(1).min(world);
         let per = world.div_ceil(threads);
         let n_chunks = world.div_ceil(per);
@@ -865,6 +909,100 @@ mod tests {
         let out1 = e.execute(&src, 1, micros(4)).unwrap();
         assert!(out1.shard_sqnorms.is_empty());
         assert_eq!(out1.shard_micro, vec![4]);
+    }
+
+    #[test]
+    fn compressed_engine_dequantizes_before_the_reduce_and_reprices_the_wire() {
+        // DESIGN.md §16 at engine level: with a compressed wire the
+        // optimizer's mean gradient and BOTH GNS taps must read the
+        // dequantized values (codec applied before the reduce), while the
+        // comm stats describe the packed codes + per-group scales.
+        use crate::quant::{compress_ef, Compression, CompressionSpec};
+        let src = FakeSource { elems: 700 };
+        for mode in [Compression::Int8, Compression::Int4] {
+            let spec = CompressionSpec { mode, error_feedback: true };
+            let mut e = StepEngine::new(ExecSpec { compression: spec, ..ExecSpec::default() });
+            let out = e.execute(&src, 3, micros(6)).unwrap();
+
+            // oracle: accumulate each worker's shard, run the codec with
+            // fresh residuals, reduce with the same collective, rescale.
+            let mut bufs = vec![vec![0f32; 700]; 3];
+            for m in micros(6) {
+                let w = (m.index as usize) % 3;
+                src.accumulate(&m.tokens, &m.targets, &mut bufs[w]).unwrap();
+            }
+            let mut residuals = vec![vec![0f32; 700]; 3];
+            for (b, r) in bufs.iter_mut().zip(residuals.iter_mut()) {
+                compress_ef(b, r, spec);
+            }
+            let coll = crate::collective::build(CollectiveKind::Ring);
+            let mut sq = Vec::new();
+            let f32_stats = coll.allreduce_mean_with_sqnorms(&mut bufs, &mut sq);
+            crate::simd::scale(&mut bufs[0], 3.0 / 6.0);
+
+            assert_eq!(e.mean_grad(), &bufs[0][..], "{mode:?}: mean grad is the reduced dequant");
+            assert_eq!(out.shard_sqnorms, sq, "{mode:?}: GNS tap reads the dequantized shards");
+            assert_eq!(out.comm, f32_stats.with_wire(mode), "{mode:?}: wire accounting");
+            assert!(
+                out.comm.bytes_moved < f32_stats.bytes_moved,
+                "{mode:?} must move fewer bytes than the fp32 wire"
+            );
+            // quantization really happened: the dequantized mean differs
+            // from the fp32 mean in bits (sin() values are not on the grid)
+            let mut fp = StepEngine::new(ExecSpec::default());
+            fp.execute(&src, 3, micros(6)).unwrap();
+            assert!(
+                e.mean_grad().iter().zip(fp.mean_grad()).any(|(a, b)| a.to_bits() != b.to_bits()),
+                "{mode:?}: codec must actually perturb the gradient"
+            );
+        }
+    }
+
+    #[test]
+    fn error_feedback_residuals_carry_across_steps_and_drop_on_reshard() {
+        use crate::quant::{compress_ef, Compression, CompressionSpec};
+        let src = FakeSource { elems: 300 };
+        let spec = CompressionSpec { mode: Compression::Int8, error_feedback: true };
+        let mut e = StepEngine::new(ExecSpec { compression: spec, ..ExecSpec::default() });
+        e.execute(&src, 3, micros(6)).unwrap();
+        let out2 = e.execute(&src, 3, micros(6)).unwrap();
+        let grad2 = e.mean_grad().to_vec();
+
+        // oracle threads the SAME residuals through both steps
+        let coll = crate::collective::build(CollectiveKind::Ring);
+        let mut residuals = vec![vec![0f32; 300]; 3];
+        let mut step = |res: &mut Vec<Vec<f32>>| {
+            let mut bufs = vec![vec![0f32; 300]; 3];
+            for m in micros(6) {
+                let w = (m.index as usize) % 3;
+                src.accumulate(&m.tokens, &m.targets, &mut bufs[w]).unwrap();
+            }
+            for (b, r) in bufs.iter_mut().zip(res.iter_mut()) {
+                compress_ef(b, r, spec);
+            }
+            let mut sq = Vec::new();
+            coll.allreduce_mean_with_sqnorms(&mut bufs, &mut sq);
+            crate::simd::scale(&mut bufs[0], 3.0 / 6.0);
+            bufs.swap_remove(0)
+        };
+        let oracle1 = step(&mut residuals);
+        let oracle2 = step(&mut residuals);
+        assert_eq!(grad2, oracle2, "step 2 must see step 1's residuals");
+        assert_ne!(oracle1, oracle2, "carried residuals must change the second step");
+        assert_eq!(out2.n_micro, 6);
+
+        // a reshard — even back to the same world — drops the residuals:
+        // the next step matches a fresh engine (zero-residual) step 1
+        e.resize(3);
+        e.execute(&src, 3, micros(6)).unwrap();
+        assert_eq!(e.mean_grad(), &oracle1[..], "resize must drop EF state");
+
+        // so does an implicit world change mid-flight
+        e.execute(&src, 3, micros(6)).unwrap(); // residuals now for world 3
+        e.execute(&src, 2, micros(6)).unwrap(); // world change: rebuilt at zero
+        let mut fresh = StepEngine::new(ExecSpec { compression: spec, ..ExecSpec::default() });
+        fresh.execute(&src, 2, micros(6)).unwrap();
+        assert_eq!(e.mean_grad(), fresh.mean_grad(), "world change must drop EF state");
     }
 
     #[test]

@@ -23,7 +23,7 @@
 // unsafe operation must sit in its own block with its own SAFETY note.
 #![deny(unsafe_op_in_unsafe_fn)]
 
-pub use seesaw_core::{config, data, elastic, linreg, metrics, schedule, simd, util};
+pub use seesaw_core::{config, data, elastic, linreg, metrics, quant, schedule, simd, util};
 
 pub mod collective;
 pub mod coordinator;

@@ -34,7 +34,7 @@
 #![forbid(unsafe_code)]
 
 pub use seesaw_engine::{
-    collective, config, coordinator, data, elastic, experiments, linreg, metrics, runtime,
+    collective, config, coordinator, data, elastic, experiments, linreg, metrics, quant, runtime,
     schedule, simd, util,
 };
 pub use seesaw_serve as serve;

@@ -7,6 +7,7 @@
 //!              [--collective ring|parallel|two-level] [--nodes N]
 //!              [--intra-bw BYTES/S] [--inter-bw BYTES/S] [--stragglers P]
 //!              [--pin-order true|false] [--overlap true|false] [--bucket-bytes N]
+//!              [--compression none|int8|int4] [--error-feedback true|false]
 //!              [--elastic fixed|ramp-coupled] [--max-world W]
 //!              [--variant ref|pallas] [--out-csv path]
 //!              [--gns-ema 0.9] [--hysteresis TOKENS]   (with --schedule adaptive)
@@ -30,6 +31,17 @@
 //! probability P (deterministic in seed/step/worker): the wall-clock
 //! charge bills every wave at its slowest participant, the trajectory
 //! is untouched (DESIGN.md §13).
+//!
+//! `--compression int8|int4` switches the gradient collective onto the
+//! compressed wire format (DESIGN.md §16): per-256-element power-of-two
+//! f32 scales, round-to-nearest-even codes, and (with `--error-feedback`,
+//! on by default) an error-feedback residual carried across steps. The
+//! optimizer trajectory is deliberately **not** bit-identical to the
+//! fp32 wire — acceptance is the tolerance suite in
+//! `tests/quantizer_golden.rs` — but it stays bit-identical across
+//! worker-thread, bucket and world choices at a fixed compression spec.
+//! `--error-feedback` without a compressed mode is refused (dead knob),
+//! as is int4 with error feedback disabled (unusable drift).
 //!
 //! `--elastic ramp-coupled` grows the effective world with the Seesaw
 //! batch ramp (per-worker microbatches stay constant, capped at
@@ -61,6 +73,7 @@ use seesaw::collective::CollectiveKind;
 use seesaw::config::{ScheduleSpec, TrainConfig};
 use seesaw::coordinator::{Trainer, WorldPolicy};
 use seesaw::experiments::{linreg_exps, lm_exps, Scale};
+use seesaw::quant::Compression;
 use seesaw::runtime::ModelRuntime;
 use seesaw::serve::{RunPhase, Serve, TrainerDriver};
 use seesaw::util::cli::Args;
@@ -180,6 +193,24 @@ fn train(args: &Args) -> Result<()> {
         }
         cfg.exec.bucket_bytes = x as usize;
     }
+    if let Some(s) = args.str_opt("compression") {
+        cfg.exec.compression.mode = Compression::parse(s)
+            .ok_or_else(|| anyhow!("unknown compression `{s}` (none|int8|int4)"))?;
+    }
+    if args.has("error-feedback") {
+        // same dead-knob refusal as the config parser: the fp32 wire has
+        // no quantization error to feed back, so the flag would be inert
+        if cfg.exec.compression.mode == Compression::None {
+            bail!(
+                "--error-feedback only applies with a compressed --compression (int8|int4) — \
+                 the fp32 wire has no quantization error to feed back"
+            );
+        }
+        cfg.exec.compression.error_feedback =
+            args.bool_or("error-feedback", cfg.exec.compression.error_feedback)?;
+    }
+    // refuses int4 with error feedback disabled (unusable drift)
+    cfg.exec.compression.validate()?;
     let max_world = args.u64_opt("max-world")?;
     if max_world == Some(0) {
         bail!("--max-world must be positive (the fleet needs at least one worker)");
@@ -225,7 +256,7 @@ fn train(args: &Args) -> Result<()> {
     let tenant = args.str_or("tenant", "default");
     let t = Trainer::new(cfg)?;
     println!(
-        "model={} params={} budget={} tokens, schedule={:?}, world={} ({}), threads={}, collective={}{}{}",
+        "model={} params={} budget={} tokens, schedule={:?}, world={} ({}), threads={}, collective={}{}{}{}",
         t.rt.manifest.model.name,
         t.rt.manifest.param_count,
         t.total_tokens,
@@ -241,6 +272,15 @@ fn train(args: &Args) -> Result<()> {
         },
         if t.cfg.exec.stragglers > 0.0 {
             format!(", stragglers={}", t.cfg.exec.stragglers)
+        } else {
+            String::new()
+        },
+        if t.cfg.exec.compression.mode != Compression::None {
+            format!(
+                ", wire={}{}",
+                t.cfg.exec.compression.mode.name(),
+                if t.cfg.exec.compression.error_feedback { "+ef" } else { "" }
+            )
         } else {
             String::new()
         }

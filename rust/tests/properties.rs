@@ -20,6 +20,10 @@ use seesaw::metrics::{GnsEstimator, GnsState};
 use seesaw::schedule::{
     cosine_cut_tokens, AdaptiveSeesaw, JointSchedule, Schedule, ScheduleKind, SeesawBuilder,
 };
+use seesaw::quant::{
+    apply_range, compress_ef, group_scales, payload_bytes, Compression, CompressionSpec,
+    QUANT_GROUP,
+};
 use seesaw::util::json::Value;
 use seesaw::util::prop::check;
 use seesaw::util::TempDir;
@@ -991,5 +995,160 @@ fn prop_wallclock_monotone_in_batch_and_comm() {
             over <= m.step_time_comm(a, comm.bytes_moved) + 1e-9,
             "overlap must never exceed the serialized charge"
         );
+    });
+}
+
+#[test]
+fn prop_quantizer_is_partition_invariant() {
+    // the §16 determinism keystone, over random shapes: the full codec
+    // cycle on one whole shard equals residual-injection + group scales
+    // + `apply_range` over ANY partition of the index space, bit for
+    // bit — so no comm bucket layout, thread split, or chunking choice
+    // can ever move a quantized gradient bit.
+    check("quantizer partition invariance", 48, |g| {
+        let n = 1 + g.usize_in(0, 2000);
+        let mode = *g.pick(&[Compression::Int8, Compression::Int4]);
+        let spec = CompressionSpec { mode, error_feedback: true };
+        // adversarial magnitudes: mix tiny/denormal-adjacent and large
+        // values so group scales span a wide exponent range
+        let scale = *g.pick(&[1e-38f64, 1e-3, 1.0, 1e20]);
+        let input = g.vec_f32(n, 3.0 * scale);
+        let carried = g.vec_f32(n, 0.01 * scale);
+
+        let mut whole = input.clone();
+        let mut whole_res = carried.clone();
+        let whole_scales = compress_ef(&mut whole, &mut whole_res, spec);
+
+        let mut split = input.clone();
+        let mut split_res = carried.clone();
+        for (x, r) in split.iter_mut().zip(split_res.iter()) {
+            *x += *r;
+        }
+        let scales = group_scales(&split, mode);
+        assert_eq!(scales.len(), n.div_ceil(QUANT_GROUP));
+        assert!(
+            scales.iter().zip(&whole_scales).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "group scales must not depend on how the codec is driven"
+        );
+        // random partition of 0..n into ranges, applied in random order
+        let mut cuts = vec![0usize, n];
+        for _ in 0..g.usize_in(0, 6) {
+            cuts.push(g.usize_in(0, n + 1));
+        }
+        cuts.sort_unstable();
+        cuts.dedup();
+        let mut ranges: Vec<(usize, usize)> = cuts.windows(2).map(|w| (w[0], w[1])).collect();
+        if g.bool() {
+            ranges.reverse(); // ranges are disjoint, so order is free
+        }
+        for (lo, hi) in ranges {
+            apply_range(&mut split, &mut split_res, &scales, spec, lo, hi);
+        }
+        assert!(
+            whole.iter().zip(&split).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{mode:?} n={n}: split application diverged from the whole-shard codec"
+        );
+        assert!(
+            whole_res.iter().zip(&split_res).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{mode:?} n={n}: residuals diverged across the partition"
+        );
+    });
+}
+
+#[test]
+fn prop_error_feedback_residual_is_bounded() {
+    // EF soundness: after every codec cycle — including cycles fed
+    // fresh random gradients on top of a carried residual — each
+    // element's residual is at most half a quantization step (s/2) of
+    // its group. That bound is what makes a reshard's residual drop a
+    // bounded, not compounding, loss (DESIGN.md §16).
+    check("EF residual ≤ s/2", 48, |g| {
+        let n = 1 + g.usize_in(0, 1500);
+        let mode = *g.pick(&[Compression::Int8, Compression::Int4]);
+        let spec = CompressionSpec { mode, error_feedback: true };
+        let mut residual = vec![0f32; n];
+        for step in 0..4 {
+            // a *different* gradient each step: the carried residual
+            // rides on top of whatever arrives next
+            let mut buf = g.vec_f32(n, *g.pick(&[1e-6f64, 1.0, 1e12]));
+            let scales = compress_ef(&mut buf, &mut residual, spec);
+            for (i, &r) in residual.iter().enumerate() {
+                let s = scales[i / QUANT_GROUP];
+                assert!(
+                    r.abs() <= 0.5 * s,
+                    "{mode:?} step {step} idx {i}: residual {r:e} exceeds s/2 = {:e}",
+                    0.5 * s
+                );
+            }
+            // dequantized outputs stay on the code grid of their group
+            for (i, &d) in buf.iter().enumerate() {
+                let s = scales[i / QUANT_GROUP];
+                if s > 0.0 {
+                    let q = d / s;
+                    assert!(q == q.trunc() && q.abs() <= mode.qmax() as f32, "off-grid {d}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_compression_off_is_bit_identical() {
+    // the degradation contract: with `mode: None` the entire compression
+    // machinery is inert — the codec refuses to touch buffers, the wire
+    // accounting is the identity, and the step engine produces the exact
+    // bits of a spec that never mentions compression, whatever the EF
+    // flag says. (The committed golden trajectories then pin that this
+    // shared fp32 path is itself unchanged from the pre-§16 engine.)
+    check("compression off ≡ fp32 path", 32, |g| {
+        // codec level: None is a no-op on any buffer
+        let n = 1 + g.usize_in(0, 1000);
+        let mut buf = g.vec_f32(n, 5.0);
+        let mut res = g.vec_f32(n, 1.0);
+        let (b0, r0) = (buf.clone(), res.clone());
+        let spec_off = CompressionSpec { mode: Compression::None, error_feedback: true };
+        assert!(compress_ef(&mut buf, &mut res, spec_off).is_empty());
+        assert!(buf.iter().zip(&b0).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(res.iter().zip(&r0).all(|(a, b)| a.to_bits() == b.to_bits()));
+        // wire level: None prices as raw f32 and `with_wire` is identity
+        assert_eq!(payload_bytes(n, Compression::None), (n * 4) as u64);
+        let stats = seesaw::collective::CollectiveStats {
+            bytes_moved: 4 * n as u64,
+            phases: 2,
+            buckets: 1,
+            tail_bytes: 4 * n as u64,
+        };
+        assert_eq!(stats.with_wire(Compression::None), stats);
+        // engine level: a None spec (either EF flag) is bit-identical to
+        // the default spec that predates the compression field
+        let elems = 1 + g.usize_in(0, 1500);
+        let n_micro = 1 + g.u64(8);
+        let world = *g.pick(&[1usize, 2, 3, 5]);
+        let seed = g.u64(1 << 30);
+        let micro = || -> Vec<Microbatch> {
+            (0..n_micro)
+                .map(|i| Microbatch {
+                    index: i,
+                    tokens: vec![(seed.wrapping_mul(67) as i32).wrapping_add(i as i32 * 11); 3],
+                    targets: vec![(i as i32).wrapping_mul(7) - 3; 3],
+                })
+                .collect()
+        };
+        let src = SyntheticGrad { elems };
+        let mut base = StepEngine::new(ExecSpec::default());
+        let out_base = base.execute(&src, world, micro()).unwrap();
+        let grad_base = base.mean_grad().to_vec();
+        for error_feedback in [true, false] {
+            let mut e = StepEngine::new(ExecSpec {
+                compression: CompressionSpec { mode: Compression::None, error_feedback },
+                ..ExecSpec::default()
+            });
+            let out = e.execute(&src, world, micro()).unwrap();
+            assert_eq!(out, out_base, "ef={error_feedback} world={world} elems={elems}");
+            assert!(
+                e.mean_grad().iter().zip(&grad_base).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "mean grad moved with compression off (ef={error_feedback})"
+            );
+        }
     });
 }

@@ -1,0 +1,455 @@
+//! Quantizer golden suite (DESIGN.md §16): the acceptance contract of
+//! the compressed collective wire, in three parts.
+//!
+//! 1. **Codec golden trace** — the quantize→dequantize→error-feedback
+//!    cycle replayed over pinned adversarial vectors (RNE ties,
+//!    denormals, ±0, all-equal groups, a group-boundary tail) and
+//!    compared **bit-for-bit** against `tests/golden/quantizer.trace`.
+//!    The same fixture is generated independently by
+//!    `tools/golden_port.py quantizer` (CPython doubles + f32
+//!    rounding), so a pass here certifies the codec is exactly the
+//!    IEEE-754 arithmetic the §16 determinism argument claims — no
+//!    hidden FMA, no double rounding, no platform drift.
+//! 2. **Engine-matrix partition invariance** — quantization happens on
+//!    whole shards *before* the reduce, so the reduced mean and both
+//!    GNS sqnorm taps must be bit-identical across every collective
+//!    kind × world × bucket-size combination in the engine invariance
+//!    matrix.
+//! 3. **Tolerance suite** — a compressed wire is deliberately *not*
+//!    bit-neutral on the trajectory (the one exec knob that isn't), so
+//!    its acceptance is a loss tolerance on the recursion substrate:
+//!    replaying the committed adaptive golden trajectory with the
+//!    per-step gradient direction pushed through the int8 codec must
+//!    stay within 1e-3 relative ce of the fp32 fixture at equal steps,
+//!    with a bit-identical batch staircase and cut steps; int4+EF is
+//!    held to a looser band (same cut *count*, ce within 5e-2).
+//!
+//! Regenerate the fixture after an *intentional* codec change:
+//!
+//! ```sh
+//! SEESAW_BLESS=1 cargo test --test quantizer_golden
+//! # …and cross-check: python3 tools/golden_port.py quantizer
+//! ```
+
+use seesaw::collective::{build, Collective, CollectiveKind};
+use seesaw::coordinator::fnv1a64;
+use seesaw::experiments::adaptive_exps::exact_gns;
+use seesaw::linreg::recursion::Problem;
+use seesaw::linreg::spectrum::Spectrum;
+use seesaw::quant::{compress_ef, quantize_one, Compression, CompressionSpec, QUANT_GROUP};
+use seesaw::schedule::{AdaptiveSeesaw, Schedule};
+use seesaw::simd::dot_f64;
+
+// ---------------------------------------------------------------------------
+// Part 1: the codec golden trace
+// ---------------------------------------------------------------------------
+
+/// EF steps per (vector, mode): the same input re-fed each step so only
+/// the carried residual distinguishes them (period-2 limit cycles on
+/// tie inputs land in the fixture as steps 0/1 vs 2/3).
+const QUANT_STEPS: usize = 4;
+
+/// The pinned adversarial vectors — constructed independently here and
+/// in `tools/golden_port.py quant_vectors()`; the committed fixture is
+/// the referee between the two. Specials come from bit patterns so no
+/// decimal-parse double rounding can creep in; the remaining literals
+/// are exact multiples of 2⁻² (or 0.7, which has no f64→f32 tie).
+fn quant_vectors() -> Vec<(&'static str, Vec<f32>)> {
+    let fb = f32::from_bits;
+    let ties = vec![1.5f32, 2.5, -2.5, 3.5, 0.5, -0.5, 127.0, -127.0];
+    let denormals = vec![
+        fb(0x0000_0001), // smallest positive denormal
+        fb(0x8000_0001), // …and its negation
+        fb(0x0080_0000), // smallest normal
+        fb(0x8000_0000), // -0.0
+        0.0,
+        fb(0x0000_FFFF), // mid denormal
+        fb(0x007F_FFFF), // largest denormal
+        fb(0x8049_0000), // a negative denormal
+    ];
+    let mut boundary: Vec<f32> = (0..257).map(|i| (i % 97) as f32 * 0.25 - 3.0).collect();
+    boundary[0] = fb(0x0000_0001);
+    boundary[13] = fb(0x8000_0000);
+    boundary[64] = fb(0x0080_0000);
+    boundary[256] = 2.5; // the tail group holds exactly one element
+    vec![
+        ("ties", ties),
+        ("denormals", denormals),
+        ("allequal_exact", vec![0.75f32; 8]),
+        ("allequal_inexact", vec![0.7f32; 8]),
+        ("zeros", vec![0.0f32; 8]),
+        ("boundary", boundary),
+    ]
+}
+
+fn le_bytes(xs: &[f32]) -> Vec<u8> {
+    xs.iter().flat_map(|x| x.to_bits().to_le_bytes()).collect()
+}
+
+/// Render the fixture text — byte-identical to
+/// `golden_port.generate_quantizer()` so either side can bless and the
+/// other verifies. Codes are re-derived as `quantize_one(deq, s)`,
+/// which is exact on dequantized points (`rne(q) == q`).
+fn generate_trace() -> String {
+    let mut out = String::new();
+    out.push_str(
+        "# seesaw quantizer golden trace — deterministic codec bit patterns (DESIGN.md §16)\n",
+    );
+    out.push_str(
+        "# rows: v,<name>,<mode>,<step> | s,<scale_bits…> | \
+         e,<i>,<code>,<deq_bits>,<res_bits> | d,<group>,<deq_fnv>,<res_fnv>\n",
+    );
+    out.push_str(
+        "# regenerate (intentional codec changes only): \
+         SEESAW_BLESS=1 cargo test --test quantizer_golden\n",
+    );
+    out.push_str("#   or: python3 tools/golden_port.py quantizer --bless\n");
+    for (name, vec) in quant_vectors() {
+        for mode in [Compression::Int8, Compression::Int4] {
+            let spec = CompressionSpec { mode, error_feedback: true };
+            let mut residual = vec![0f32; vec.len()];
+            for step in 0..QUANT_STEPS {
+                let mut buf = vec.clone(); // same input re-fed; only the residual carries
+                let scales = compress_ef(&mut buf, &mut residual, spec);
+                out.push_str(&format!("v,{name},{},{step}\n", mode.name()));
+                let s_row: Vec<String> =
+                    scales.iter().map(|s| format!("{:08x}", s.to_bits())).collect();
+                out.push_str(&format!("s,{}\n", s_row.join(",")));
+                if vec.len() <= 64 {
+                    for (i, (&d, &r)) in buf.iter().zip(residual.iter()).enumerate() {
+                        let code = quantize_one(d, scales[i / QUANT_GROUP], mode);
+                        out.push_str(&format!(
+                            "e,{i},{code},{:08x},{:08x}\n",
+                            d.to_bits(),
+                            r.to_bits()
+                        ));
+                    }
+                } else {
+                    for g in 0..scales.len() {
+                        let lo = g * QUANT_GROUP;
+                        let hi = ((g + 1) * QUANT_GROUP).min(vec.len());
+                        out.push_str(&format!(
+                            "d,{g},{:016x},{:016x}\n",
+                            fnv1a64(&le_bytes(&buf[lo..hi])),
+                            fnv1a64(&le_bytes(&residual[lo..hi]))
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn fixture_path(file: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(file)
+}
+
+#[test]
+fn golden_quantizer_codec_trace() {
+    let rendered = generate_trace();
+
+    // Inline sanity pins on the rendered text first, so a failure names
+    // the violated codec property instead of just a diffed hex line.
+    assert!(
+        rendered.contains("v,ties,int8,0\ns,3f800000\ne,0,2,40000000,bf000000"),
+        "ties at scale 1.0 must round 1.5 → 2 (to even) with a −0.5 residual"
+    );
+    assert!(
+        rendered.contains("v,zeros,int8,0\ns,00000000\ne,0,0,00000000,00000000"),
+        "an all-zero group takes the 0.0 sentinel scale and all-zero codes"
+    );
+    assert!(
+        rendered.contains("v,allequal_exact,int8,0\ns,3c000000\ne,0,96,3f400000,00000000"),
+        "0.75 at the minimal power-of-two scale 2⁻⁷ is code 96, exactly, no residual"
+    );
+
+    let path = fixture_path("quantizer.trace");
+    if std::env::var_os("SEESAW_BLESS").is_some() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &rendered).unwrap();
+        eprintln!("blessed {}", path.display());
+        return;
+    }
+    let fixture = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "quantizer fixture {} is missing ({e}); run `SEESAW_BLESS=1 cargo test --test \
+             quantizer_golden` (or `python3 tools/golden_port.py quantizer --bless`) once \
+             and commit the result",
+            path.display()
+        )
+    });
+    let want: Vec<&str> = fixture.lines().filter(|l| !l.starts_with('#')).collect();
+    let got: Vec<&str> = rendered.lines().filter(|l| !l.starts_with('#')).collect();
+    assert_eq!(
+        want.len(),
+        got.len(),
+        "quantizer trace length diverged from the fixture — the vector set or step count \
+         changed; if intentional, re-bless BOTH sides (Rust and golden_port.py)"
+    );
+    for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(
+            w, g,
+            "quantizer codec diverged from the golden fixture at data line {i}\n  \
+             fixture: {w}\n  replay:  {g}\n\
+             The codec is specified to be exact IEEE-754 (DESIGN.md §16) — a diff here \
+             means a real arithmetic change (FMA, reassociation, a rounding-mode leak), \
+             not noise. If the change is INTENTIONAL, regenerate with `SEESAW_BLESS=1 \
+             cargo test --test quantizer_golden`, cross-check `python3 \
+             tools/golden_port.py quantizer`, and commit both with a justification."
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Part 2: partition invariance across the engine matrix
+// ---------------------------------------------------------------------------
+
+/// Deterministic pseudo-gradient for worker `r` of `w`: exact multiples
+/// of 2⁻² in [−3, 21], so every value (and every worker mean over them)
+/// is exactly representable and the assert failures stay readable.
+fn matrix_shard(r: usize, n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((r * n + i) % 97) as f32 * 0.25 - 3.0).collect()
+}
+
+#[test]
+fn quantized_reduce_is_partition_invariant_across_the_engine_matrix() {
+    // kinds × (world, elems) × bucket sizes: the same matrix the engine
+    // invariance suite sweeps. Quantization runs on whole shards before
+    // the reduce, and the group windows are fixed multiples of
+    // QUANT_GROUP on the shard — so the reduced mean AND the pre-reduce
+    // GNS sqnorm taps must be bit-identical at every bucket size.
+    let kinds = [
+        CollectiveKind::Ring,
+        CollectiveKind::Parallel,
+        CollectiveKind::TwoLevel { nodes: 2 },
+        CollectiveKind::TwoLevel { nodes: 3 },
+    ];
+    let worlds: [(usize, usize); 5] = [(2, 64), (3, 100), (4, 128), (5, 8191), (7, 1000)];
+    for mode in [Compression::Int8, Compression::Int4] {
+        let spec = CompressionSpec { mode, error_feedback: true };
+        for kind in kinds {
+            let coll = build(kind);
+            for (w, n) in worlds {
+                // quantize once — the codec is upstream of (and blind
+                // to) the collective, so every bucket run sees the
+                // exact same dequantized shards…
+                let quantized: Vec<Vec<f32>> = (0..w)
+                    .map(|r| {
+                        let mut buf = matrix_shard(r, n);
+                        let mut res = vec![0f32; n];
+                        compress_ef(&mut buf, &mut res, spec);
+                        buf
+                    })
+                    .collect();
+                let mut reference = quantized.clone();
+                let mut ref_sq = Vec::new();
+                coll.allreduce_mean_with_sqnorms(&mut reference, &mut ref_sq);
+                assert_eq!(ref_sq.len(), w);
+                for bucket in [1usize, 7, 64, n / 2 + 1, n, 10 * n] {
+                    let mut shards = quantized.clone();
+                    let mut sq = Vec::new();
+                    coll.allreduce_mean_bucketed(&mut shards, bucket, &mut sq);
+                    // …and must land on bit-identical results.
+                    let same_mean = shards[0]
+                        .iter()
+                        .zip(reference[0].iter())
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(
+                        same_mean,
+                        "{mode:?} {kind:?} w={w} n={n} bucket={bucket}: bucketed reduce of \
+                         quantized shards diverged from the whole-vector reduce"
+                    );
+                    assert_eq!(
+                        sq, ref_sq,
+                        "{mode:?} {kind:?} w={w} n={n} bucket={bucket}: GNS sqnorm tap moved \
+                         with the bucket size — it must read whole dequantized shards"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Part 3: the tolerance suite on the recursion substrate
+// ---------------------------------------------------------------------------
+
+/// One step of the committed fp32 baseline, parsed back from
+/// `tests/golden/adaptive_seesaw.trace` (the bit-exact fixture
+/// `tests/golden.rs` maintains — this suite reuses it as the fp32 arm
+/// so the two tests can never drift apart).
+struct BaseStep {
+    batch: u64,
+    ce: f64,
+    cuts: u32,
+}
+
+fn fp32_baseline() -> Vec<BaseStep> {
+    let path = fixture_path("adaptive_seesaw.trace");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing fp32 baseline fixture {}: {e}", path.display()));
+    text.lines()
+        .filter(|l| !l.starts_with('#'))
+        .map(|l| {
+            let f: Vec<&str> = l.split(',').collect();
+            assert_eq!(f.len(), 7, "malformed baseline line: {l}");
+            BaseStep {
+                batch: f[2].parse().unwrap(),
+                ce: f64::from_bits(u64::from_str_radix(f[3], 16).unwrap()),
+                cuts: f[6].parse().unwrap(),
+            }
+        })
+        .collect()
+}
+
+/// Replay the adaptive golden run with the per-step gradient direction
+/// pushed through the codec: `v = √m` per eigenmode (the natural
+/// gradient magnitude of the recursion), quantized with a carried EF
+/// residual, and the step's lr scaled by the projection
+/// `ρ = ⟨deq, v⟩ / ⟨v, v⟩` — the exact first-order effect a quantized
+/// mean gradient has on an SGD step along it. d=16 keeps the whole
+/// direction inside one quantization group.
+fn drive_quantized(mode: Compression) -> Vec<BaseStep> {
+    let spec = CompressionSpec { mode, error_feedback: true };
+    let problem = Problem::new(Spectrum::Isotropic { dim: 16 }, 1.0, 16.0);
+    let mut sched = AdaptiveSeesaw::new(0.05, 16, 800, 8_000, 2.0).hysteresis(400).max_cuts(6);
+    let mut it = problem.iter();
+    let mut residual = vec![0f32; 16];
+    let mut tokens = 0u64;
+    let mut step = 0u64;
+    let mut last_phase = 0usize;
+    let mut rows = Vec::new();
+    while tokens < sched.total_tokens() {
+        let p = sched.query(tokens);
+        let cuts = p.phase.saturating_sub(last_phase) as u32;
+        last_phase = p.phase;
+        let v: Vec<f32> = it.m.iter().map(|&m| m.sqrt() as f32).collect();
+        let mut deq = v.clone();
+        compress_ef(&mut deq, &mut residual, spec);
+        let v64: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+        let d64: Vec<f64> = deq.iter().map(|&x| x as f64).collect();
+        let den = dot_f64(&v64, &v64);
+        let rho = if den > 0.0 { dot_f64(&d64, &v64) / den } else { 1.0 };
+        it.step(p.lr * rho, p.batch_tokens);
+        tokens += p.batch_tokens;
+        step += 1;
+        if let Some(g) = exact_gns(&it, p.batch_tokens) {
+            sched.observe_gns(tokens, g);
+        }
+        rows.push(BaseStep { batch: p.batch_tokens, ce: it.risk(), cuts });
+        assert!(step < 100_000, "runaway tolerance driver");
+    }
+    rows
+}
+
+#[test]
+fn int8_trajectory_tracks_fp32_within_tolerance_with_identical_staircase() {
+    let base = fp32_baseline();
+    let pert = drive_quantized(Compression::Int8);
+    assert_eq!(
+        base.len(),
+        pert.len(),
+        "the int8 run must take exactly the fp32 trace's step count"
+    );
+    let mut max_rel = 0f64;
+    let mut perturbed = false;
+    for (i, (b, p)) in base.iter().zip(&pert).enumerate() {
+        // the control path is quantization-robust: cut steps and the
+        // batch staircase are bit-identical to the fp32 fixture…
+        assert_eq!(
+            (b.batch, b.cuts),
+            (p.batch, p.cuts),
+            "step {}: int8 moved the batch staircase / cut steps",
+            i + 1
+        );
+        // …while the loss is merely *close*: within 1e-3 relative at
+        // every step (measured headroom ≈ 1.7×: max ≈ 5.8e-4 at step 49).
+        let rel = (p.ce - b.ce).abs() / b.ce.abs();
+        max_rel = max_rel.max(rel);
+        perturbed |= p.ce.to_bits() != b.ce.to_bits();
+        assert!(
+            rel <= 1e-3,
+            "step {}: int8 ce {:e} drifted {rel:e} relative from fp32 {:e} (> 1e-3)",
+            i + 1,
+            p.ce,
+            b.ce
+        );
+    }
+    assert!(
+        perturbed,
+        "the int8 run matched fp32 bit-for-bit — the codec is not actually on this path"
+    );
+    assert!(
+        max_rel > 1e-6,
+        "int8 drift implausibly small ({max_rel:e}) — is ρ stuck at exactly 1?"
+    );
+}
+
+#[test]
+fn int4_trajectory_stays_in_the_coarse_tolerance_band() {
+    let base = fp32_baseline();
+    let pert = drive_quantized(Compression::Int4);
+    // int4 is too coarse to keep the staircase bit-identical (a cut
+    // lands one step late), but the run must stay the same shape: equal
+    // step count, equal total cuts, and ce within the coarse band.
+    assert_eq!(base.len(), pert.len(), "int4 must still take the same number of steps");
+    let cuts_base: u32 = base.iter().map(|b| b.cuts).sum();
+    let cuts_pert: u32 = pert.iter().map(|p| p.cuts).sum();
+    assert_eq!(cuts_base, cuts_pert, "int4 changed how many cuts fire, not just when");
+    let mut max_rel = 0f64;
+    for (b, p) in base.iter().zip(&pert) {
+        max_rel = max_rel.max((p.ce - b.ce).abs() / b.ce.abs());
+    }
+    assert!(
+        max_rel <= 5e-2,
+        "int4+EF ce drifted {max_rel:e} relative from fp32 (> 5e-2; measured ≈ 1.35e-2)"
+    );
+    // …and the resolutions are genuinely multi-resolution: int4 must be
+    // measurably coarser than int8 on the same trajectory.
+    let pert8 = drive_quantized(Compression::Int8);
+    let mut max_rel8 = 0f64;
+    for (b, p) in base.iter().zip(&pert8) {
+        max_rel8 = max_rel8.max((p.ce - b.ce).abs() / b.ce.abs());
+    }
+    assert!(
+        max_rel > max_rel8,
+        "int4 drift ({max_rel:e}) should exceed int8 drift ({max_rel8:e})"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Dead-config refusals (integration level — the config-unit tests in
+// seesaw-core/src/config.rs pin the same contract from inside)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dead_compression_config_is_refused_end_to_end() {
+    use seesaw::config::TrainConfig;
+    // an EF knob without a compressed mode is dead config
+    for ef in ["true", "false"] {
+        let err = TrainConfig::from_json(&format!(r#"{{"exec": {{"error_feedback": {ef}}}}}"#))
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("error_feedback"),
+            "refusal must name the dead knob: {err}"
+        );
+    }
+    // int4 open-loop is refused by spec validation wherever it's built
+    let err = TrainConfig::from_json(
+        r#"{"exec": {"compression": "int4", "error_feedback": false}}"#,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("error feedback"), "{err}");
+    assert!(CompressionSpec { mode: Compression::Int4, error_feedback: false }
+        .validate()
+        .is_err());
+    // …and the valid corners still parse
+    for ok in [
+        r#"{"exec": {"compression": "int8"}}"#,
+        r#"{"exec": {"compression": "int8", "error_feedback": false}}"#,
+        r#"{"exec": {"compression": "int4", "error_feedback": true}}"#,
+    ] {
+        assert!(TrainConfig::from_json(ok).is_ok(), "{ok} must be accepted");
+    }
+}

@@ -25,10 +25,20 @@ The committed fixtures have been tree-arithmetic since PR 6, so ``tree``
 is the default; ``--mode fold`` remains for archaeology against the
 PR 1-5 seed arithmetic.
 
+``quantizer`` mirrors `crates/seesaw-core/src/quant.rs` (DESIGN.md §16)
+instead: the deterministic multi-resolution gradient codec. That module
+computes entirely in f32 with power-of-two scales, so every operation is
+either exact or a *single* f32 rounding of a value exact in f64 — which
+is precisely what CPython doubles + a `struct`-based f32 round emulate
+bit-perfectly. The mode regenerates/verifies
+`rust/tests/golden/quantizer.trace`.
+
 Usage:
   python3 tools/golden_port.py verify          # tree-mode output == committed fixtures?
   python3 tools/golden_port.py bless           # rewrite fixtures with tree arithmetic
   python3 tools/golden_port.py report          # old-vs-new tolerance report (stdout, markdown)
+  python3 tools/golden_port.py quantizer           # codec mirror == committed quantizer.trace?
+  python3 tools/golden_port.py quantizer --bless   # rewrite the quantizer fixture
 """
 
 import argparse
@@ -69,6 +79,201 @@ def powi(a: float, b: int) -> float:
 def rust_round(x: float) -> int:
     """`f64::round` rounds half away from zero; Python's round() banker-rounds."""
     return int(math.floor(x + 0.5)) if x >= 0.0 else int(math.ceil(x - 0.5))
+
+
+# ---------------------------------------------------------------------------
+# f32 emulation + the quant.rs codec mirror (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+def f32(x: float) -> float:
+    """Round a CPython double to the nearest f32 — the single-rounding
+    step every f32 arithmetic op in quant.rs performs. All codec operands
+    are exactly representable in f64, so `f32(a OP b)` here commits to the
+    same bits as Rust's f32 `a OP b`."""
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def f32_bits(x: float) -> str:
+    """f32 bit pattern, matching Rust's `{:08x}` of `f32::to_bits`."""
+    return f"{struct.unpack('<I', struct.pack('<f', x))[0]:08x}"
+
+
+def f32_from_bits(b: int) -> float:
+    return struct.unpack("<f", struct.pack("<I", b))[0]
+
+
+def fnv1a64(data: bytes) -> int:
+    """coordinator::fnv1a64 — digests the big quantizer vectors per group."""
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+QUANT_GROUP = 256          # mirrors quant::QUANT_GROUP
+QMAX = {"int8": 127, "int4": 7}
+
+
+def rne_i32(x: float) -> int:
+    """quant::rne_i32 — hand-rolled round-to-nearest-even. `x - floor(x)`
+    is exact for |x| <= qmax + 0.5, and Rust's `q % 2 != 0` agrees with
+    Python's for odd q of either sign (both remainders are nonzero)."""
+    r = math.floor(x)
+    d = x - r
+    q = int(r)
+    if d > 0.5:
+        q += 1
+    elif d == 0.5 and q % 2 != 0:
+        q += 1
+    return q
+
+
+def pow2_scale(maxabs: float, qmax: int) -> float:
+    """quant::pow2_scale — smallest power of two s with s*qmax >= maxabs;
+    0.0 sentinel for an all-zero group. The f32() wrappers reproduce the
+    Rust f32 products; the comparisons are then exact."""
+    if maxabs == 0.0:
+        return 0.0
+    q = float(qmax)
+    s = 1.0
+    while f32(s * q) < maxabs:
+        s = f32(s * 2.0)
+    while True:
+        h = f32(s * 0.5)
+        if h > 0.0 and h < s and f32(h * q) >= maxabs:
+            s = h
+        else:
+            break
+    return s
+
+
+def quantize_one(x: float, scale: float, qmax: int) -> int:
+    if scale == 0.0:
+        return 0
+    q = rne_i32(f32(x / scale))
+    return max(-qmax, min(qmax, q))
+
+
+def dequantize_one(q: int, scale: float) -> float:
+    return f32(q * scale)
+
+
+def compress_ef(buf, residual, qmax, error_feedback=True):
+    """quant::compress_ef on one shard (lists mutated in place); returns
+    (scales, codes) — codes are emitted here for the fixture, the Rust
+    side re-derives them as quantize_one(deq, s) (exact: rne(q) == q)."""
+    if error_feedback:
+        for i in range(len(buf)):
+            buf[i] = f32(buf[i] + residual[i])
+    scales = []
+    for lo in range(0, len(buf), QUANT_GROUP):
+        m = 0.0
+        for x in buf[lo:lo + QUANT_GROUP]:
+            m = max(m, abs(x))
+        scales.append(pow2_scale(m, qmax))
+    codes = []
+    for i in range(len(buf)):
+        s = scales[i // QUANT_GROUP]
+        x = buf[i]
+        c = quantize_one(x, s, qmax)
+        d = dequantize_one(c, s)
+        if error_feedback:
+            residual[i] = f32(x - d)
+        codes.append(c)
+        buf[i] = d
+    return scales, codes
+
+
+def quant_vectors():
+    """The pinned adversarial vectors — MUST stay in lockstep with
+    `rust/tests/quantizer_golden.rs` (both sides construct them
+    independently; the fixture is the referee). Specials are built from
+    bit patterns so no decimal-parse double rounding can creep in."""
+    fb = f32_from_bits
+    ties = [1.5, 2.5, -2.5, 3.5, 0.5, -0.5, 127.0, -127.0]
+    denormals = [
+        fb(0x00000001),  # smallest positive denormal
+        fb(0x80000001),  # …and its negation
+        fb(0x00800000),  # smallest normal
+        fb(0x80000000),  # -0.0
+        0.0,
+        fb(0x0000FFFF),  # mid denormal
+        fb(0x007FFFFF),  # largest denormal
+        fb(0x80490000),  # a negative denormal
+    ]
+    boundary = [f32((i % 97) * 0.25 - 3.0) for i in range(257)]
+    boundary[0] = fb(0x00000001)
+    boundary[13] = fb(0x80000000)
+    boundary[64] = fb(0x00800000)
+    boundary[256] = 2.5  # the tail group holds exactly one element
+    return [
+        ("ties", ties),
+        ("denormals", denormals),
+        ("allequal_exact", [0.75] * 8),
+        ("allequal_inexact", [0.7] * 8),
+        ("zeros", [0.0] * 8),
+        ("boundary", boundary),
+    ]
+
+
+QUANT_STEPS = 4  # EF steps per (vector, mode): residual carried across re-feeds
+
+
+def generate_quantizer() -> str:
+    lines = [
+        "# seesaw quantizer golden trace — deterministic codec bit patterns (DESIGN.md §16)",
+        "# rows: v,<name>,<mode>,<step> | s,<scale_bits…> | "
+        "e,<i>,<code>,<deq_bits>,<res_bits> | d,<group>,<deq_fnv>,<res_fnv>",
+        "# regenerate (intentional codec changes only): "
+        "SEESAW_BLESS=1 cargo test --test quantizer_golden",
+        "#   or: python3 tools/golden_port.py quantizer --bless",
+    ]
+    for name, vec in quant_vectors():
+        for mode in ("int8", "int4"):
+            qmax = QMAX[mode]
+            residual = [0.0] * len(vec)
+            for step in range(QUANT_STEPS):
+                buf = list(vec)  # same input re-fed; only the residual carries
+                scales, codes = compress_ef(buf, residual, qmax)
+                lines.append(f"v,{name},{mode},{step}")
+                lines.append("s," + ",".join(f32_bits(s) for s in scales))
+                if len(vec) <= 64:
+                    for i in range(len(vec)):
+                        lines.append(
+                            f"e,{i},{codes[i]},{f32_bits(buf[i])},{f32_bits(residual[i])}"
+                        )
+                else:
+                    for g in range(len(scales)):
+                        lo, hi = g * QUANT_GROUP, min((g + 1) * QUANT_GROUP, len(vec))
+                        dq = b"".join(struct.pack("<f", buf[i]) for i in range(lo, hi))
+                        rs = b"".join(struct.pack("<f", residual[i]) for i in range(lo, hi))
+                        lines.append(f"d,{g},{fnv1a64(dq):016x},{fnv1a64(rs):016x}")
+    return "\n".join(lines) + "\n"
+
+
+def cmd_quantizer(bless: bool) -> int:
+    text = generate_quantizer()
+    path = os.path.join(GOLDEN_DIR, "quantizer.trace")
+    if bless:
+        with open(path, "w") as f:
+            f.write(text)
+        n = sum(1 for l in text.splitlines() if not l.startswith("#"))
+        print(f"blessed {path} ({n} data lines)")
+        return 0
+    committed = open(path).read()
+    cl = [l for l in committed.splitlines() if not l.startswith("#")]
+    gl = [l for l in text.splitlines() if not l.startswith("#")]
+    if cl == gl:
+        print(f"OK   quantizer.trace: {len(gl)} data lines bit-identical")
+        return 0
+    n_diff = sum(1 for a, b in zip(cl, gl) if a != b) + abs(len(cl) - len(gl))
+    first = next((i for i, (a, b) in enumerate(zip(cl, gl)) if a != b), min(len(cl), len(gl)))
+    print(f"FAIL quantizer.trace: {n_diff} differing lines (first at data line {first})")
+    if first < min(len(cl), len(gl)):
+        print(f"  committed: {cl[first]}")
+        print(f"  port:      {gl[first]}")
+    return 1
 
 
 # ---------------------------------------------------------------------------
@@ -415,15 +620,19 @@ def cmd_report():
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("cmd", choices=["verify", "bless", "report"])
+    ap.add_argument("cmd", choices=["verify", "bless", "report", "quantizer"])
     ap.add_argument("--mode", choices=["fold", "tree"], default="tree",
                     help="reduction arithmetic generation (default: tree, the committed "
                          "simd fixtures; fold is the pre-SIMD PR 1-5 seed)")
+    ap.add_argument("--bless", action="store_true",
+                    help="with `quantizer`: rewrite the fixture instead of verifying")
     args = ap.parse_args()
     if args.cmd == "verify":
         return cmd_verify(args.mode)
     if args.cmd == "bless":
         return cmd_bless(args.mode)
+    if args.cmd == "quantizer":
+        return cmd_quantizer(args.bless)
     return cmd_report()
 
 
